@@ -1,0 +1,36 @@
+"""Table 6: MCTS branching factor B=2 vs B=4.
+
+B=2 (the paper's default, following Coulom/Auer) is more sample-efficient:
+wider branching spreads the same sample budget thinner per subtree.
+"""
+from __future__ import annotations
+
+from repro.core.search import repeat_search
+
+from .common import ABLATION_PLATFORM, BUDGET, REPEATS, emit, grid_upto
+
+WORKLOADS = [
+    "llama3_8b_attention", "deepseek_r1_moe", "flux_attention", "flux_conv",
+]
+
+
+def run(budget: int = None, repeats: int = None) -> dict:
+    budget = budget or BUDGET
+    repeats = repeats or REPEATS
+    grid = grid_upto(budget)
+    out = {}
+    for wname in WORKLOADS:
+        for b in (2, 4):
+            curve, results = repeat_search(
+                wname, ABLATION_PLATFORM, "llm-mcts", budget,
+                repeats=repeats, grid=grid, branching=b,
+            )
+            out[(wname, b)] = curve
+            best_t = min(r.best_latency_s for r in results)
+            derived = ";".join(f"@{s}={v:.2f}x" for s, v in curve)
+            emit(f"table6/{wname}/B{b}", best_t * 1e6, derived)
+    return out
+
+
+if __name__ == "__main__":
+    run()

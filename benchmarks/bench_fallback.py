@@ -1,0 +1,47 @@
+"""Table 8: LLM proposal validity and fallback rates by model tier.
+
+A fallback = an expansion in which ALL proposals failed validation, so the
+search reverted to the default (random) policy — Appendix G semantics.
+Strong models show ~0%; small open models show the high rates the paper
+reports (10.5% / 17.2% invalid-proposal probability per mention).
+"""
+from __future__ import annotations
+
+from repro.core.search import run_search
+
+from .common import ABLATION_PLATFORM, BUDGET, REPEATS, emit
+
+TIERS = [
+    "gpt-4o-mini", "o1-mini", "llama3.3-70b", "deepseek-r1-distill-32b",
+    "llama3.1-8b", "deepseek-r1-distill-7b",
+]
+
+
+def run(budget: int = None, repeats: int = None) -> dict:
+    budget = budget or BUDGET
+    repeats = repeats or REPEATS
+    out = {}
+    for tier in TIERS:
+        exp = fb = prop = inv = 0
+        for seed in range(repeats):
+            r = run_search(
+                "llama3_8b_attention", ABLATION_PLATFORM, "llm-mcts",
+                budget=budget, seed=seed, llm=tier,
+            )
+            exp += r.fallback.expansions
+            fb += r.fallback.fallbacks
+            prop += r.fallback.proposed
+            inv += r.fallback.invalid
+        rate = fb / max(1, exp)
+        inv_rate = inv / max(1, prop)
+        out[tier] = rate
+        emit(
+            f"table8/{tier}", 0.0,
+            f"fallback={rate:.2%};invalid_mentions={inv_rate:.2%};"
+            f"expansions={exp}",
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

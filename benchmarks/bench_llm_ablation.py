@@ -1,0 +1,41 @@
+"""Fig. 4(a) / Table 4: impact of the proposal model's capability tier.
+
+Stronger / instruction-tuned models converge with fewer samples; small open
+models still beat uninformed search; a `random` proposal engine collapses to
+plain MCTS — confirming the reasoning, not the plumbing, drives the gap.
+"""
+from __future__ import annotations
+
+from repro.core.search import repeat_search
+
+from .common import ABLATION_PLATFORM, BUDGET, REPEATS, emit, grid_upto
+
+TIERS = [
+    "gpt-4o-mini", "o1-mini", "llama3.3-70b", "deepseek-r1-distill-32b",
+    "llama3.1-8b", "deepseek-r1-distill-7b", "random",
+]
+WORKLOADS = [
+    "llama3_8b_attention", "deepseek_r1_moe", "flux_attention", "flux_conv",
+]
+
+
+def run(budget: int = None, repeats: int = None) -> dict:
+    budget = budget or BUDGET
+    repeats = repeats or REPEATS
+    grid = grid_upto(budget)
+    out = {}
+    for wname in WORKLOADS:
+        for tier in TIERS:
+            curve, results = repeat_search(
+                wname, ABLATION_PLATFORM, "llm-mcts", budget,
+                repeats=repeats, grid=grid, llm=tier,
+            )
+            out[(wname, tier)] = curve
+            best_t = min(r.best_latency_s for r in results)
+            derived = ";".join(f"@{s}={v:.2f}x" for s, v in curve)
+            emit(f"table4/{wname}/{tier}", best_t * 1e6, derived)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Table 1: sample efficiency across 5 hardware platforms x 5 kernels.
+
+Per (platform, kernel): ES baseline vs REASONING COMPILER — samples to
+converge, speedup, sample reduction, and the speedup/#samples efficiency
+gain, with geomeans over all 25 cells.
+"""
+from __future__ import annotations
+
+from repro.core.search import compare_efficiency, repeat_search
+from repro.core.mcts import SearchCurve
+
+from .common import (
+    BUDGET,
+    PAPER_PLATFORMS,
+    PAPER_WORKLOADS,
+    REPEATS,
+    emit,
+    geomean,
+    grid_upto,
+)
+
+
+def run(budget: int = None, repeats: int = None) -> list:
+    budget = budget or BUDGET
+    repeats = repeats or REPEATS
+    grid = grid_upto(budget)
+    rows = []
+    for plat in PAPER_PLATFORMS:
+        for wname in PAPER_WORKLOADS:
+            base, _ = repeat_search(
+                wname, plat, "evolutionary", budget, repeats=repeats,
+                grid=grid,
+            )
+            ours, ours_res = repeat_search(
+                wname, plat, "llm-mcts", budget, repeats=repeats, grid=grid,
+            )
+            cmpr = compare_efficiency(
+                SearchCurve(base), SearchCurve(ours), budget
+            )
+            rows.append((plat, wname, cmpr))
+            best_t = min(r.best_latency_s for r in ours_res)
+            emit(
+                f"table1/{plat}/{wname}", best_t * 1e6,
+                f"tvm {cmpr.baseline_samples}@{cmpr.baseline_speedup:.1f}x;"
+                f"ours {cmpr.ours_samples}@{cmpr.ours_speedup:.1f}x;"
+                f"reduction={cmpr.sample_reduction:.1f}x;"
+                f"effgain={cmpr.efficiency_gain:.1f}x",
+            )
+    emit(
+        "table1/geomean", 0.0,
+        f"ours_speedup={geomean([c.ours_speedup for _, _, c in rows]):.2f}x;"
+        f"sample_reduction="
+        f"{geomean([c.sample_reduction for _, _, c in rows]):.2f}x;"
+        f"efficiency_gain="
+        f"{geomean([c.efficiency_gain for _, _, c in rows]):.2f}x",
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Fig. 4(b) / Table 5: historical trace depth in the prompt.
+
+Deeper context (parent + grandparent + great-grandparent) sharpens the
+model's credit assignment over the visible trajectory -> faster convergence.
+"""
+from __future__ import annotations
+
+from repro.core.search import repeat_search
+
+from .common import ABLATION_PLATFORM, BUDGET, REPEATS, emit, grid_upto
+
+DEPTHS = {2: "parent+grandparent", 3: "parent+grandparent+great-grandparent"}
+WORKLOADS = [
+    "llama3_8b_attention", "deepseek_r1_moe", "flux_attention", "flux_conv",
+]
+
+
+def run(budget: int = None, repeats: int = None) -> dict:
+    budget = budget or BUDGET
+    repeats = repeats or REPEATS
+    grid = grid_upto(budget)
+    out = {}
+    for wname in WORKLOADS:
+        for depth, label in DEPTHS.items():
+            curve, results = repeat_search(
+                wname, ABLATION_PLATFORM, "llm-mcts", budget,
+                repeats=repeats, grid=grid, trace_depth=depth,
+            )
+            out[(wname, depth)] = curve
+            best_t = min(r.best_latency_s for r in results)
+            derived = ";".join(f"@{s}={v:.2f}x" for s, v in curve)
+            emit(f"table5/{wname}/depth{depth}", best_t * 1e6, derived)
+    return out
+
+
+if __name__ == "__main__":
+    run()

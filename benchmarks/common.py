@@ -1,0 +1,41 @@
+"""Shared benchmark protocol (paper §4.1).
+
+Every benchmark emits CSV rows ``name,us_per_call,derived`` where
+``us_per_call`` is the best-found schedule latency (microseconds, oracle)
+and ``derived`` packs the table's headline metrics.  Repeats/budget default
+low enough for CI; set REPRO_BENCH_REPEATS / REPRO_BENCH_BUDGET to approach
+the paper's 20-repeat protocol.
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import sys
+
+REPEATS = int(os.environ.get("REPRO_BENCH_REPEATS", "3"))
+BUDGET = int(os.environ.get("REPRO_BENCH_BUDGET", "600"))
+
+PAPER_WORKLOADS = [
+    "llama3_8b_attention",
+    "deepseek_r1_moe",
+    "flux_attention",
+    "flux_conv",
+    "llama4_scout_mlp",
+]
+PAPER_PLATFORMS = ["graviton2", "epyc-7r13", "m2-pro", "core-i9", "xeon-e3"]
+ABLATION_PLATFORM = "core-i9"  # the paper's dedicated ablation workstation
+SAMPLE_GRID = [18, 36, 72, 150, 200, 600, 900, 1632, 3000]
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()
+
+
+def geomean(xs) -> float:
+    xs = [max(x, 1e-12) for x in xs]
+    return statistics.geometric_mean(xs)
+
+
+def grid_upto(budget: int):
+    return [g for g in SAMPLE_GRID if g <= budget] or [budget]

@@ -1,0 +1,75 @@
+"""Beyond-paper: the 40-cell roofline table from the dry-run artifact.
+
+Reads artifacts/dryrun.json (produced by ``repro.launch.dryrun``) and emits
+one CSV row per (arch x shape x mesh) cell with the three roofline terms,
+the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs — plus a markdown table
+for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+ARTIFACT = os.environ.get(
+    "REPRO_DRYRUN_JSON",
+    os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                 "dryrun.json"),
+)
+
+
+def run(markdown_out: str = None) -> dict:
+    if not os.path.exists(ARTIFACT):
+        emit("roofline/missing", 0.0,
+             f"no dry-run artifact at {ARTIFACT}; run "
+             "PYTHONPATH=src python -m repro.launch.dryrun first")
+        return {}
+    with open(ARTIFACT) as f:
+        results = json.load(f)
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s |"
+        " dominant | 6ND/HLO | MFU | peak GiB | mb | status |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(results):
+        r = results[key]
+        if r["status"] == "ok":
+            emit(
+                f"roofline/{key}", r["step_time_s"] * 1e6
+                if "step_time_s" in r
+                else max(r["compute_s"], r["memory_s"],
+                         r["collective_s"]) * 1e6,
+                f"dom={r['dominant']};compute={r['compute_s']:.3g}s;"
+                f"memory={r['memory_s']:.3g}s;"
+                f"collective={r['collective_s']:.3g}s;"
+                f"useful={r['useful_flops_ratio']:.3f};mfu={r['mfu']:.4f}",
+            )
+            peak = r["bytes_per_device"]["peak_bytes"] / 2**30
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+                f"| {r['collective_s']:.3g} | **{r['dominant']}** "
+                f"| {r['useful_flops_ratio']:.2f} | {r['mfu']:.3f} "
+                f"| {peak:.1f} | {r.get('microbatches', 1)} | ok |"
+            )
+        elif r["status"] == "skip":
+            emit(f"roofline/{key}", 0.0, f"skip:{r['reason'][:60]}")
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - "
+                f"| - | - | - | - | - | skip: {r['reason'][:48]} |"
+            )
+        else:
+            emit(f"roofline/{key}", 0.0, f"ERROR:{r.get('error', '')[:80]}")
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - "
+                f"| - | - | - | - | - | ERROR |"
+            )
+    if markdown_out:
+        with open(markdown_out, "w") as f:
+            f.write("\n".join(lines) + "\n")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark entry point: one function per paper table.
+
+``PYTHONPATH=src python -m benchmarks.run [table3 table1 ...]``
+
+Emits ``name,us_per_call,derived`` CSV rows.  Default repeats/budget are
+CI-sized; set REPRO_BENCH_REPEATS / REPRO_BENCH_BUDGET for paper-scale runs.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (
+    bench_branching,
+    bench_end_to_end,
+    bench_fallback,
+    bench_llm_ablation,
+    bench_platforms,
+    bench_sample_efficiency,
+    bench_trace_depth,
+    roofline_table,
+)
+from .common import emit
+
+TABLES = {
+    "table3": bench_sample_efficiency.run,   # Fig 3 / Table 3
+    "table1": bench_platforms.run,           # Table 1
+    "table2": bench_end_to_end.run,          # Table 2
+    "table4": bench_llm_ablation.run,        # Fig 4a / Table 4
+    "table5": bench_trace_depth.run,         # Fig 4b / Table 5
+    "table6": bench_branching.run,           # Table 6
+    "table8": bench_fallback.run,            # Table 8
+    "roofline": roofline_table.run,          # beyond-paper: dry-run roofline
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(TABLES)
+    t0 = time.time()
+    for name in which:
+        fn = TABLES[name]
+        t = time.time()
+        fn()
+        emit(f"{name}/elapsed", (time.time() - t) * 1e6, "wall-time")
+    emit("all/elapsed", (time.time() - t0) * 1e6, "wall-time")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: optimize one kernel with the REASONING COMPILER.
+
+Runs the paper's central comparison on the DeepSeek-R1 MoE GEMM (the exact
+workload from the paper's Appendix A prompt) and prints the speedup-vs-
+samples curves for Evolutionary Search, plain MCTS, and LLM-guided MCTS.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.search import run_search  # noqa: E402
+
+BUDGET = 150
+GRID = [18, 36, 72, 150]
+
+
+def main():
+    print("workload: deepseek_r1_moe  platform: core-i9  "
+          f"budget: {BUDGET} samples\n")
+    header = f"{'method':14s}" + "".join(f"  @{g:<5d}" for g in GRID)
+    print(header)
+    print("-" * len(header))
+    for method in ("evolutionary", "mcts", "llm-mcts"):
+        r = run_search("deepseek_r1_moe", "core-i9", method,
+                       budget=BUDGET, seed=0)
+        row = f"{method:14s}" + "".join(
+            f"  {r.curve.at(g):5.1f}x" for g in GRID
+        )
+        print(row)
+    print("\nbest schedule found by llm-mcts:")
+    r = run_search("deepseek_r1_moe", "core-i9", "llm-mcts",
+                   budget=BUDGET, seed=0)
+    print(r.best_schedule.render())
+    print(f"\n{r.best_speedup:.1f}x over the unoptimized program "
+          f"in {r.samples} samples")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .base import ArchConfig, ShapeSpec, SHAPES, get_config, input_specs, list_archs  # noqa: F401

@@ -1,0 +1,235 @@
+"""Architecture config schema + the four assigned input shapes.
+
+Every assigned architecture gets one ``configs/<id>.py`` defining an exact
+``ArchConfig`` per the public spec, plus a reduced ``smoke()`` variant for
+CPU tests.  ``input_specs()`` produces ShapeDtypeStruct stand-ins for the
+dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# shapes (assigned): seq_len x global_batch; decode_*/long_* lower serve_step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (exact public config)."""
+
+    name: str
+    family: str          # dense | audio | ssm | vlm | hybrid | moe
+    layers: int
+    d_model: int
+    heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // heads
+    # block structure
+    block: str = "dense"         # dense | moe | xlstm | hybrid | encoder
+    causal: bool = True
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0
+    window: int = 0              # sliding-window size (0 = full attention)
+    global_layer_every: int = 0  # hybrid: every k-th layer is full-attention
+    # modality frontend stubs
+    frontend: Optional[str] = None   # None | "audio" | "vision"
+    frontend_dim: int = 0            # stub feature dim
+    vision_patches: int = 0          # VLM: patch tokens prepended
+    # training
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    # provenance
+    source: str = ""
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve 500k-token contexts? (SSM / windowed hybrid)"""
+        return self.block in ("xlstm", "hybrid")
+
+    @property
+    def has_decode(self) -> bool:
+        return self.block != "encoder"
+
+    def padded_heads(self, tp: int) -> int:
+        """Megatron-style head padding to the TP degree (DESIGN.md §6).
+
+        Padding is PER KV GROUP so the GQA mapping ``q_head // group`` still
+        lands on the right kv head (function-preserving: padded slots carry
+        zero weights).  If consistent padding would cost > 1.5x extra query
+        heads (e.g. hymba's 25q/5kv on tp=16 would need 80), the arch keeps
+        its true head count and attention is replicated on the model axis
+        instead (dist.sharding checks divisibility).
+        """
+        if self.heads % tp == 0:
+            return self.heads
+        group = self.heads // self.kv_heads
+        g = group
+        while (self.kv_heads * g) % tp != 0:
+            g += 1
+        padded = self.kv_heads * g
+        if padded > 1.5 * self.heads:
+            return self.heads
+        return padded
+
+    def head_group_sizes(self, tp: int) -> tuple[int, int]:
+        """(real_group, padded_group) of query heads per kv head."""
+        group = self.heads // self.kv_heads
+        return group, self.padded_heads(tp) // self.kv_heads
+
+    def padded_kv_heads(self, tp: int) -> int:
+        if self.kv_heads >= tp:
+            return math.ceil(self.kv_heads / tp) * tp
+        return self.kv_heads  # replicated when kv < tp
+
+    def padded_vocab(self, tp: int) -> int:
+        q = tp * 128
+        return math.ceil(self.vocab / q) * q
+
+    def supports(self, shape: str) -> tuple[bool, str]:
+        """Whether an assigned shape cell applies to this arch (and why not)."""
+        sp = SHAPES[shape]
+        if sp.kind == "decode" and not self.has_decode:
+            return False, "encoder-only architecture has no decode step"
+        if shape == "long_500k" and not self.sub_quadratic:
+            return False, ("full quadratic attention at 524k context is not "
+                           "servable; shape assigned to SSM/hybrid archs only")
+        return True, ""
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks)."""
+        d, f, L = self.d_model, self.d_ff, self.layers
+        hq, hkv, hd = self.heads, self.kv_heads, self.hd
+        attn = d * (hq * hd) + 2 * d * (hkv * hd) + (hq * hd) * d
+        if self.block == "moe":
+            mlp = 3 * d * f * self.n_experts + d * self.n_experts
+        elif self.block == "xlstm":
+            attn = 0
+            inner = 2 * d
+            mlp = 2 * d * inner + inner * d + 3 * inner * (inner // 4)
+        else:
+            mlp = 3 * d * f
+        if self.block == "hybrid":
+            inner = 2 * d
+            mlp += 2 * d * inner + inner * self.ssm_state * 2
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + mlp) + emb
+
+    def flops_per_token(self, training: bool = True) -> float:
+        """MODEL_FLOPS/token: 6ND train (2ND forward), N = active params."""
+        n = self.active_param_count()
+        return (6.0 if training else 2.0) * n
+
+    def active_param_count(self) -> int:
+        if self.block != "moe":
+            return self.param_count()
+        d, f, L = self.d_model, self.d_ff, self.layers
+        hq, hkv, hd = self.heads, self.kv_heads, self.hd
+        attn = d * (hq * hd) + 2 * d * (hkv * hd) + (hq * hd) * d
+        mlp = 3 * d * f * self.top_k + d * self.n_experts
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + mlp) + emb
+
+
+def input_specs(cfg: ArchConfig, shape: str, *, per_host: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of a step function.
+
+    Train: {tokens, labels}; prefill: {tokens}; decode: {tokens(1-step)} plus
+    the KV/state cache created by ``serve.cache_specs``.  Frontend stubs add
+    precomputed frame/patch embeddings per the assignment note.
+    """
+    sp = SHAPES[shape]
+    b, s = sp.global_batch, sp.seq_len
+    i32 = jnp.int32
+    if sp.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    elif sp.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode: one new token against a seq_len-deep cache
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.frontend == "audio":
+        # encoder stub: precomputed frame embeddings replace tokens
+        specs = {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                           jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        } if sp.kind == "train" else {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                           jnp.bfloat16),
+        }
+    elif cfg.frontend == "vision" and sp.kind == "train":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_patches, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+_REGISTRY: dict[str, ArchConfig] = {}
+_SMOKE: dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig, smoke: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    _SMOKE[cfg.name] = smoke
+    return cfg
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    _load_all()
+    return (_SMOKE if smoke else _REGISTRY)[name]
+
+
+def list_archs() -> list[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _load_all() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from . import (  # noqa: F401
+        stablelm_1_6b, tinyllama_1_1b, stablelm_12b, phi4_mini_3_8b,
+        hubert_xlarge, xlstm_125m, llava_next_34b, hymba_1_5b,
+        qwen3_moe_30b_a3b, llama4_scout_17b_a16e,
+    )

@@ -1,0 +1,21 @@
+"""HuBERT-XLarge encoder [arXiv:2106.07447; unverified].
+
+Encoder-only (bidirectional attention, LayerNorm, no decode shapes); the
+conv waveform frontend is a STUB per the assignment: input_specs() provides
+precomputed 512-dim frame embeddings.
+"""
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="hubert-xlarge", family="audio", layers=48, d_model=1280,
+    heads=16, kv_heads=16, d_ff=5120, vocab=504, block="encoder",
+    causal=False, norm="layernorm", frontend="audio", frontend_dim=512,
+    source="arXiv:2106.07447",
+)
+SMOKE = ArchConfig(
+    name="hubert-xlarge", family="audio", layers=2, d_model=128,
+    heads=4, kv_heads=4, d_ff=256, vocab=64, block="encoder",
+    causal=False, norm="layernorm", frontend="audio", frontend_dim=32,
+    dtype="float32", source="smoke",
+)
+register(FULL, SMOKE)

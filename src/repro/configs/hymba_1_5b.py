@@ -1,0 +1,22 @@
+"""Hymba-1.5B hybrid: parallel attn + mamba heads [arXiv:2411.13676; hf].
+
+Each block runs a sliding-window attention path (window 1024) and an SSM
+path in parallel and mean-combines them; every 16th layer uses global
+attention (the paper keeps 3 global layers). ssm_state=16. 25 query heads
+pad to 32 on the 16-way model axis. Sub-quadratic: runs long_500k.
+"""
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="hymba-1.5b", family="hybrid", layers=32, d_model=1600,
+    heads=25, kv_heads=5, d_ff=5504, vocab=32001, head_dim=64,
+    block="hybrid", ssm_state=16, window=1024, global_layer_every=16,
+    source="arXiv:2411.13676",
+)
+SMOKE = ArchConfig(
+    name="hymba-1.5b", family="hybrid", layers=2, d_model=64,
+    heads=4, kv_heads=2, d_ff=128, vocab=256, head_dim=16,
+    block="hybrid", ssm_state=4, window=32, global_layer_every=2,
+    dtype="float32", source="smoke",
+)
+register(FULL, SMOKE)

@@ -1,0 +1,20 @@
+"""Llama-4-Scout-17B-16E: MoE 16 experts top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+40 query heads pad to 48 on the 16-way model axis; 16 experts shard
+1-per-device (EP).
+"""
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="llama4-scout-17b-a16e", family="moe", layers=48, d_model=5120,
+    heads=40, kv_heads=8, d_ff=8192, vocab=202048, head_dim=128,
+    block="moe", n_experts=16, top_k=1,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+)
+SMOKE = ArchConfig(
+    name="llama4-scout-17b-a16e", family="moe", layers=2, d_model=64,
+    heads=4, kv_heads=2, d_ff=128, vocab=256, head_dim=32,
+    block="moe", n_experts=4, top_k=1, dtype="float32", source="smoke",
+)
+register(FULL, SMOKE)

@@ -1,0 +1,21 @@
+"""LLaVA-NeXT-34B backbone [hf:llava-hf/llava-v1.6; unverified].
+
+The vision tower + anyres tiling frontend is a STUB per the assignment:
+input_specs() provides precomputed patch embeddings (2880 tokens ~ 5 tiles
+x 576 patches) prepended to the text sequence. 56 query heads pad to 64 on
+the 16-way model axis (DESIGN.md §6).
+"""
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="llava-next-34b", family="vlm", layers=60, d_model=7168,
+    heads=56, kv_heads=8, d_ff=20480, vocab=64000,
+    frontend="vision", vision_patches=2880,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)
+SMOKE = ArchConfig(
+    name="llava-next-34b", family="vlm", layers=2, d_model=128,
+    heads=8, kv_heads=2, d_ff=256, vocab=512,
+    frontend="vision", vision_patches=16, dtype="float32", source="smoke",
+)
+register(FULL, SMOKE)

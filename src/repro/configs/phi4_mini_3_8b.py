@@ -1,0 +1,18 @@
+"""Phi-4-mini 3.8B: RoPE SwiGLU GQA [arXiv:2412.08905; hf].
+
+24 heads with head_dim 128; on the 16-way model axis the query heads are
+padded 24 -> 32 (Megatron-style; DESIGN.md §6), kv heads (8) replicated.
+"""
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="phi4-mini-3.8b", family="dense", layers=32, d_model=3072,
+    heads=24, kv_heads=8, d_ff=8192, vocab=200064, head_dim=128,
+    source="arXiv:2412.08905",
+)
+SMOKE = ArchConfig(
+    name="phi4-mini-3.8b", family="dense", layers=2, d_model=96,
+    heads=3, kv_heads=1, d_ff=256, vocab=512, head_dim=32,
+    dtype="float32", source="smoke",
+)
+register(FULL, SMOKE)

@@ -1,0 +1,19 @@
+"""Qwen3-30B-A3B MoE: 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B; hf].
+
+d_ff=768 is per-expert; head_dim=128 per the HF config (not d_model/heads).
+Experts shard 8-per-device over the 16-way model axis (EP).
+"""
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="qwen3-moe-30b-a3b", family="moe", layers=48, d_model=2048,
+    heads=32, kv_heads=4, d_ff=768, vocab=151936, head_dim=128,
+    block="moe", n_experts=128, top_k=8,
+    source="hf:Qwen/Qwen3-30B-A3B",
+)
+SMOKE = ArchConfig(
+    name="qwen3-moe-30b-a3b", family="moe", layers=2, d_model=64,
+    heads=4, kv_heads=2, d_ff=64, vocab=256, head_dim=32,
+    block="moe", n_experts=8, top_k=2, dtype="float32", source="smoke",
+)
+register(FULL, SMOKE)

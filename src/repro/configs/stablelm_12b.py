@@ -1,0 +1,14 @@
+"""StableLM-2-12B [hf:stabilityai/stablelm-2-12b; hf]."""
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="stablelm-12b", family="dense", layers=40, d_model=5120,
+    heads=32, kv_heads=8, d_ff=13824, vocab=100352,
+    source="hf:stabilityai/stablelm-2-12b",
+)
+SMOKE = ArchConfig(
+    name="stablelm-12b", family="dense", layers=2, d_model=128,
+    heads=8, kv_heads=2, d_ff=384, vocab=512, dtype="float32",
+    source="smoke",
+)
+register(FULL, SMOKE)

@@ -1,0 +1,14 @@
+"""StableLM-2-1.6B [hf:stabilityai/stablelm-2-1_6b; unverified]."""
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="stablelm-1.6b", family="dense", layers=24, d_model=2048,
+    heads=32, kv_heads=32, d_ff=5632, vocab=100352,
+    source="hf:stabilityai/stablelm-2-1_6b",
+)
+SMOKE = ArchConfig(
+    name="stablelm-1.6b", family="dense", layers=2, d_model=128,
+    heads=4, kv_heads=4, d_ff=256, vocab=512, dtype="float32",
+    source="smoke",
+)
+register(FULL, SMOKE)

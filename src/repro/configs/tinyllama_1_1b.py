@@ -1,0 +1,14 @@
+"""TinyLlama-1.1B (llama2-arch small) [arXiv:2401.02385; hf]."""
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="tinyllama-1.1b", family="dense", layers=22, d_model=2048,
+    heads=32, kv_heads=4, d_ff=5632, vocab=32000,
+    source="arXiv:2401.02385",
+)
+SMOKE = ArchConfig(
+    name="tinyllama-1.1b", family="dense", layers=2, d_model=128,
+    heads=8, kv_heads=2, d_ff=256, vocab=512, dtype="float32",
+    source="smoke",
+)
+register(FULL, SMOKE)

@@ -1,0 +1,20 @@
+"""xLSTM-125M: sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+d_ff=0 per spec: xLSTM blocks carry their own up/down projections
+(proj_factor 2). Every 4th block is sLSTM, the rest mLSTM (xLSTM[3:1]).
+Sub-quadratic: runs the long_500k cell.
+"""
+from .base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="xlstm-125m", family="ssm", layers=12, d_model=768,
+    heads=4, kv_heads=4, d_ff=0, vocab=50304, block="xlstm",
+    ssm_state=0, tie_embeddings=True,
+    source="arXiv:2405.04517",
+)
+SMOKE = ArchConfig(
+    name="xlstm-125m", family="ssm", layers=2, d_model=64,
+    heads=2, kv_heads=2, d_ff=0, vocab=256, block="xlstm",
+    tie_embeddings=True, dtype="float32", source="smoke",
+)
+register(FULL, SMOKE)

@@ -1,0 +1,165 @@
+"""Ties the Reasoning Compiler's schedule search to runnable kernel configs.
+
+This is what makes the paper's technique a *first-class feature* of the
+serving/training framework rather than a side experiment: per (workload x
+target) the tuner runs LLM-guided MCTS on the TPU platform profile, extracts
+the Pallas block parameters from the winning schedule, and persists them in
+a JSON tuning cache that ``repro.kernels.ops`` consumers look up at model
+build time.
+
+Mapping (DESIGN.md §3): the VMEM-band tile extents (spatial levels 2..3) of
+a tuned schedule are the Pallas BlockSpec block shape; the reduction inner
+tile is ``bk``; a fused epilogue (ComputeLocation >= 0) selects the fused
+kernel variant (flash attention / fused gate-up).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Optional
+
+from .cost_model import HardwareOracle, get_platform
+from .schedule import SPATIAL_LEVELS, Schedule
+from .search import SearchResult, run_search
+from .workloads import (
+    Workload,
+    attention_workload,
+    matmul_workload,
+)
+
+DEFAULT_CACHE_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "configs", "tuning_cache.json"
+)
+
+
+def _quantize_block(x: int, extent: int, lo: int = 8, hi: int = 1024) -> int:
+    """Clamp a tile extent to a power of two that divides the extent."""
+    x = max(lo, min(hi, x))
+    p = 1 << int(math.log2(max(1, x)))
+    while p > lo and extent % p != 0:
+        p //= 2
+    return max(lo, min(p, extent)) if extent % max(lo, min(p, extent)) == 0 \
+        else min(lo, extent)
+
+
+def _band_extent(s: Schedule, axis: str) -> int:
+    """Product of the VMEM-band tile levels (spatial 2..3 / reduction 1)."""
+    tm = s.tile_map[axis]
+    if len(tm) == SPATIAL_LEVELS:
+        return tm[2] * tm[3]
+    return tm[-1]
+
+
+@dataclasses.dataclass
+class AttentionBlocks:
+    block_q: int = 128
+    block_k: int = 128
+
+    @classmethod
+    def from_schedule(cls, s: Schedule) -> "AttentionBlocks":
+        w = s.workload
+        sq = w.loop_map["i"].extent
+        skv = w.loop_map["j"].extent
+        bq = _quantize_block(_band_extent(s, "i"), sq, lo=8, hi=512)
+        bk = _quantize_block(_band_extent(s, "j"), skv, lo=128, hi=1024)
+        return cls(block_q=bq, block_k=bk)
+
+
+@dataclasses.dataclass
+class GemmBlocks:
+    bm: int = 128
+    bn: int = 128
+    bk: int = 512
+
+    @classmethod
+    def from_schedule(cls, s: Schedule) -> "GemmBlocks":
+        w = s.workload
+        m = w.loop_map["i"].extent
+        n = w.loop_map["j"].extent
+        k = w.loop_map["k"].extent
+        return cls(
+            bm=_quantize_block(_band_extent(s, "i"), m, lo=8, hi=512),
+            bn=_quantize_block(_band_extent(s, "j"), n, lo=128, hi=1024),
+            bk=_quantize_block(_band_extent(s, "k"), k, lo=128, hi=2048),
+        )
+
+
+def attention_tuning_workload(
+    heads: int, seq_q: int, seq_kv: int, head_dim: int, name: str = "attn"
+) -> Workload:
+    return attention_workload(
+        name, heads=heads, seq_q=seq_q, seq_kv=seq_kv, head_dim=head_dim,
+        dtype_bytes=2,
+    )
+
+
+def gemm_tuning_workload(m: int, n: int, k: int, name: str = "gemm",
+                         epilogue: str = "none") -> Workload:
+    return matmul_workload(name, m=m, n=n, k=k, dtype_bytes=2,
+                           epilogue=epilogue)
+
+
+class KernelTuner:
+    """LLM-guided-MCTS kernel autotuner with a persistent JSON cache."""
+
+    def __init__(
+        self,
+        platform: str = "tpu-v5e",
+        method: str = "llm-mcts",
+        budget: int = 64,
+        cache_path: Optional[str] = DEFAULT_CACHE_PATH,
+        llm: str = "gpt-4o-mini",
+    ):
+        self.platform = platform
+        self.method = method
+        self.budget = budget
+        self.llm = llm
+        self.cache_path = cache_path
+        self._cache: dict = {}
+        if cache_path and os.path.exists(cache_path):
+            with open(cache_path) as f:
+                self._cache = json.load(f)
+
+    def _key(self, w: Workload) -> str:
+        dims = ",".join(f"{l.name}={l.extent}" for l in w.loops)
+        return f"{self.platform}:{w.name}[{dims}]"
+
+    def tune_attention(self, heads, seq_q, seq_kv, head_dim) -> AttentionBlocks:
+        w = attention_tuning_workload(heads, seq_q, seq_kv, head_dim)
+        key = self._key(w)
+        if key in self._cache:
+            e = self._cache[key]
+            return AttentionBlocks(e["block_q"], e["block_k"])
+        res = self._search(w)
+        blocks = AttentionBlocks.from_schedule(res.best_schedule)
+        self._store(key, dataclasses.asdict(blocks), res)
+        return blocks
+
+    def tune_gemm(self, m, n, k, epilogue="none") -> GemmBlocks:
+        w = gemm_tuning_workload(m, n, k, epilogue=epilogue)
+        key = self._key(w)
+        if key in self._cache:
+            e = self._cache[key]
+            return GemmBlocks(e["bm"], e["bn"], e["bk"])
+        res = self._search(w)
+        blocks = GemmBlocks.from_schedule(res.best_schedule)
+        self._store(key, dataclasses.asdict(blocks), res)
+        return blocks
+
+    def _search(self, w: Workload) -> SearchResult:
+        return run_search(
+            w, self.platform, self.method, budget=self.budget, seed=0,
+            llm=self.llm,
+        )
+
+    def _store(self, key: str, params: dict, res: SearchResult) -> None:
+        self._cache[key] = dict(
+            params, speedup=round(res.best_speedup, 3),
+            samples=res.samples, method=self.method,
+        )
+        if self.cache_path:
+            os.makedirs(os.path.dirname(self.cache_path), exist_ok=True)
+            with open(self.cache_path, "w") as f:
+                json.dump(self._cache, f, indent=1, sort_keys=True)

@@ -1,0 +1,181 @@
+"""Distribution-plan autotuning: the Reasoning Compiler pointed at the
+runtime's own knobs (beyond-paper §Perf engine, DESIGN.md §8).
+
+The paper searches kernel schedules; at cluster scale the same sequential,
+context-aware decision problem appears one level up: microbatch depth,
+remat policy, MoE dispatch granularity, attention chunk size.  Here the
+*program* is a (config, shape, mesh) cell, the *transformations* are knob
+moves, and the objective is the three-term roofline step time of the
+re-lowered cell (launch/dryrun machinery) — a real compile per sample, so
+the search must be extremely sample-efficient: exactly the regime the
+paper targets.
+
+The proposal engine reuses the HeuristicReasonerLLM pattern: it reads the
+dominant roofline term of the current plan and proposes the knob move whose
+napkin-math effect addresses it (memory-bound -> deeper microbatching /
+remat on; collective-bound -> coarser dispatch groups; compute-bound ->
+shallower remat), falling back to neighborhood moves on a plateau.
+Sample-efficiency matters so much here (compiles cost ~minutes at scale)
+that greedy accept/reject with reasoned proposals is used instead of full
+MCTS; the search trace is logged in the same
+hypothesis -> change -> before -> after format as EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+KNOBS = {
+    "microbatches": (1, 2, 4, 8, 16, 32),
+    "remat": (False, True),
+    "dispatch_groups": (8, 16, 32, 64),
+    "attn_chunk": (512, 1024, 2048),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    microbatches: int = 1
+    remat: bool = True
+    dispatch_groups: int = 32
+    attn_chunk: int = 1024
+
+    def with_knob(self, name: str, value) -> "DistPlan":
+        return dataclasses.replace(self, **{name: value})
+
+
+@dataclasses.dataclass
+class PlanEval:
+    plan: DistPlan
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    peak_bytes: float
+    fits: bool
+
+    @property
+    def step_s(self) -> float:
+        t = max(self.compute_s, self.memory_s, self.collective_s)
+        return t if self.fits else t * 100.0  # OOM plans are dominated
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+
+@dataclasses.dataclass
+class PlanStep:
+    hypothesis: str
+    before: PlanEval
+    after: PlanEval
+    accepted: bool
+
+
+class DistPlanTuner:
+    """Greedy reasoned search over DistPlan knobs.
+
+    ``evaluate`` is injected (tests use an analytical stub; production uses
+    a dryrun re-lower of the target cell).
+    """
+
+    def __init__(self, evaluate: Callable[[DistPlan], PlanEval],
+                 hbm_bytes: float = 15.5 * 2**30):
+        self.evaluate = evaluate
+        self.hbm = hbm_bytes
+        self.log: list[PlanStep] = []
+        self.samples = 0
+
+    # -- reasoned proposal ---------------------------------------------------
+    def propose(self, cur: PlanEval) -> list[tuple[str, DistPlan]]:
+        p = cur.plan
+        ideas: list[tuple[str, DistPlan]] = []
+
+        def step_in(seq, v, direction):
+            i = seq.index(v) + direction
+            return seq[i] if 0 <= i < len(seq) else None
+
+        if not cur.fits or cur.dominant == "memory":
+            nxt = step_in(KNOBS["microbatches"], p.microbatches, +1)
+            if nxt:
+                ideas.append((
+                    f"memory-bound (peak {cur.peak_bytes / 2**30:.1f}GiB): "
+                    f"double microbatching {p.microbatches}->{nxt} to halve "
+                    f"live activations",
+                    p.with_knob("microbatches", nxt)))
+            if not p.remat:
+                ideas.append((
+                    "memory-bound: enable per-layer remat (recompute beats "
+                    "saving layer internals)", p.with_knob("remat", True)))
+            smaller = step_in(KNOBS["attn_chunk"], p.attn_chunk, -1)
+            if smaller:
+                ideas.append((
+                    f"memory-bound: shrink attention chunk "
+                    f"{p.attn_chunk}->{smaller} (smaller streamed score "
+                    f"block)", p.with_knob("attn_chunk", smaller)))
+        if cur.dominant == "collective":
+            coarser = step_in(KNOBS["dispatch_groups"], p.dispatch_groups,
+                              -1)
+            if coarser:
+                ideas.append((
+                    f"collective-bound: coarsen MoE dispatch groups "
+                    f"{p.dispatch_groups}->{coarser} (fewer, larger "
+                    f"all-to-alls amortize latency)",
+                    p.with_knob("dispatch_groups", coarser)))
+            fewer = step_in(KNOBS["microbatches"], p.microbatches, -1)
+            if fewer:
+                ideas.append((
+                    f"collective-bound: fewer microbatches "
+                    f"{p.microbatches}->{fewer} (each microbatch repeats "
+                    f"the TP collectives)",
+                    p.with_knob("microbatches", fewer)))
+        if cur.dominant == "compute" and cur.fits:
+            if p.remat:
+                ideas.append((
+                    "compute-bound with memory headroom: disable remat "
+                    "(stop paying the recompute flops)",
+                    p.with_knob("remat", False)))
+            fewer = step_in(KNOBS["microbatches"], p.microbatches, -1)
+            if fewer:
+                ideas.append((
+                    "compute-bound: fewer microbatches (less per-step "
+                    "overhead)", p.with_knob("microbatches", fewer)))
+        if not ideas:  # plateau: nearest-neighbor moves
+            for name, seq in KNOBS.items():
+                v = getattr(p, name)
+                for d in (-1, +1):
+                    nv = step_in(seq, v, d)
+                    if nv is not None:
+                        ideas.append((f"plateau: nudge {name} {v}->{nv}",
+                                      p.with_knob(name, nv)))
+        return ideas
+
+    # -- main loop -------------------------------------------------------------
+    def tune(self, start: DistPlan, budget: int = 8) -> PlanEval:
+        cur = self.evaluate(start)
+        self.samples = 1
+        tried = {start}
+        while self.samples < budget:
+            ideas = [(h, c) for h, c in self.propose(cur) if c not in tried]
+            if not ideas:
+                break
+            hyp, cand = ideas[0]
+            tried.add(cand)
+            ev = self.evaluate(cand)
+            self.samples += 1
+            accepted = ev.step_s < cur.step_s
+            self.log.append(PlanStep(hyp, cur, ev, accepted))
+            if accepted:
+                cur = ev
+        return cur
+
+    def report(self) -> str:
+        lines = []
+        for st in self.log:
+            lines.append(
+                f"[{'ACCEPT' if st.accepted else 'reject'}] {st.hypothesis}"
+                f" | step {st.before.step_s:.4g}s -> {st.after.step_s:.4g}s"
+            )
+        return "\n".join(lines)

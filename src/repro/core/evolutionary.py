@@ -1,0 +1,136 @@
+"""Evolutionary-search baseline (TVM MetaSchedule's strategy, paper §4.1).
+
+Faithful to MetaSchedule's ``EvolutionarySearch``: a population of schedules
+evolves by elite selection + mutation (re-sampling one scheduling decision)
++ crossover (exchanging tile decisions between parents).  Every evaluated
+candidate costs one *sample* — the same accounting as the MCTS methods — and
+the best-so-far speedup curve is recorded per sample.
+
+This is the paper's primary comparison point ("TVM with Evolutionary
+Search"); its sample-INEFFICIENCY is the phenomenon the Reasoning Compiler
+targets, so the implementation keeps the classic black-box structure: no
+context, no history, no structural reasoning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Optional
+
+from .cost_model import HardwareOracle
+from .mcts import SearchCurve
+from .schedule import (
+    Schedule,
+    ScheduleError,
+    initial_schedule,
+    random_schedule,
+    random_transform,
+)
+
+
+@dataclasses.dataclass
+class EvolutionaryConfig:
+    population: int = 24
+    elites: int = 6
+    crossover_rate: float = 0.3
+    mutation_steps: tuple = (1, 3)
+    init_steps: tuple = (2, 8)
+
+
+class EvolutionarySearch:
+    def __init__(
+        self,
+        workload,
+        oracle: HardwareOracle,
+        config: Optional[EvolutionaryConfig] = None,
+        seed: int = 0,
+    ):
+        self.workload = workload
+        self.oracle = oracle
+        self.cfg = config or EvolutionaryConfig()
+        self.rng = random.Random(seed)
+        self.s0 = initial_schedule(workload)
+        self.baseline_latency = oracle.measure(self.s0)
+        self.samples = 0
+        self.best: tuple = (self.baseline_latency, self.s0)
+        self.curve: list = []
+        self._pop: list = []  # (latency, schedule)
+
+    # -- operators -------------------------------------------------------------
+    def _mutate(self, s: Schedule) -> Optional[Schedule]:
+        steps = self.rng.randint(*self.cfg.mutation_steps)
+        try:
+            out = s
+            for _ in range(steps):
+                out = random_transform(self.rng, out).apply(out)
+            return out
+        except ScheduleError:
+            return None
+
+    def _crossover(self, a: Schedule, b: Schedule) -> Optional[Schedule]:
+        """Graft a random subset of b's per-axis tile decisions onto a."""
+        from .schedule import TileSize
+
+        try:
+            out = a
+            for axis, dec in b.tiles:
+                if self.rng.random() < 0.5 and dec != a.tile_map[axis]:
+                    out = TileSize(axis, dec).apply(out)
+            # inherit one annotation family from b
+            pick = self.rng.randrange(3)
+            if pick == 0 and b.vector_width != out.vector_width:
+                from .schedule import Vectorize
+
+                out = Vectorize(b.vector_width).apply(out)
+            elif pick == 1 and b.parallel_levels != out.parallel_levels:
+                from .schedule import Parallel
+
+                out = Parallel(b.parallel_levels).apply(out)
+            elif pick == 2 and b.compute_location != out.compute_location \
+                    and out.workload.epilogue_tensor_axes:
+                from .schedule import ComputeLocation
+
+                out = ComputeLocation(b.compute_location).apply(out)
+            return out
+        except ScheduleError:
+            return None
+
+    def _evaluate(self, s: Schedule) -> float:
+        t = self.oracle.measure(s)
+        self.samples += 1
+        if t < self.best[0]:
+            self.best = (t, s)
+        self.curve.append((self.samples, self.baseline_latency / self.best[0]))
+        return t
+
+    # -- main loop ---------------------------------------------------------------
+    def search(self, budget_samples: int) -> SearchCurve:
+        cfg = self.cfg
+        # init population
+        while len(self._pop) < cfg.population and self.samples < budget_samples:
+            try:
+                s = random_schedule(
+                    self.rng, self.s0, self.rng.randint(*cfg.init_steps)
+                )
+            except ScheduleError:
+                continue
+            self._pop.append((self._evaluate(s), s))
+
+        while self.samples < budget_samples:
+            self._pop.sort(key=lambda x: x[0])
+            elites = self._pop[: cfg.elites]
+            nxt = list(elites)
+            guard = 0
+            while len(nxt) < cfg.population and self.samples < budget_samples \
+                    and guard < cfg.population * 20:
+                guard += 1
+                if self.rng.random() < cfg.crossover_rate and len(elites) >= 2:
+                    pa, pb = self.rng.sample(elites, 2)
+                    s = self._crossover(pa[1], pb[1])
+                else:
+                    s = self._mutate(self.rng.choice(elites)[1])
+                if s is None:
+                    continue
+                nxt.append((self._evaluate(s), s))
+            self._pop = nxt
+        return SearchCurve(list(self.curve))

@@ -1,0 +1,896 @@
+"""The LLM proposal engine (paper §3.1, Appendix A/G).
+
+Three pieces, mirroring the paper's modular implementation (§4):
+
+1. **Prompt generator** — serializes the selected node, its parent and
+   grandparent (optionally great-grandparent), their transformation histories
+   ``S_i, S_{i-1}, S_{i-2}``, performance estimates, the available
+   transformation set ``O``, and a hardware summary, into the structured
+   prompt format shown in the paper's Appendix A.
+
+2. **LLM interface** — ``HeuristicReasonerLLM`` is a deterministic,
+   context-aware chain-of-thought policy that stands in for the OpenAI/HF
+   APIs this offline container cannot reach (DESIGN.md §4): it runs the same
+   diagnosis -> proposal reasoning visible in the paper's Appendix A example
+   (tile-alignment, cache/VMEM overflow, starved parallelism, fusion, layout,
+   credit assignment over the visible ancestor trace) and emits text in the
+   required ``Reasoning: ... / Transformations to apply: ...`` format.  Model
+   *tiers* degrade context use and inject invalid proposal names, reproducing
+   the Table 4 capability ordering and Table 8 fallback rates mechanistically.
+   ``APILLM`` is a real OpenAI-compatible adapter for deployments with
+   network access; it shares the exact same prompt/parse pipeline.
+
+3. **Parser / validator / fallback** — LLM output is free text; proposals are
+   regex-extracted, validated against the legal action space, invalid ones
+   discarded.  Only if *all* proposals in an expansion are invalid does the
+   caller fall back to the default (random) expansion policy — Appendix G
+   semantics, with fallback statistics recorded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import random
+import re
+import urllib.request
+from typing import Optional, Sequence
+
+from .cost_model import Platform
+from .schedule import (
+    REDUCTION_LEVELS,
+    SPATIAL_LEVELS,
+    CacheRead,
+    CacheWrite,
+    ComputeLocation,
+    Layout,
+    Parallel,
+    Schedule,
+    ScheduleError,
+    TileSize,
+    Transform,
+    Unroll,
+    Vectorize,
+    available_transforms,
+    divisors,
+    random_transform,
+)
+from .workloads import REDUCTION, SPATIAL
+
+# ---------------------------------------------------------------------------
+# Prompt construction (paper §3.1 "Prompt construction", Appendix A format)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEntry:
+    """One node of the hierarchical context: program + score + history."""
+
+    schedule: Schedule
+    latency_s: float
+    speedup: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Prompt:
+    text: str
+    trace: tuple[TraceEntry, ...]  # [current, parent, grandparent, ...]
+    available: tuple[str, ...]
+    platform: Platform
+
+
+PROMPT_HEADER = (
+    "You are a code optimization assistant performing Monte Carlo Tree "
+    "Search (MCTS) on a given code to improve performance. Each code has a "
+    "corresponding history of transformations and predicted cost. You are "
+    "given the code of the selected node and its ancestors.\n"
+)
+
+PROMPT_TASK = (
+    "Task\n"
+    "Analyze the IR, trace, and predicted scores.\n"
+    "Then propose a sequence of transformations (you may repeat any) to "
+    "potentially improve performance.\n"
+    "Output your reasoning and your suggested transformations.\n"
+    "For example, your answer should be in the following format:\n"
+    "Reasoning: This code still has large loop extents, so I'd tile it "
+    "twice differently, then unroll.\n"
+    "Transformations to apply: TileSize, TileSize, Unroll.\n"
+)
+
+
+def build_prompt(
+    trace: Sequence[TraceEntry],
+    platform: Platform,
+    trace_depth: int = 2,
+) -> Prompt:
+    """Serialize the hierarchical context into the Appendix-A prompt.
+
+    ``trace_depth=2`` is the paper's default (parent + grandparent);
+    ``trace_depth=3`` adds the great-grandparent (Table 5 ablation).
+    """
+    visible = tuple(trace[: trace_depth + 1])
+    names = ["Current", "Parent", "Grandparent", "Great-Grandparent"]
+    parts = [PROMPT_HEADER]
+    parts.append(
+        f"Target hardware: {platform.description} "
+        f"(cores={platform.cores}, simd_bytes={platform.simd_bytes}, "
+        f"cache_bytes={platform.cache_bytes}, "
+        f"mem_bw={platform.mem_bw_gbs:.0f}GB/s, "
+        f"mxu={'yes' if platform.mxu else 'no'})\n"
+    )
+    for i, entry in enumerate(visible):
+        s = entry.schedule
+        parts.append(f"--- {names[min(i, 3)]} program ---")
+        parts.append(s.render())
+        parts.append(
+            f"Transformation history: {list(s.history) or '[]'}"
+        )
+        parts.append(
+            f"Performance estimate: latency={entry.latency_s:.6g}s "
+            f"speedup_vs_unoptimized={entry.speedup:.3f}x\n"
+        )
+    avail = available_transforms(visible[0].schedule)
+    parts.append(f"Available transformations:\n{', '.join(avail)}\n")
+    parts.append(PROMPT_TASK)
+    return Prompt(
+        text="\n".join(parts),
+        trace=visible,
+        available=tuple(avail),
+        platform=platform,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Response parsing + validation (paper §3.1 "Transformation proposal and
+# validation", Appendix G fallback semantics)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Proposal:
+    """Validated result of one LLM expansion query."""
+
+    transforms: list[Transform]
+    reasoning: str
+    raw_text: str
+    n_proposed: int
+    n_invalid: int
+
+    @property
+    def fallback(self) -> bool:
+        """All proposals invalid -> revert to the default expansion policy."""
+        return not self.transforms
+
+
+_CALL_RE = re.compile(r"([A-Za-z_]+)\s*(\(([^)]*)\))?")
+_LIST_RE = re.compile(r"\[([^\]]*)\]")
+
+
+def _parse_args(argstr: str) -> tuple[list, dict]:
+    """Parse 'j, decision=[4, 8, 1, 64]' -> (positional, keyword) args."""
+    args: list = []
+    kwargs: dict = {}
+    # protect bracketed lists from the comma split
+    lists: list[str] = []
+
+    def _stash(m):
+        lists.append(m.group(1))
+        return f"@L{len(lists) - 1}@"
+
+    cooked = _LIST_RE.sub(_stash, argstr)
+    for tok in [t.strip() for t in cooked.split(",") if t.strip()]:
+        if "=" in tok:
+            k, v = tok.split("=", 1)
+            kwargs[k.strip()] = _decode(v.strip(), lists)
+        else:
+            args.append(_decode(tok, lists))
+    return args, kwargs
+
+
+def _decode(tok: str, lists: list[str]):
+    m = re.fullmatch(r"@L(\d+)@", tok)
+    if m:
+        return [
+            _decode(x.strip(), lists)
+            for x in lists[int(m.group(1))].split(",")
+            if x.strip()
+        ]
+    t = tok.strip().strip("'\"")
+    if re.fullmatch(r"-?\d+", t):
+        return int(t)
+    if t.lower() in ("true", "false"):
+        return t.lower() == "true"
+    return t
+
+
+_FAMILIES = {
+    "tilesize": "TileSize", "tile": "TileSize", "tiling": "TileSize",
+    "split": "TileSize",
+    "parallel": "Parallel", "parallelize": "Parallel",
+    "vectorize": "Vectorize", "vectorization": "Vectorize",
+    "unroll": "Unroll", "unrolling": "Unroll",
+    "computelocation": "ComputeLocation", "fuse": "ComputeLocation",
+    "fusion": "ComputeLocation", "computeat": "ComputeLocation",
+    "cachewrite": "CacheWrite", "cacheread": "CacheRead",
+    "layout": "Layout", "layouttransform": "Layout",
+}
+
+
+def _materialize(
+    family: str, args: list, kwargs: dict, s: Schedule, rng: random.Random
+) -> Optional[Transform]:
+    """Build a concrete Transform from a parsed mention; None if illegal."""
+    try:
+        if family == "TileSize":
+            axis = kwargs.get("axis", args[0] if args else None)
+            decision = kwargs.get(
+                "decision", args[1] if len(args) > 1 else None
+            )
+            if axis is None:
+                axis = rng.choice([l.name for l in s.workload.loops])
+            if not isinstance(axis, str) or axis not in s.workload.loop_map:
+                return None
+            loop = s.workload.loop_map[axis]
+            levels = SPATIAL_LEVELS if loop.kind == SPATIAL else REDUCTION_LEVELS
+            if decision is None:
+                from .schedule import sample_perfect_tile
+
+                decision = list(sample_perfect_tile(rng, loop.extent, levels))
+            if not isinstance(decision, list) or not all(
+                isinstance(x, int) for x in decision
+            ):
+                return None
+            t: Transform = TileSize(axis, tuple(decision))
+        elif family == "Parallel":
+            lv = kwargs.get("levels", args[0] if args else 1)
+            t = Parallel(int(lv))
+        elif family == "Vectorize":
+            wd = kwargs.get("width", args[0] if args else None)
+            if wd is None:
+                from .schedule import VECTOR_WIDTHS, _vector_axis
+
+                inner = s.inner_tile(_vector_axis(s.workload))
+                opts = [v for v in VECTOR_WIDTHS if inner % v == 0]
+                wd = max(opts)
+            t = Vectorize(int(wd))
+        elif family == "Unroll":
+            axis = kwargs.get("axis", args[0] if args else None)
+            factor = kwargs.get("factor", args[1] if len(args) > 1 else None)
+            if axis is None or axis not in s.workload.loop_map:
+                axis = rng.choice([l.name for l in s.workload.loops])
+            if factor is None:
+                from .schedule import UNROLL_FACTORS
+
+                opts = [f for f in UNROLL_FACTORS if f <= s.inner_tile(axis)]
+                factor = max(opts) if opts else 1
+            t = Unroll(str(axis), int(factor))
+        elif family == "ComputeLocation":
+            lv = kwargs.get("level", args[0] if args else 2)
+            t = ComputeLocation(int(lv))
+        elif family == "CacheWrite":
+            en = kwargs.get("enabled", args[0] if args else True)
+            t = CacheWrite(bool(en))
+        elif family == "CacheRead":
+            op = kwargs.get("operand", args[0] if args else None)
+            if op is None:
+                opts = [
+                    o.name
+                    for o in s.workload.operands
+                    if not o.is_output and o.name not in s.cache_reads
+                ]
+                if not opts:
+                    return None
+                op = rng.choice(opts)
+            t = CacheRead(str(op))
+        elif family == "Layout":
+            op = kwargs.get("operand", args[0] if args else None)
+            order = kwargs.get("order", args[1] if len(args) > 1 else "col")
+            if op is None:
+                op = rng.choice([o.name for o in s.workload.operands])
+            t = Layout(str(op), str(order))
+        else:
+            return None
+        t.apply(s)  # legality probe against the *current* state
+        return t
+    except (ScheduleError, ValueError, TypeError, IndexError):
+        return None
+
+
+def parse_response(
+    text: str, s: Schedule, rng: Optional[random.Random] = None
+) -> Proposal:
+    """Extract and validate the proposal list from raw LLM text.
+
+    Invalid mentions are dropped individually; `Proposal.fallback` is True
+    only when nothing validates (Appendix G).
+    """
+    rng = rng or random.Random(0)
+    reasoning = ""
+    m = re.search(r"Reasoning\s*:\s*(.*?)(?:Transformations to apply|$)",
+                  text, re.S | re.I)
+    if m:
+        reasoning = m.group(1).strip()
+    tail = None
+    m = re.search(r"Transformations to apply\s*:\s*(.*)", text, re.S | re.I)
+    if m:
+        tail = m.group(1)
+    if tail is None:
+        return Proposal([], reasoning, text, 0, 0)
+
+    transforms: list[Transform] = []
+    n_prop = n_invalid = 0
+    cur = s
+    for call in _CALL_RE.finditer(tail):
+        name = call.group(1).strip()
+        fam = _FAMILIES.get(name.lower())
+        if fam is None and name in (
+            "and", "then", "to", "apply", "the", "a", "with",
+        ):
+            continue
+        n_prop += 1
+        if fam is None or fam not in available_transforms(cur):
+            n_invalid += 1
+            continue
+        args, kwargs = _parse_args(call.group(3) or "")
+        t = _materialize(fam, args, kwargs, cur, rng)
+        if t is None:
+            n_invalid += 1
+            continue
+        transforms.append(t)
+        cur = t.apply(cur)
+    return Proposal(transforms, reasoning, text, n_prop, n_invalid)
+
+
+# ---------------------------------------------------------------------------
+# The reasoning engine tiers (Table 4 / Table 8 model zoo)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """Capability profile of one proposal model (Table 4 ablation axis)."""
+
+    name: str
+    context_depth: int        # how many ancestors the model actually uses
+    diagnoses: tuple[str, ...]  # enabled reasoning passes
+    invalid_name_rate: float  # P(emit an unknown transformation name)
+    param_sloppiness: float   # P(emit family without parameters)
+    plan_len: int             # max proposals per expansion
+
+ALL_DIAGNOSES = (
+    "vectorize", "parallel", "cache_tile", "mxu_align", "fusion",
+    "cache_write", "unroll", "layout", "stage", "credit",
+)
+
+MODEL_TIERS: dict[str, TierSpec] = {
+    # proprietary.  context_depth is the model's *capability* ceiling; the
+    # prompt's trace_depth (Table 5 knob) controls what is actually visible.
+    "gpt-4o-mini": TierSpec("gpt-4o-mini", 4, ALL_DIAGNOSES, 0.0, 0.05, 6),
+    "o1-mini": TierSpec("o1-mini", 4, ALL_DIAGNOSES, 0.0, 0.02, 6),
+    # large open
+    "llama3.3-70b": TierSpec("llama3.3-70b", 4, ALL_DIAGNOSES, 0.001, 0.05, 6),
+    "deepseek-r1-distill-32b": TierSpec(
+        "deepseek-r1-distill-32b", 3,
+        ("vectorize", "parallel", "cache_tile", "mxu_align", "fusion",
+         "cache_write", "unroll", "credit"),
+        0.002, 0.10, 5,
+    ),
+    # small open
+    "llama3.1-8b": TierSpec(
+        "llama3.1-8b", 1,
+        ("vectorize", "parallel", "unroll", "cache_tile"),
+        0.105, 0.30, 4,
+    ),
+    "deepseek-r1-distill-7b": TierSpec(
+        "deepseek-r1-distill-7b", 1,
+        ("vectorize", "parallel", "unroll"),
+        0.172, 0.40, 3,
+    ),
+}
+
+_FAKE_NAMES = ("LoopSwizzle", "AutoPack", "WarpShuffle", "Hoist", "Skew")
+
+
+class LLMBase:
+    """Interface: prompt text in, free text out (what an API returns)."""
+
+    name = "llm"
+
+    def complete(self, prompt: Prompt, rng: random.Random) -> str:
+        raise NotImplementedError
+
+
+class HeuristicReasonerLLM(LLMBase):
+    """Deterministic CoT stand-in for the paper's API models (DESIGN.md §4).
+
+    The reasoning below is the mechanized form of the paper's Appendix-A
+    example response: diagnose the dominant inefficiency from the program
+    text + hardware summary, do napkin math for the fix, and emit a
+    parameterized transformation sequence in the required output format.
+    """
+
+    def __init__(self, tier: str = "gpt-4o-mini"):
+        self.spec = MODEL_TIERS[tier]
+        self.name = tier
+
+    # -- diagnosis passes --------------------------------------------------
+    def complete(self, prompt: Prompt, rng: random.Random) -> str:
+        spec = self.spec
+        trace = prompt.trace[: spec.context_depth + 1]
+        s = trace[0].schedule
+        p = prompt.platform
+        w = s.workload
+        ideas: list[tuple[float, str, str]] = []  # (priority, rationale, call)
+
+        dtype = max(o.dtype_bytes for o in w.operands)
+        simd_elems = max(1, p.simd_bytes // dtype)
+        vec_axis = w.output.axes[-1]
+        inner_vec = s.tile_map[vec_axis][-1]
+
+        avoid, prefer = self._credit_assignment(trace)
+
+        # Bottleneck triage (napkin math over the prompt's hardware summary):
+        # compute ceiling vs. the compulsory-traffic memory floor decides
+        # which diagnosis families to prioritize.
+        est_compute = w.flops / max(p.peak_flops, 1.0)
+        min_bytes = sum(o.nbytes(w.loop_map) for o in w.operands)
+        est_mem = min_bytes / (p.mem_bw_gbs * 1e9)
+        mem_bound = est_mem > est_compute * 1.5
+        compute_families = {"Vectorize", "Parallel", "Unroll"}
+        memory_families = {"CacheRead", "CacheWrite", "Layout",
+                           "ComputeLocation"}
+
+        def add(prio: float, why: str, call: str, family: str):
+            if mem_bound and family in compute_families:
+                prio *= 0.35
+            if mem_bound and family in memory_families:
+                prio *= 1.8
+            if family in avoid:
+                prio *= 0.25
+            if family in prefer:
+                prio *= 1.5
+            ideas.append((prio, why, call))
+
+        if "cache_tile" in spec.diagnoses and mem_bound:
+            # memory-bound: the single most valuable move is to stream the
+            # largest operand exactly once — give every spatial axis that
+            # does NOT index it a trip count of 1 at the outer bands.
+            big = max((o for o in w.operands if not o.is_output),
+                      key=lambda o: o.nbytes(w.loop_map))
+            for l in w.spatial_loops:
+                if l.name in big.axes:
+                    continue
+                t = s.tile_map[l.name]
+                if t[0] * t[1] > 1:
+                    inner = max((d for d in divisors(l.extent) if d <= 16),
+                                default=1)
+                    dec = (1, 1, l.extent // inner, inner)
+                    add(9.8,
+                        f"workload is memory-bound (compulsory "
+                        f"{min_bytes / 1e6:.0f}MB at {p.mem_bw_gbs:.0f}GB/s "
+                        f"exceeds compute time); keep {big.name} streaming "
+                        f"once by collapsing outer {l.name} trips",
+                        f"TileSize(axis={l.name}, decision={list(dec)})",
+                        "TileSize")
+
+        if "mxu_align" in spec.diagnoses and p.mxu:
+            second = w.output.axes[-2] if len(w.output.axes) > 1 else None
+            if inner_vec % 128 != 0 and w.loop_map[vec_axis].extent >= 128:
+                dec = self._tile_decision(w, vec_axis, inner_target=128,
+                                          cache_target=512, p=p)
+                if dec:
+                    add(10.0,
+                        f"minor dim {vec_axis} tile {inner_vec} is not a "
+                        f"multiple of the 128-lane MXU; retile to x128",
+                        f"TileSize(axis={vec_axis}, decision={list(dec)})",
+                        "TileSize")
+            if second and s.tile_map[second][-1] % 8 != 0 \
+                    and w.loop_map[second].extent >= 8:
+                dec = self._tile_decision(w, second, inner_target=8,
+                                          cache_target=128, p=p)
+                if dec:
+                    add(9.0,
+                        f"second-minor {second} not sublane(8)-aligned",
+                        f"TileSize(axis={second}, decision={list(dec)})",
+                        "TileSize")
+
+        if "vectorize" in spec.diagnoses and not p.mxu:
+            if s.vector_width < simd_elems:
+                if inner_vec % simd_elems != 0:
+                    dec = self._tile_decision(
+                        w, vec_axis, inner_target=simd_elems * 4,
+                        cache_target=256, p=p)
+                    if dec:
+                        add(9.5,
+                            f"inner tile of {vec_axis} ({inner_vec}) cannot "
+                            f"hold a full {p.simd_bytes}B vector; retile so "
+                            f"the innermost tile is a multiple of "
+                            f"{simd_elems}",
+                            f"TileSize(axis={vec_axis}, "
+                            f"decision={list(dec)})", "TileSize")
+                        add(9.4, f"then vectorize {simd_elems} lanes",
+                            f"Vectorize(width={simd_elems})", "Vectorize")
+                else:
+                    add(9.5, f"vectorize the stride-1 {vec_axis} axis to "
+                        f"fill the {p.simd_bytes}B SIMD registers",
+                        f"Vectorize(width={simd_elems})", "Vectorize")
+
+        if "parallel" in spec.diagnoses and not p.mxu and p.cores > 1:
+            tasks = 1
+            for l in w.spatial_loops:
+                tasks *= s.tile_map[l.name][0]
+            if s.parallel_levels == 0:
+                if tasks < p.cores or tasks > p.cores * 64:
+                    axis = max(w.spatial_loops, key=lambda l: l.extent)
+                    dec = self._tile_decision(
+                        w, axis.name, inner_target=max(8, simd_elems),
+                        cache_target=64,
+                        grid_target=p.cores * 2, p=p)
+                    if dec:
+                        add(8.5,
+                            f"outer spatial trip count {tasks} mismatched to "
+                            f"{p.cores} cores; retile {axis.name} for "
+                            f"~{p.cores * 2} tasks",
+                            f"TileSize(axis={axis.name}, "
+                            f"decision={list(dec)})", "TileSize")
+                add(8.4, f"parallelize the outer tile loop across "
+                    f"{p.cores} cores", "Parallel(levels=1)", "Parallel")
+            elif tasks < p.cores:
+                add(7.0, "expose level-1 tiles as parallel tasks too",
+                    "Parallel(levels=2)", "Parallel")
+
+        if "fusion" in spec.diagnoses and w.epilogue_tensor_axes \
+                and s.compute_location < 0:
+            epi = math.prod(w.loop_map[a].extent
+                            for a in w.epilogue_tensor_axes) * dtype
+            add(9.0 if epi > p.cache_bytes else 5.0,
+                f"epilogue intermediate ({epi / 1e6:.1f}MB) is materialized "
+                f"through DRAM; fuse it at the L1 tile level to keep it "
+                f"on-chip", "ComputeLocation(level=2)", "ComputeLocation")
+
+        if "cache_tile" in spec.diagnoses:
+            foot = 0
+            for o in w.operands:
+                b = o.dtype_bytes
+                for a in o.axes:
+                    lvl = (SPATIAL_LEVELS if w.loop_map[a].kind == SPATIAL
+                           else REDUCTION_LEVELS)
+                    b *= math.prod(s.tile_map[a][2:]) \
+                        if w.loop_map[a].kind == SPATIAL \
+                        else s.tile_map[a][-1]
+                foot += b
+            if foot > p.cache_bytes * 0.7 or foot < p.cache_bytes * 0.01:
+                red = max(w.reduction_loops, key=lambda l: l.extent,
+                          default=None)
+                if red is not None and red.extent > 1:
+                    tgt = int(max(64, min(red.extent,
+                                          p.cache_bytes * 0.2
+                                          / max(1, dtype) ** 0.5)))
+                    dec = self._reduction_decision(w, red.name, tgt)
+                    if dec:
+                        add(8.0,
+                            f"cache-band working set {foot / 1e3:.0f}KB vs "
+                            f"{p.cache_bytes // 1024}KB cache; split "
+                            f"reduction {red.name} to block for reuse",
+                            f"TileSize(axis={red.name}, "
+                            f"decision={list(dec)})", "TileSize")
+                for l in sorted(w.spatial_loops, key=lambda x: -x.extent)[:2]:
+                    blk = math.prod(s.tile_map[l.name][2:])
+                    if l.extent >= 64 and (blk <= 2 or blk * dtype * 64
+                                           > p.cache_bytes):
+                        dec = self._tile_decision(
+                            w, l.name,
+                            inner_target=simd_elems if l.name == vec_axis
+                            else 8,
+                            cache_target=64, p=p)
+                        if dec:
+                            add(7.5,
+                                f"{l.name} has degenerate cache block "
+                                f"({blk}); retile for L2 reuse",
+                                f"TileSize(axis={l.name}, "
+                                f"decision={list(dec)})", "TileSize")
+
+        if "cache_write" in spec.diagnoses and not s.cache_write:
+            red_outer = math.prod(
+                s.tile_map[l.name][0] for l in w.reduction_loops
+            )
+            if red_outer > 1:
+                add(7.8, f"output tile revisited {red_outer}x across the "
+                    f"outer reduction; accumulate in scratch and write once",
+                    "CacheWrite(enabled=True)", "CacheWrite")
+
+        if "unroll" in spec.diagnoses:
+            ilp = math.prod(f for _, f in s.unroll) if s.unroll else 1
+            need = p.fma_latency * p.fma_pipes
+            if not p.mxu and ilp < need:
+                cands = [l for l in w.loops
+                         if s.tile_map[l.name][-1] >= 4]
+                if cands:
+                    ax = max(cands, key=lambda l: s.tile_map[l.name][-1])
+                    f = min(8, s.tile_map[ax.name][-1])
+                    f = 1 << int(math.log2(f))
+                    add(7.0,
+                        f"only {ilp} independent FMA chains vs latency x "
+                        f"pipes = {need}; unroll {ax.name} x{f} for ILP",
+                        f"Unroll(axis={ax.name}, factor={f})", "Unroll")
+
+        if "layout" in spec.diagnoses:
+            for o in w.operands:
+                if o.is_output or len(o.axes) < 2:
+                    continue
+                minor = o.axes if s.layout_map.get(o.name) != "col" else \
+                    o.axes[:-2] + (o.axes[-1], o.axes[-2])
+                run = s.tile_map[minor[-1]][-1]
+                alt = s.tile_map[minor[-2]][-1]
+                if run * o.dtype_bytes < p.cacheline_bytes \
+                        and alt > run * 2:
+                    order = "col" if s.layout_map.get(o.name) != "col" \
+                        else "row"
+                    add(6.0,
+                        f"operand {o.name} minor-axis run {run} wastes "
+                        f"cachelines; transpose its layout",
+                        f"Layout(operand={o.name}, order={order})", "Layout")
+
+        if "stage" in spec.diagnoses:
+            for o in w.operands:
+                if o.is_output or o.name in s.cache_reads:
+                    continue
+                run = s.tile_map[o.axes[-1]][-1]
+                if run * o.dtype_bytes < p.cacheline_bytes:
+                    add(5.5,
+                        f"stage {o.name} through scratch to repack strided "
+                        f"loads", f"CacheRead(operand={o.name})", "CacheRead")
+
+        # ---- assemble response --------------------------------------------
+        ideas.sort(key=lambda x: -x[0])
+        plan = ideas[: spec.plan_len]
+        if not plan:
+            # nothing diagnosed: structured local exploration — shift one
+            # tile boundary / fusion level instead of uniform-random jumps
+            # (an LLM near a good schedule proposes adjacent variants).
+            # Ancestor-score credit assignment biases which neighborhood to
+            # explore — this is where deeper historical traces pay off
+            # (Table 5): more visible (transform, delta) pairs -> a sharper
+            # prefer/avoid signal during plateau exploration.
+            moves = []
+            for prio, why, call in self._plateau_moves(s, p, rng):
+                fam = call.split("(")[0]
+                if fam in avoid:
+                    prio *= 0.2
+                if fam in prefer:
+                    prio *= 2.0
+                moves.append((prio + 0.01 * rng.random(), why, call))
+            moves.sort(key=lambda x: -x[0])
+            plan = moves[:2]
+
+        calls = []
+        for _, why, call in plan:
+            if rng.random() < spec.invalid_name_rate:
+                calls.append(rng.choice(_FAKE_NAMES))
+            elif rng.random() < spec.param_sloppiness:
+                calls.append(call.split("(")[0])  # bare family name
+            else:
+                calls.append(call)
+        reason = " ".join(f"({i + 1}) {why}." for i, (_, why, _) in
+                          enumerate(plan))
+        return f"Reasoning: {reason}\nTransformations to apply: " \
+               + ", ".join(calls) + "."
+
+    def _plateau_moves(
+        self, s: Schedule, p: Platform, rng: random.Random
+    ) -> list[tuple[float, str, str]]:
+        """Adjacent-schedule moves: shift one tile factor between levels,
+        nudge the fusion level, or flip an annotation."""
+        w = s.workload
+        moves: list[tuple[float, str, str]] = []
+        for l in w.loops:
+            dec = list(s.tile_map[l.name])
+            if len(dec) < 2:
+                continue
+            # move a factor of 2 between adjacent levels (both directions)
+            for i in range(len(dec) - 1):
+                if dec[i] % 2 == 0:
+                    d = dec.copy()
+                    d[i] //= 2
+                    d[i + 1] *= 2
+                    moves.append((
+                        1.0, f"shift a factor 2 of {l.name} inward",
+                        f"TileSize(axis={l.name}, decision={d})"))
+                if dec[i + 1] % 2 == 0:
+                    d = dec.copy()
+                    d[i + 1] //= 2
+                    d[i] *= 2
+                    moves.append((
+                        1.0, f"shift a factor 2 of {l.name} outward",
+                        f"TileSize(axis={l.name}, decision={d})"))
+        if w.epilogue_tensor_axes and s.compute_location >= 0:
+            alt = s.compute_location + rng.choice((-1, 1))
+            if 0 <= alt < SPATIAL_LEVELS:
+                moves.append((1.0, "nudge the fusion level",
+                              f"ComputeLocation(level={alt})"))
+        un = s.unroll_map
+        for l in w.loops:
+            f = un.get(l.name, 1)
+            if f * 2 <= s.tile_map[l.name][-1]:
+                moves.append((1.0, f"deepen {l.name} unroll",
+                              f"Unroll(axis={l.name}, factor={f * 2})"))
+        # re-split the hottest reduction against a target ladder
+        red = max(w.reduction_loops, key=lambda l: l.extent, default=None)
+        if red is not None and red.extent > 8:
+            tgt = rng.choice((32, 64, 128, 256, 512, 1024))
+            inner = max((d for d in divisors(red.extent) if d <= tgt),
+                        default=red.extent)
+            dec = (red.extent // inner, inner)
+            if dec != s.tile_map[red.name]:
+                moves.append((1.0, f"try a {inner}-wide {red.name} block",
+                              f"TileSize(axis={red.name}, "
+                              f"decision={list(dec)})"))
+        for o in w.operands:
+            if not o.is_output and o.name not in s.cache_reads:
+                moves.append((0.8, f"stage {o.name} through scratch",
+                              f"CacheRead(operand={o.name})"))
+        rng.shuffle(moves)
+        return moves if moves else [(
+            1.0, "flip scratch accumulation",
+            f"CacheWrite(enabled={not s.cache_write})")]
+
+    # -- context credit assignment (deeper trace -> better bias, Table 5) ---
+    def _credit_assignment(
+        self, trace: Sequence[TraceEntry]
+    ) -> tuple[set, set]:
+        avoid: set = set()
+        prefer: set = set()
+        for child, parent in zip(trace[:-1], trace[1:]):
+            new = child.schedule.history[len(parent.schedule.history):]
+            delta = parent.latency_s - child.latency_s  # >0 == improvement
+            for desc in new:
+                fam = desc.split("(")[0]
+                if delta > 0.02 * parent.latency_s:
+                    prefer.add(fam)
+                elif delta < -0.02 * parent.latency_s:
+                    avoid.add(fam)
+        return avoid - prefer, prefer
+
+    # -- napkin-math tile synthesis ------------------------------------------
+    @staticmethod
+    def _tile_decision(
+        w, axis: str, inner_target: int, cache_target: int, p: Platform,
+        grid_target: Optional[int] = None,
+    ) -> Optional[tuple[int, ...]]:
+        ext = w.loop_map[axis].extent
+        divs = divisors(ext)
+        inner = max((d for d in divs if d <= inner_target), default=1)
+        # prefer exact multiples of the target alignment
+        aligned = [d for d in divs if d % inner_target == 0]
+        if aligned:
+            inner = min(aligned)
+        rem = ext // inner
+        rdivs = divisors(rem)
+        cache = max((d for d in rdivs if inner * d <= cache_target),
+                    default=1)
+        rem2 = rem // cache
+        if grid_target:
+            r2d = divisors(rem2)
+            grid = max((d for d in r2d if d <= grid_target), default=rem2)
+            par = rem2 // grid
+            dec = (grid, par, cache, inner)
+        else:
+            dec = (rem2, 1, cache, inner)
+        if math.prod(dec) != ext:
+            return None
+        return dec
+
+    @staticmethod
+    def _reduction_decision(w, axis: str, inner_target: int) \
+            -> Optional[tuple[int, ...]]:
+        ext = w.loop_map[axis].extent
+        inner = max((d for d in divisors(ext) if d <= inner_target),
+                    default=ext)
+        return (ext // inner, inner)
+
+
+class RandomLLM(LLMBase):
+    """Null proposal model: emits a random legal transformation mention
+    (used to sanity-check that the *reasoning*, not the plumbing, drives
+    the sample-efficiency gap)."""
+
+    name = "random"
+
+    def complete(self, prompt: Prompt, rng: random.Random) -> str:
+        s = prompt.trace[0].schedule
+        t = random_transform(rng, s)
+        return f"Reasoning: random exploration.\n" \
+               f"Transformations to apply: {t.describe()}."
+
+
+class APILLM(LLMBase):
+    """OpenAI-compatible chat-completions adapter (real deployments).
+
+    Reads OPENAI_BASE_URL / OPENAI_API_KEY / REPRO_LLM_MODEL from the
+    environment.  Never invoked in CI (this container is offline); the
+    HeuristicReasonerLLM substitutes behind the same interface.
+    """
+
+    def __init__(self, model: Optional[str] = None, timeout_s: float = 60.0):
+        self.model = model or os.environ.get("REPRO_LLM_MODEL", "gpt-4o-mini")
+        self.base = os.environ.get(
+            "OPENAI_BASE_URL", "https://api.openai.com/v1"
+        )
+        self.key = os.environ.get("OPENAI_API_KEY", "")
+        self.timeout_s = timeout_s
+        self.name = f"api:{self.model}"
+
+    def complete(self, prompt: Prompt, rng: random.Random) -> str:
+        body = json.dumps({
+            "model": self.model,
+            "messages": [{"role": "user", "content": prompt.text}],
+            "temperature": 0.7,
+            "seed": rng.randrange(2**31),
+        }).encode()
+        req = urllib.request.Request(
+            f"{self.base}/chat/completions",
+            data=body,
+            headers={
+                "Content-Type": "application/json",
+                "Authorization": f"Bearer {self.key}",
+            },
+        )
+        with urllib.request.urlopen(req, timeout=self.timeout_s) as r:
+            out = json.load(r)
+        return out["choices"][0]["message"]["content"]
+
+
+def make_llm(name: str) -> LLMBase:
+    if name in MODEL_TIERS:
+        return HeuristicReasonerLLM(name)
+    if name == "random":
+        return RandomLLM()
+    if name.startswith("api:"):
+        return APILLM(name.split(":", 1)[1])
+    raise KeyError(f"unknown LLM {name!r}; known: {sorted(MODEL_TIERS)}")
+
+
+# ---------------------------------------------------------------------------
+# The proposal engine wrapper used by MCTS expansion
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FallbackStats:
+    expansions: int = 0
+    fallbacks: int = 0
+    proposed: int = 0
+    invalid: int = 0
+
+    @property
+    def fallback_rate(self) -> float:
+        return self.fallbacks / self.expansions if self.expansions else 0.0
+
+    @property
+    def invalid_rate(self) -> float:
+        return self.invalid / self.proposed if self.proposed else 0.0
+
+
+class LLMProposer:
+    """Prompt -> LLM -> parse -> validate, with Appendix-G fallback stats."""
+
+    def __init__(self, llm: LLMBase, platform: Platform, trace_depth: int = 2):
+        self.llm = llm
+        self.platform = platform
+        self.trace_depth = trace_depth
+        self.stats = FallbackStats()
+
+    def propose(
+        self, trace: Sequence[TraceEntry], rng: random.Random
+    ) -> Proposal:
+        prompt = build_prompt(trace, self.platform, self.trace_depth)
+        text = self.llm.complete(prompt, rng)
+        prop = parse_response(text, trace[0].schedule, rng)
+        self.stats.expansions += 1
+        self.stats.proposed += prop.n_proposed
+        self.stats.invalid += prop.n_invalid
+        if prop.fallback:
+            self.stats.fallbacks += 1
+        return prop

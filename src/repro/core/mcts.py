@@ -1,0 +1,247 @@
+"""Monte Carlo tree search over transformation sequences (paper §3.2).
+
+Implements the paper's planner exactly:
+
+* **Selection** — UCT ``W/N + c sqrt(ln N_parent / N)`` with ``c = sqrt(2)``,
+  descending only through fully-expanded nodes (branching factor ``B = 2``
+  by default, Table 6 ablates ``B = 4``).
+* **Expansion** — the LLM proposer is queried with the hierarchical context
+  (selected node + ancestors); its validated transformation sequence is
+  applied to produce ONE new program variant.  If every proposal is invalid
+  the expansion falls back to the default random policy (Appendix G).  A
+  re-derived identical program is not re-added (acyclicity, §3.2).
+* **Rollout** — a randomized sequence of legal transformations is applied to
+  the new node and scored by the learned surrogate ``f̂`` (never the real
+  objective: hardware measurement inside rollouts is what the paper calls
+  prohibitively expensive).  Until the surrogate has enough observations the
+  node's own measured reward is used.
+* **Backpropagation** — ``W += r``, ``N += 1`` along the path to the root.
+
+Sample accounting matches the paper's x-axis: one *sample* = one evaluated
+transformation proposal, i.e. one oracle measurement of a new tree node.
+Rollout surrogate queries are free.
+
+Beyond-paper options (all default OFF; flipped on in EXPERIMENTS.md §Perf):
+  * ``transposition_table`` — share statistics between identical programs
+    reached by different transformation orders.
+  * ``prior_weight`` — PUCT-style prior from the surrogate on fresh children.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Callable, Optional, Sequence
+
+from .cost_model import HardwareOracle, SurrogateModel
+from .llm import LLMProposer, Proposal, TraceEntry
+from .schedule import Schedule, ScheduleError, initial_schedule, random_transform
+
+
+@dataclasses.dataclass
+class Node:
+    schedule: Schedule
+    parent: Optional["Node"]
+    latency_s: float
+    speedup: float
+    W: float = 0.0
+    N: int = 0
+    children: list = dataclasses.field(default_factory=list)
+    prior: float = 0.0
+
+    @property
+    def depth(self) -> int:
+        d, n = 0, self
+        while n.parent is not None:
+            d, n = d + 1, n.parent
+        return d
+
+    def ancestors(self) -> list["Node"]:
+        """[self, parent, grandparent, ...] up to the root."""
+        out, n = [], self
+        while n is not None:
+            out.append(n)
+            n = n.parent
+        return out
+
+
+@dataclasses.dataclass
+class SearchCurve:
+    """Best-so-far speedup as a function of evaluated samples (Fig. 3)."""
+
+    points: list  # (samples, best_speedup)
+
+    def at(self, samples: int) -> float:
+        best = 1.0
+        for s, v in self.points:
+            if s <= samples:
+                best = v
+            else:
+                break
+        return best
+
+    def samples_to_reach(self, speedup: float) -> Optional[int]:
+        for s, v in self.points:
+            if v >= speedup:
+                return s
+        return None
+
+
+class MCTS:
+    """UCT tree search with (optionally) LLM-guided expansion."""
+
+    def __init__(
+        self,
+        workload,
+        oracle: HardwareOracle,
+        proposer: Optional[LLMProposer] = None,
+        branching: int = 2,
+        c_uct: float = math.sqrt(2.0),
+        rollout_depth: int = 2,
+        max_depth: int = 24,
+        seed: int = 0,
+        surrogate: Optional[SurrogateModel] = None,
+        transposition_table: bool = False,
+        prior_weight: float = 0.0,
+    ):
+        self.workload = workload
+        self.oracle = oracle
+        self.proposer = proposer
+        self.branching = branching
+        self.c_uct = c_uct
+        self.rollout_depth = rollout_depth
+        self.max_depth = max_depth
+        self.rng = random.Random(seed)
+        self.surrogate = surrogate if surrogate is not None else SurrogateModel()
+        self.transposition_table = transposition_table
+        self.prior_weight = prior_weight
+
+        s0 = initial_schedule(workload)
+        self.baseline_latency = oracle.measure(s0)
+        self.root = Node(s0, None, self.baseline_latency, 1.0)
+        self.surrogate.observe(s0, self.baseline_latency)
+        self._seen: dict = {s0.key(): self.root}
+        self.samples = 0
+        self.best: Node = self.root
+        self.curve: list = []
+
+    # -- public --------------------------------------------------------------
+    def search(self, budget_samples: int) -> SearchCurve:
+        guard = 0
+        while self.samples < budget_samples and guard < budget_samples * 20:
+            guard += 1
+            self.step()
+        return SearchCurve(list(self.curve))
+
+    def step(self) -> Optional[Node]:
+        leaf = self._select()
+        child = self._expand(leaf)
+        if child is None:
+            return None
+        reward = self._rollout(child)
+        self._backprop(child, reward)
+        return child
+
+    # -- phases ----------------------------------------------------------------
+    def _uct(self, node: Node, parent: Node) -> float:
+        exploit = node.W / node.N if node.N else 0.0
+        explore = self.c_uct * math.sqrt(
+            math.log(max(parent.N, 1)) / node.N if node.N else 1.0
+        )
+        return exploit + explore + self.prior_weight * node.prior / (1 + node.N)
+
+    def _select(self) -> Node:
+        node = self.root
+        while len(node.children) >= self.branching and node.children \
+                and node.depth < self.max_depth:
+            node = max(node.children, key=lambda ch: self._uct(ch, node))
+        return node
+
+    def _expand(self, node: Node) -> Optional[Node]:
+        """Produce one new program variant below `node` (1 sample)."""
+        proposal: Optional[Proposal] = None
+        if self.proposer is not None:
+            trace = [
+                TraceEntry(n.schedule, n.latency_s, n.speedup)
+                for n in node.ancestors()
+            ]
+            proposal = self.proposer.propose(trace, self.rng)
+
+        new_sched: Optional[Schedule] = None
+        if proposal is not None and not proposal.fallback:
+            s = node.schedule
+            try:
+                for t in proposal.transforms:
+                    s = t.apply(s)
+                new_sched = s
+            except ScheduleError:
+                new_sched = None
+        if new_sched is None or new_sched.key() in self._seen:
+            # default expansion policy (also the Appendix-G fallback path)
+            for _ in range(16):
+                try:
+                    s = node.schedule
+                    for _ in range(self.rng.randint(1, 3)):
+                        s = random_transform(self.rng, s).apply(s)
+                except ScheduleError:
+                    continue
+                if s.key() not in self._seen:
+                    new_sched = s
+                    break
+            else:
+                return None  # exhausted: nothing new reachable from here
+
+        if new_sched.key() in self._seen:
+            if not self.transposition_table:
+                return None
+            # transposition: merge statistics instead of duplicating
+            twin = self._seen[new_sched.key()]
+            self._backprop(twin, twin.W / max(1, twin.N))
+            return None
+
+        latency = self.oracle.measure(new_sched)
+        self.samples += 1
+        speedup = self.baseline_latency / latency
+        child = Node(new_sched, node, latency, speedup)
+        if self.prior_weight:
+            pred = self.surrogate.predict(new_sched)
+            if pred is not None:
+                child.prior = self._reward_from_latency(pred)
+        node.children.append(child)
+        self._seen[new_sched.key()] = child
+        self.surrogate.observe(new_sched, latency)
+        if latency < self.best.latency_s:
+            self.best = child
+        self.curve.append((self.samples, self.best.speedup))
+        return child
+
+    def _rollout(self, node: Node) -> float:
+        """Randomized continuation scored by the surrogate (paper Fig. 2b)."""
+        s = node.schedule
+        for _ in range(self.rollout_depth):
+            try:
+                s = random_transform(self.rng, s).apply(s)
+            except ScheduleError:
+                break
+        pred = self.surrogate.predict(s)
+        if pred is None:
+            # surrogate undertrained: fall back to the node's own measurement
+            return self._reward_from_latency(node.latency_s)
+        # noisy but informative proxy; never consumes a sample
+        return self._reward_from_latency(pred)
+
+    def _reward_from_latency(self, latency_s: float) -> float:
+        """Map latency to a bounded reward in (0, 1), normalized against the
+        best speedup found so far — keeps UCT discriminating even when
+        speedups grow to 2-3 orders of magnitude (a fixed normalizer
+        saturates and the tree policy degenerates to uniform)."""
+        su = self.baseline_latency / max(latency_s, 1e-12)
+        ref = max(1.0, self.best.speedup if self.best else 1.0)
+        return su / (su + ref)
+
+    def _backprop(self, node: Node, reward: float) -> None:
+        n: Optional[Node] = node
+        while n is not None:
+            n.W += reward
+            n.N += 1
+            n = n.parent

@@ -1,0 +1,448 @@
+"""Schedule state + the transformation action space `O` (paper §2, §3).
+
+A `Schedule` is the MDP state: a program variant obtained by applying a
+sequence of transformations to the workload's initial loop nest.  Transformations
+mirror the paper's set (TileSize, Parallel, Unroll, ComputeLocation — Appendix A)
+extended with the standard TVM/MetaSchedule family the paper draws from
+(Vectorize, CacheRead/CacheWrite, Layout), re-targeted at the TPU decision space
+(VMEM block shapes, MXU/VPU alignment, DMA staging) per DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Iterable, Mapping, Optional, Sequence
+
+from .workloads import REDUCTION, SPATIAL, Loop, Workload
+
+
+class ScheduleError(ValueError):
+    """An illegal transformation application."""
+
+
+# Number of tile levels. Spatial axes use 4 (MetaSchedule's S-S-R-S-R-S layout
+# collapses to 4 effective spatial tiles on TPU: grid / parallel / vmem / reg).
+SPATIAL_LEVELS = 4
+REDUCTION_LEVELS = 2
+
+VECTOR_WIDTHS = (1, 2, 4, 8, 16, 32, 64, 128)
+UNROLL_FACTORS = (1, 2, 4, 8, 16)
+
+
+def _factorize(n: int) -> list[int]:
+    out, d = [], 2
+    while d * d <= n:
+        while n % d == 0:
+            out.append(d)
+            n //= d
+        d += 1
+    if n > 1:
+        out.append(n)
+    return out
+
+
+def sample_perfect_tile(rng: random.Random, extent: int, parts: int) -> tuple[int, ...]:
+    """Random factorization of `extent` into `parts` factors (product == extent)."""
+    factors = [1] * parts
+    for p in _factorize(extent):
+        factors[rng.randrange(parts)] *= p
+    return tuple(factors)
+
+
+def divisors(n: int, limit: int = 10**9) -> list[int]:
+    out = [d for d in range(1, min(n, limit) + 1) if n % d == 0]
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Immutable schedule state (one node of the search tree)."""
+
+    workload: Workload
+    # axis name -> tile split, outermost..innermost, product == extent.
+    tiles: tuple[tuple[str, tuple[int, ...]], ...]
+    # number of outermost spatial tile levels fused & parallelized (0..2).
+    parallel_levels: int = 1
+    # innermost-axis vector width (VPU lanes on TPU, SIMD on CPU profiles).
+    vector_width: int = 1
+    # axis name -> unroll factor applied to its innermost tile.
+    unroll: tuple[tuple[str, int], ...] = ()
+    # Fusion depth of the epilogue (softmax / activation): -1 = materialized at
+    # root (extra memory round-trip), k >= 0 = fused at spatial tile level k.
+    compute_location: int = -1
+    # Accumulate output tile in scratch (VMEM/L1) and write once at the end.
+    cache_write: bool = False
+    # Operands staged through scratch (explicit DMA on TPU, L1 blocking on CPU).
+    cache_reads: tuple[str, ...] = ()
+    # operand name -> "row" | "col" (col = transposed copy for contiguous loads)
+    layouts: tuple[tuple[str, str], ...] = ()
+    # Applied transformation sequence S_i (strings, for prompts & provenance).
+    history: tuple[str, ...] = ()
+
+    # -- views ------------------------------------------------------------
+    @property
+    def tile_map(self) -> dict[str, tuple[int, ...]]:
+        return dict(self.tiles)
+
+    @property
+    def unroll_map(self) -> dict[str, int]:
+        return dict(self.unroll)
+
+    @property
+    def layout_map(self) -> dict[str, str]:
+        return dict(self.layouts)
+
+    def tile_of(self, axis: str) -> tuple[int, ...]:
+        return self.tile_map[axis]
+
+    def inner_tile(self, axis: str) -> int:
+        return self.tile_map[axis][-1]
+
+    def key(self) -> tuple:
+        """Structural identity (used for the acyclicity check: a re-derived
+        identical program is not re-added to the tree, paper §3.2)."""
+        return (
+            self.workload.name, self.tiles, self.parallel_levels,
+            self.vector_width, tuple(sorted(self.unroll)),
+            self.compute_location, self.cache_write,
+            tuple(sorted(self.cache_reads)), tuple(sorted(self.layouts)),
+        )
+
+    # -- rendering (prompt serialization, paper Appendix A style) ----------
+    def render(self) -> str:
+        w = self.workload
+        lines = [f"# workload {w.name}: {w.description or 'tensor program'}"]
+        grids = []
+        for lvl in range(SPATIAL_LEVELS):
+            dims = [
+                f"{l.name}_{lvl}={self.tile_map[l.name][lvl]}"
+                for l in w.spatial_loops
+            ]
+            grids.append(f"for {', '.join(dims)}" + (" [parallel]" if lvl < self.parallel_levels else ""))
+        for lvl in range(REDUCTION_LEVELS):
+            dims = [
+                f"{l.name}_r{lvl}={self.tile_map[l.name][lvl]}"
+                for l in w.reduction_loops
+            ]
+            grids.append(f"for {', '.join(dims)}")
+        lines += [("  " * i) + g for i, g in enumerate(grids)]
+        body = "  " * len(grids)
+        lines.append(f"{body}compute {w.output.name}[...]  # vector_width={self.vector_width}")
+        if self.unroll:
+            lines.append(f"{body}# unroll: {dict(self.unroll)}")
+        lines.append(
+            f"{body}# epilogue at level {self.compute_location}"
+            f" cache_write={self.cache_write} cache_reads={list(self.cache_reads)}"
+            f" layouts={dict(self.layouts)}"
+        )
+        return "\n".join(lines)
+
+
+def initial_schedule(workload: Workload) -> Schedule:
+    """The unoptimized program p_0: trivial tiles, no annotations."""
+    tiles = []
+    for l in workload.loops:
+        levels = SPATIAL_LEVELS if l.kind == SPATIAL else REDUCTION_LEVELS
+        tiles.append((l.name, (l.extent,) + (1,) * (levels - 1)))
+    return Schedule(workload=workload, tiles=tuple(tiles), parallel_levels=0)
+
+
+# ---------------------------------------------------------------------------
+# Transformations (the action space O)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Transform:
+    """Base class: a function o : P -> P (paper §2)."""
+
+    name: str = dataclasses.field(init=False, default="Transform")
+
+    def apply(self, s: Schedule) -> Schedule:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+
+def _with_history(s: Schedule, desc: str, **changes) -> Schedule:
+    return dataclasses.replace(s, history=s.history + (desc,), **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSize(Transform):
+    axis: str
+    decision: tuple[int, ...]
+    name: str = dataclasses.field(init=False, default="TileSize")
+
+    def describe(self) -> str:
+        return f"TileSize({self.axis}, decision={list(self.decision)})"
+
+    def apply(self, s: Schedule) -> Schedule:
+        loops = s.workload.loop_map
+        if self.axis not in loops:
+            raise ScheduleError(f"unknown axis {self.axis!r}")
+        loop = loops[self.axis]
+        levels = SPATIAL_LEVELS if loop.kind == SPATIAL else REDUCTION_LEVELS
+        if len(self.decision) != levels:
+            raise ScheduleError(
+                f"axis {self.axis} needs {levels} tile levels, got {len(self.decision)}")
+        if math.prod(self.decision) != loop.extent:
+            raise ScheduleError(
+                f"tile product {math.prod(self.decision)} != extent {loop.extent}")
+        if any(f < 1 for f in self.decision):
+            raise ScheduleError("tile factors must be >= 1")
+        tiles = tuple(
+            (a, self.decision if a == self.axis else t) for a, t in s.tiles
+        )
+        out = _with_history(s, self.describe(), tiles=tiles)
+        # Re-validate dependent annotations; clamp rather than fail (TVM would
+        # re-sample dependent decisions).
+        inner = out.inner_tile(self.axis)
+        un = dict(out.unroll)
+        if self.axis in un and un[self.axis] > inner:
+            un[self.axis] = max(f for f in UNROLL_FACTORS if f <= inner)
+            out = dataclasses.replace(out, unroll=tuple(sorted(un.items())))
+        vec_axis = _vector_axis(out.workload)
+        if self.axis == vec_axis and out.vector_width > 1:
+            vw = out.vector_width
+            while vw > 1 and inner % vw != 0:
+                vw //= 2
+            out = dataclasses.replace(out, vector_width=vw)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallel(Transform):
+    levels: int
+    name: str = dataclasses.field(init=False, default="Parallel")
+
+    def describe(self) -> str:
+        return f"Parallel(levels={self.levels})"
+
+    def apply(self, s: Schedule) -> Schedule:
+        if not 0 <= self.levels <= 2:
+            raise ScheduleError("parallel levels must be in [0, 2]")
+        return _with_history(s, self.describe(), parallel_levels=self.levels)
+
+
+def _vector_axis(w: Workload) -> str:
+    """The axis eligible for vectorization: innermost dim of the output."""
+    return w.output.axes[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Vectorize(Transform):
+    width: int
+    name: str = dataclasses.field(init=False, default="Vectorize")
+
+    def describe(self) -> str:
+        return f"Vectorize(width={self.width})"
+
+    def apply(self, s: Schedule) -> Schedule:
+        if self.width not in VECTOR_WIDTHS:
+            raise ScheduleError(f"vector width {self.width} not in {VECTOR_WIDTHS}")
+        axis = _vector_axis(s.workload)
+        if s.inner_tile(axis) % self.width != 0:
+            raise ScheduleError(
+                f"vector width {self.width} does not divide inner tile "
+                f"{s.inner_tile(axis)} of axis {axis}")
+        return _with_history(s, self.describe(), vector_width=self.width)
+
+
+@dataclasses.dataclass(frozen=True)
+class Unroll(Transform):
+    axis: str
+    factor: int
+    name: str = dataclasses.field(init=False, default="Unroll")
+
+    def describe(self) -> str:
+        return f"Unroll({self.axis}, factor={self.factor})"
+
+    def apply(self, s: Schedule) -> Schedule:
+        if self.factor not in UNROLL_FACTORS:
+            raise ScheduleError(f"unroll factor {self.factor} not in {UNROLL_FACTORS}")
+        if self.axis not in s.workload.loop_map:
+            raise ScheduleError(f"unknown axis {self.axis!r}")
+        if self.factor > s.inner_tile(self.axis):
+            raise ScheduleError(
+                f"unroll {self.factor} exceeds inner tile {s.inner_tile(self.axis)}")
+        un = dict(s.unroll)
+        un[self.axis] = self.factor
+        return _with_history(s, self.describe(), unroll=tuple(sorted(un.items())))
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeLocation(Transform):
+    level: int  # -1 = root (materialize), 0..SPATIAL_LEVELS-1 = fused depth
+    name: str = dataclasses.field(init=False, default="ComputeLocation")
+
+    def describe(self) -> str:
+        return f"ComputeLocation(level={self.level})"
+
+    def apply(self, s: Schedule) -> Schedule:
+        if not s.workload.epilogue_tensor_axes:
+            raise ScheduleError("workload has no fusable epilogue")
+        if not -1 <= self.level < SPATIAL_LEVELS:
+            raise ScheduleError(f"compute location {self.level} out of range")
+        return _with_history(s, self.describe(), compute_location=self.level)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheWrite(Transform):
+    enabled: bool
+    name: str = dataclasses.field(init=False, default="CacheWrite")
+
+    def describe(self) -> str:
+        return f"CacheWrite(enabled={self.enabled})"
+
+    def apply(self, s: Schedule) -> Schedule:
+        return _with_history(s, self.describe(), cache_write=self.enabled)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheRead(Transform):
+    operand: str
+    name: str = dataclasses.field(init=False, default="CacheRead")
+
+    def describe(self) -> str:
+        return f"CacheRead({self.operand})"
+
+    def apply(self, s: Schedule) -> Schedule:
+        names = {t.name for t in s.workload.operands if not t.is_output}
+        if self.operand not in names:
+            raise ScheduleError(f"unknown input operand {self.operand!r}")
+        if self.operand in s.cache_reads:
+            raise ScheduleError(f"{self.operand} already cached")
+        return _with_history(
+            s, self.describe(), cache_reads=s.cache_reads + (self.operand,))
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout(Transform):
+    operand: str
+    order: str  # "row" | "col"
+    name: str = dataclasses.field(init=False, default="Layout")
+
+    def describe(self) -> str:
+        return f"Layout({self.operand}, order={self.order})"
+
+    def apply(self, s: Schedule) -> Schedule:
+        names = {t.name for t in s.workload.operands}
+        if self.operand not in names:
+            raise ScheduleError(f"unknown operand {self.operand!r}")
+        if self.order not in ("row", "col"):
+            raise ScheduleError(f"order must be row|col, got {self.order!r}")
+        lay = dict(s.layouts)
+        lay[self.operand] = self.order
+        return _with_history(s, self.describe(), layouts=tuple(sorted(lay.items())))
+
+
+TRANSFORM_NAMES = (
+    "TileSize", "Parallel", "Vectorize", "Unroll", "ComputeLocation",
+    "CacheWrite", "CacheRead", "Layout",
+)
+
+
+def available_transforms(s: Schedule) -> list[str]:
+    """Names of transformation families legal in state `s` (shown to the LLM)."""
+    out = ["TileSize", "Parallel", "Vectorize", "Unroll", "CacheWrite",
+           "CacheRead", "Layout"]
+    if s.workload.epilogue_tensor_axes:
+        out.insert(4, "ComputeLocation")
+    return out
+
+
+def random_transform(rng: random.Random, s: Schedule) -> Transform:
+    """Uniform random legal transformation (default expansion / rollout policy)."""
+    w = s.workload
+    for _ in range(64):
+        kind = rng.choice(available_transforms(s))
+        try:
+            if kind == "TileSize":
+                loop = rng.choice(w.loops)
+                levels = SPATIAL_LEVELS if loop.kind == SPATIAL else REDUCTION_LEVELS
+                t = TileSize(loop.name, sample_perfect_tile(rng, loop.extent, levels))
+            elif kind == "Parallel":
+                t = Parallel(rng.randint(0, 2))
+            elif kind == "Vectorize":
+                axis = _vector_axis(w)
+                inner = s.inner_tile(axis)
+                opts = [v for v in VECTOR_WIDTHS if inner % v == 0]
+                t = Vectorize(rng.choice(opts))
+            elif kind == "Unroll":
+                loop = rng.choice(w.loops)
+                opts = [f for f in UNROLL_FACTORS if f <= s.inner_tile(loop.name)]
+                t = Unroll(loop.name, rng.choice(opts))
+            elif kind == "ComputeLocation":
+                t = ComputeLocation(rng.randint(-1, SPATIAL_LEVELS - 1))
+            elif kind == "CacheWrite":
+                t = CacheWrite(not s.cache_write)
+            elif kind == "CacheRead":
+                opts = [o.name for o in w.operands
+                        if not o.is_output and o.name not in s.cache_reads]
+                if not opts:
+                    continue
+                t = CacheRead(rng.choice(opts))
+            else:  # Layout
+                op = rng.choice([o.name for o in w.operands])
+                t = Layout(op, rng.choice(("row", "col")))
+            t.apply(s)  # legality probe
+            return t
+        except ScheduleError:
+            continue
+    raise ScheduleError("could not sample a legal transformation")
+
+
+def random_schedule(rng: random.Random, s0: Schedule, n_transforms: int) -> Schedule:
+    s = s0
+    for _ in range(n_transforms):
+        s = random_transform(rng, s).apply(s)
+    return s
+
+
+def parse_transform(
+    text: str, s: Schedule, rng: Optional[random.Random] = None
+) -> Optional[Transform]:
+    """Parse one transformation mention (possibly parameterless, e.g. the bare
+    "TileSize" the paper's prompt format allows) into a concrete legal Transform.
+
+    Returns None if the mention names no known transformation — the caller
+    implements the Appendix G fallback policy.
+    """
+    rng = rng or random.Random(0)
+    token = text.strip().strip(".,;:()[]").lower()
+    canon = {n.lower(): n for n in TRANSFORM_NAMES}
+    # accept loose mentions like "tile", "tiling", "vectorization"
+    aliases = {
+        "tile": "TileSize", "tiling": "TileSize", "tilesize": "TileSize",
+        "split": "TileSize", "parallel": "Parallel", "parallelize": "Parallel",
+        "vectorize": "Vectorize", "vectorization": "Vectorize",
+        "unroll": "Unroll", "unrolling": "Unroll",
+        "computelocation": "ComputeLocation", "fuse": "ComputeLocation",
+        "fusion": "ComputeLocation", "computeat": "ComputeLocation",
+        "cachewrite": "CacheWrite", "cacheread": "CacheRead",
+        "layout": "Layout", "layouttransform": "Layout",
+    }
+    kind = canon.get(token) or aliases.get(token)
+    if kind is None:
+        return None
+    if kind not in available_transforms(s):
+        return None
+    # Parameterless mention -> sample a legal instance of that family.
+    for _ in range(32):
+        try:
+            t = random_transform(rng, s)
+        except ScheduleError:
+            return None
+        if t.name == kind:
+            return t
+    # direct sampling fallback for rarely-hit families
+    for _ in range(32):
+        try:
+            t = random_transform(rng, s)
+            if t.name == kind:
+                return t
+        except ScheduleError:
+            continue
+    return None

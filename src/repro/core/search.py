@@ -1,0 +1,164 @@
+"""Unified search driver: the three strategies the paper compares (§4.1).
+
+  * ``evolutionary``  — TVM MetaSchedule-style evolutionary search
+  * ``mcts``          — MCTS with the default (random) expansion policy
+  * ``llm-mcts``      — the REASONING COMPILER: LLM-guided MCTS
+
+plus the paper's measurement protocol: best-so-far speedup vs. evaluated
+samples, averaged over repeats, with sample-efficiency summaries
+(sample reduction and speedup/#samples efficiency gain, Tables 1-2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+from typing import Optional, Sequence
+
+from .cost_model import HardwareOracle, Platform, get_platform
+from .evolutionary import EvolutionaryConfig, EvolutionarySearch
+from .llm import FallbackStats, LLMProposer, make_llm
+from .mcts import MCTS, SearchCurve
+from .schedule import Schedule
+from .workloads import Workload, get_workload
+
+METHODS = ("evolutionary", "mcts", "llm-mcts")
+
+
+@dataclasses.dataclass
+class SearchResult:
+    workload: str
+    platform: str
+    method: str
+    curve: SearchCurve
+    best_speedup: float
+    best_schedule: Optional[Schedule]
+    baseline_latency_s: float
+    best_latency_s: float
+    samples: int
+    fallback: Optional[FallbackStats] = None
+    llm: Optional[str] = None
+
+
+def run_search(
+    workload,
+    platform: str | Platform = "core-i9",
+    method: str = "llm-mcts",
+    budget: int = 200,
+    seed: int = 0,
+    llm: str = "gpt-4o-mini",
+    trace_depth: int = 2,
+    branching: int = 2,
+    oracle: Optional[HardwareOracle] = None,
+    **mcts_kwargs,
+) -> SearchResult:
+    """Run one optimization strategy on one workload for `budget` samples."""
+    if isinstance(workload, str):
+        workload = get_workload(workload)
+    plat = platform if isinstance(platform, Platform) else get_platform(platform)
+    oracle = oracle or HardwareOracle(plat)
+
+    if method == "evolutionary":
+        es = EvolutionarySearch(workload, oracle, seed=seed)
+        curve = es.search(budget)
+        best_t, best_s = es.best
+        return SearchResult(
+            workload.name, plat.name, method, curve,
+            es.baseline_latency / best_t, best_s, es.baseline_latency,
+            best_t, es.samples,
+        )
+
+    proposer = None
+    llm_name = None
+    if method == "llm-mcts":
+        proposer = LLMProposer(make_llm(llm), plat, trace_depth=trace_depth)
+        llm_name = llm
+    elif method != "mcts":
+        raise ValueError(f"unknown method {method!r}; known: {METHODS}")
+
+    searcher = MCTS(
+        workload, oracle, proposer=proposer, branching=branching,
+        seed=seed, **mcts_kwargs,
+    )
+    curve = searcher.search(budget)
+    return SearchResult(
+        workload.name, plat.name, method, curve,
+        searcher.best.speedup, searcher.best.schedule,
+        searcher.baseline_latency, searcher.best.latency_s, searcher.samples,
+        fallback=proposer.stats if proposer else None, llm=llm_name,
+    )
+
+
+def mean_curve(curves: Sequence[SearchCurve], grid: Sequence[int]) -> list:
+    """Average best-so-far speedup over repeats at fixed sample counts."""
+    return [
+        (s, statistics.fmean(c.at(s) for c in curves)) for s in grid
+    ]
+
+
+def repeat_search(
+    workload, platform: str, method: str, budget: int, repeats: int = 5,
+    grid: Optional[Sequence[int]] = None, **kw,
+) -> tuple[list, list[SearchResult]]:
+    """Paper protocol: repeat with different seeds, report the mean curve."""
+    results = [
+        run_search(workload, platform, method, budget, seed=seed, **kw)
+        for seed in range(repeats)
+    ]
+    grid = grid or default_grid(budget)
+    return mean_curve([r.curve for r in results], grid), results
+
+
+def default_grid(budget: int) -> list[int]:
+    grid = [18, 36, 54, 72, 100, 150, 200, 300, 400, 600, 900, 1200, 1600,
+            2400, 3000]
+    return [g for g in grid if g <= budget] or [budget]
+
+
+@dataclasses.dataclass
+class EfficiencyComparison:
+    """Table 1/2 row: samples + speedup for baseline vs ours, and the two
+    derived improvement metrics."""
+
+    baseline_samples: int
+    baseline_speedup: float
+    ours_samples: int
+    ours_speedup: float
+
+    @property
+    def sample_reduction(self) -> float:
+        return self.baseline_samples / max(1, self.ours_samples)
+
+    @property
+    def efficiency_gain(self) -> float:
+        """(speedup/sample) ratio, the paper's sample-efficiency metric."""
+        ours = self.ours_speedup / max(1, self.ours_samples)
+        base = self.baseline_speedup / max(1, self.baseline_samples)
+        return ours / base if base > 0 else math.inf
+
+
+def compare_efficiency(
+    base_curve: SearchCurve | list,
+    ours_curve: SearchCurve | list,
+    budget: int,
+) -> EfficiencyComparison:
+    """Pick the paper's reporting points: the baseline's near-converged
+    (sample, speedup) point, and the smallest sample count at which ours
+    reaches/exceeds a comparable speedup (else our best point)."""
+    b = base_curve if isinstance(base_curve, SearchCurve) \
+        else SearchCurve(list(base_curve))
+    o = ours_curve if isinstance(ours_curve, SearchCurve) \
+        else SearchCurve(list(ours_curve))
+    base_final = b.at(budget)
+    # baseline "converged" sample count: first point reaching 98% of final
+    base_samples = b.samples_to_reach(base_final * 0.98) or budget
+    ours_reach = o.samples_to_reach(base_final)
+    if ours_reach is not None:
+        return EfficiencyComparison(
+            base_samples, base_final, ours_reach, o.at(ours_reach)
+        )
+    # ours never reaches baseline final: report our best at a low budget
+    ours_samples = o.samples_to_reach(o.at(budget) * 0.98) or budget
+    return EfficiencyComparison(
+        base_samples, base_final, ours_samples, o.at(budget)
+    )

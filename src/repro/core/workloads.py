@@ -1,0 +1,281 @@
+"""Tensor-program workloads: the programs `p_0` the Reasoning Compiler optimizes.
+
+A workload is a perfectly-nested loop program over dense operands (the level of
+abstraction TVM TIR schedules operate on, see the paper's Appendix A example:
+a (1,16,7168)x(7168,2048) MoE GEMM expressed as a T.grid loop nest).  The five
+benchmark workloads below are the paper's five evaluation kernels (§4.1), with
+shapes taken from the respective public model configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+# Loop kinds, mirroring TIR block axis kinds.
+SPATIAL = "S"
+REDUCTION = "R"
+
+
+@dataclasses.dataclass(frozen=True)
+class Loop:
+    """One loop axis of the perfect nest."""
+
+    name: str
+    extent: int
+    kind: str  # SPATIAL | REDUCTION
+
+    def __post_init__(self):
+        assert self.kind in (SPATIAL, REDUCTION), self.kind
+        assert self.extent >= 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Operand:
+    """A dense tensor operand with the loop axes each dim is indexed by."""
+
+    name: str
+    axes: tuple[str, ...]  # loop names, one per dim (innermost last)
+    dtype_bytes: int = 4
+    is_output: bool = False
+
+    def shape(self, loops: Mapping[str, Loop]) -> tuple[int, ...]:
+        return tuple(loops[a].extent for a in self.axes)
+
+    def nbytes(self, loops: Mapping[str, Loop]) -> int:
+        return self.dtype_bytes * math.prod(self.shape(loops))
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A loop-nest tensor program (the MDP's initial state `p_0`)."""
+
+    name: str
+    loops: tuple[Loop, ...]
+    operands: tuple[Operand, ...]
+    # Multiply-accumulates are 2 flops; elementwise epilogue flops (softmax,
+    # activation) are modeled separately because fusion decisions move them.
+    flops: int
+    epilogue_flops: int = 0
+    # Epilogue intermediate that a ComputeLocation/fusion decision can keep out
+    # of main memory (e.g. attention scores, MoE gate activations), in elements
+    # indexed by the spatial iteration space.
+    epilogue_tensor_axes: tuple[str, ...] = ()
+    description: str = ""
+
+    @property
+    def loop_map(self) -> dict[str, Loop]:
+        return {l.name: l for l in self.loops}
+
+    @property
+    def spatial_loops(self) -> tuple[Loop, ...]:
+        return tuple(l for l in self.loops if l.kind == SPATIAL)
+
+    @property
+    def reduction_loops(self) -> tuple[Loop, ...]:
+        return tuple(l for l in self.loops if l.kind == REDUCTION)
+
+    @property
+    def output(self) -> Operand:
+        for t in self.operands:
+            if t.is_output:
+                return t
+        raise ValueError(f"workload {self.name} has no output operand")
+
+    def iter_space(self) -> int:
+        return math.prod(l.extent for l in self.loops)
+
+
+def matmul_workload(
+    name: str,
+    m: int,
+    n: int,
+    k: int,
+    batch: int = 1,
+    dtype_bytes: int = 4,
+    epilogue: str = "none",
+    description: str = "",
+) -> Workload:
+    """[batch, m, k] @ [k, n] -> [batch, m, n] with optional fused epilogue."""
+    loops = []
+    a_axes: tuple[str, ...]
+    if batch > 1:
+        loops.append(Loop("b", batch, SPATIAL))
+        a_axes = ("b", "i", "k")
+        c_axes = ("b", "i", "j")
+    else:
+        a_axes = ("i", "k")
+        c_axes = ("i", "j")
+    loops += [Loop("i", m, SPATIAL), Loop("j", n, SPATIAL), Loop("k", k, REDUCTION)]
+    flops = 2 * batch * m * n * k
+    epi_flops = 0
+    epi_axes: tuple[str, ...] = ()
+    if epilogue == "softmax":
+        epi_flops = 5 * batch * m * n  # exp + max + sum + div, ~5 flops/elt
+        epi_axes = c_axes
+    elif epilogue == "swiglu":
+        epi_flops = 4 * batch * m * n  # silu(x1)*x2
+        epi_axes = c_axes
+    return Workload(
+        name=name,
+        loops=tuple(loops),
+        operands=(
+            Operand("A", a_axes, dtype_bytes),
+            Operand("B", ("k", "j"), dtype_bytes),
+            Operand("C", c_axes, dtype_bytes, is_output=True),
+        ),
+        flops=flops,
+        epilogue_flops=epi_flops,
+        epilogue_tensor_axes=epi_axes,
+        description=description,
+    )
+
+
+def attention_workload(
+    name: str,
+    heads: int,
+    seq_q: int,
+    seq_kv: int,
+    head_dim: int,
+    dtype_bytes: int = 4,
+    description: str = "",
+) -> Workload:
+    """Fused self-attention scores+AV: softmax(Q K^T) V for one layer.
+
+    Modeled as the dominant iteration space (h, i, j) with two chained GEMM
+    reductions over d; the softmax row pass is the fusable epilogue whose
+    placement ComputeLocation controls (materializing the [h, i, j] score
+    matrix vs. streaming it, i.e. FlashAttention-style fusion).
+    """
+    loops = (
+        Loop("h", heads, SPATIAL),
+        Loop("i", seq_q, SPATIAL),
+        Loop("j", seq_kv, SPATIAL),
+        Loop("k", head_dim, REDUCTION),
+    )
+    flops = 2 * heads * seq_q * seq_kv * head_dim * 2  # QK^T and AV
+    return Workload(
+        name=name,
+        loops=loops,
+        operands=(
+            Operand("Q", ("h", "i", "k"), dtype_bytes),
+            Operand("K", ("h", "j", "k"), dtype_bytes),
+            Operand("V", ("h", "j", "k"), dtype_bytes),
+            Operand("O", ("h", "i", "k"), dtype_bytes, is_output=True),
+        ),
+        flops=flops,
+        epilogue_flops=5 * heads * seq_q * seq_kv,
+        epilogue_tensor_axes=("h", "i", "j"),
+        description=description,
+    )
+
+
+def conv2d_workload(
+    name: str,
+    n: int,
+    h: int,
+    w: int,
+    c_in: int,
+    c_out: int,
+    kh: int,
+    kw: int,
+    dtype_bytes: int = 4,
+    description: str = "",
+) -> Workload:
+    loops = (
+        Loop("n", n, SPATIAL),
+        Loop("oh", h, SPATIAL),
+        Loop("ow", w, SPATIAL),
+        Loop("oc", c_out, SPATIAL),
+        Loop("ic", c_in, REDUCTION),
+        Loop("kh", kh, REDUCTION),
+        Loop("kw", kw, REDUCTION),
+    )
+    flops = 2 * n * h * w * c_out * c_in * kh * kw
+    return Workload(
+        name=name,
+        loops=loops,
+        operands=(
+            # im2col view: input indexed by output spatials + reductions.
+            Operand("X", ("n", "oh", "ow", "ic"), dtype_bytes),
+            Operand("W", ("kh", "kw", "ic", "oc"), dtype_bytes),
+            Operand("Y", ("n", "oh", "ow", "oc"), dtype_bytes, is_output=True),
+        ),
+        flops=flops,
+        description=description,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The paper's five benchmark kernels (§4.1), shapes from public configs.
+# ---------------------------------------------------------------------------
+
+def llama3_attention() -> Workload:
+    # Llama-3-8B: 32 q heads, head_dim 128; serving context 2048.
+    return attention_workload(
+        "llama3_8b_attention", heads=32, seq_q=2048, seq_kv=2048, head_dim=128,
+        description="Llama-3-8B self-attention layer [arXiv:2407.21783]",
+    )
+
+
+def deepseek_moe() -> Workload:
+    # Exactly the paper's Appendix A prompt: A(1,16,7168) @ B(7168,2048).
+    return matmul_workload(
+        "deepseek_r1_moe", m=16, n=2048, k=7168,
+        description="DeepSeek-R1 MoE expert GEMM (paper Appendix A shapes)",
+    )
+
+
+def flux_attention() -> Workload:
+    # FLUX joint transformer block: 24 heads, head_dim 128, 4096 latent tokens.
+    return attention_workload(
+        "flux_attention", heads=24, seq_q=4096, seq_kv=4096, head_dim=128,
+        description="FLUX (rectified-flow DiT) attention layer",
+    )
+
+
+def flux_conv() -> Workload:
+    # FLUX VAE/in-out conv: 3x3 over 128x128 latents, 512 channels.
+    return conv2d_workload(
+        "flux_conv", n=1, h=128, w=128, c_in=512, c_out=512, kh=3, kw=3,
+        description="FLUX convolution layer (VAE 3x3, 512ch, 128x128)",
+    )
+
+
+def llama4_mlp() -> Workload:
+    # Llama-4-Scout: d_model 5120, d_ff 8192; 1024-token tile.
+    return matmul_workload(
+        "llama4_scout_mlp", m=1024, n=8192, k=5120, epilogue="swiglu",
+        description="Llama-4-Scout MLP (SwiGLU) layer GEMM",
+    )
+
+
+PAPER_WORKLOADS = {
+    "llama3_8b_attention": llama3_attention,
+    "deepseek_r1_moe": deepseek_moe,
+    "flux_attention": flux_attention,
+    "flux_conv": flux_conv,
+    "llama4_scout_mlp": llama4_mlp,
+}
+
+
+def end_to_end_llama3_workloads() -> Sequence[tuple[Workload, float]]:
+    """(workload, runtime-share weight) pairs for end-to-end Llama-3-8B (Table 2).
+
+    One decoder layer = attention + o-proj GEMM + SwiGLU MLP; weights are the
+    pre-optimization runtime shares implied by flop counts (32 identical layers,
+    so one layer is representative; the lm_head GEMM is amortized).
+    """
+    attn = llama3_attention()
+    qkv = matmul_workload("llama3_qkv_proj", m=2048, n=6144, k=4096,
+                          description="fused QKV projection (GQA 32q/8kv)")
+    o_proj = matmul_workload("llama3_o_proj", m=2048, n=4096, k=4096)
+    mlp = matmul_workload("llama3_mlp", m=2048, n=14336, k=4096, epilogue="swiglu",
+                          description="Llama-3-8B SwiGLU MLP")
+    items = [attn, qkv, o_proj, mlp]
+    total = sum(w.flops + w.epilogue_flops for w in items)
+    return [(w, (w.flops + w.epilogue_flops) / total) for w in items]
+
+
+def get_workload(name: str) -> Workload:
+    return PAPER_WORKLOADS[name]()

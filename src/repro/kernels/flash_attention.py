@@ -1,0 +1,148 @@
+"""Pallas TPU flash attention with Reasoning-Compiler-tunable BlockSpecs.
+
+The paper's Llama-3/FLUX attention benchmarks are schedule searches over an
+attention loop nest; on TPU the corresponding decision space is the Pallas
+block shape (``block_q``, ``block_k``) plus the fusion of the softmax
+epilogue — which is exactly what flash attention's online softmax is
+(ComputeLocation != root in the schedule IR, DESIGN.md §3).  The autotuner
+(core/autotuner.py) maps a tuned schedule onto these block parameters.
+
+Layout: Q [B, Hq, Sq, D], K/V [B, Hkv, Skv, D]; GQA via index-map head
+grouping (no K/V replication in HBM).  Supports causal and sliding-window
+masking; right-aligned queries for decode windows.
+
+Grid: (batch*heads, q_blocks, k_blocks) with the k dimension innermost and
+sequential ("arbitrary"); running max / sum-exp / accumulator live in VMEM
+scratch across the k loop — the canonical Pallas online-softmax pattern,
+hand-tiled for the (8, 128) VPU lane structure.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, sm_scale: float, causal: bool, window: int | None,
+    block_q: int, block_k: int, sq: int, skv: int,
+):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+    nkb = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)       # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)       # [bk, d]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * sm_scale                               # [bq, bk]
+
+    # masking: causal (right-aligned queries) and/or sliding window
+    if causal or window is not None:
+        qpos = (qb * block_q
+                + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+                + (skv - sq))
+        kpos = (kb * block_k
+                + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+        mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]                        # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)            # rescale of old accumulator
+    p = jnp.exp(s - m_new)                     # [bq, bk]
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kb == nkb - 1)
+    def _finalize():
+        # fully-masked rows (can happen in windowed decode) produce l == 0
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "sm_scale", "window", "block_q", "block_k", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    window: int | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, f"GQA requires hq % hkv == 0, got {hq}/{hkv}"
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0, (
+        f"seq lengths ({sq},{skv}) must divide blocks ({block_q},{block_k})")
+
+    grid = (b * hq, sq // block_q, skv // block_k)
+
+    def q_map(bh, qb, kb):
+        return (bh // hq, bh % hq, qb, 0)
+
+    def kv_map(bh, qb, kb):
+        return (bh // hq, (bh % hq) // group, kb, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, sq=sq, skv=skv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), q_map),
+            pl.BlockSpec((1, 1, block_k, d), kv_map),
+            pl.BlockSpec((1, 1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum-exp
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,188 @@
+"""Tiled Pallas matmul + fused SwiGLU gate-up + MoE grouped GEMM.
+
+Three kernels sharing the same VMEM-tiled accumulation structure; block
+shapes (bm, bn, bk) are the Reasoning Compiler's TileSize decisions mapped
+through core/autotuner.py (the paper's Llama-4-Scout MLP and DeepSeek MoE
+benchmarks are exactly these GEMMs).
+
+  * ``matmul``         [m, k] @ [k, n]
+  * ``swiglu_gateup``  silu(x@Wg) * (x@Wu) — the epilogue-fused ComputeLocation
+                        decision: the SwiGLU intermediate never touches HBM.
+  * ``moe_gemm``       [E, cap, d] @ [E, d, f] grouped expert GEMM (expert =
+                        outer grid dim, so each expert's weights are DMA'd to
+                        VMEM exactly once per (m, n) tile wave).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+# ---------------------------------------------------------------------------
+# plain tiled matmul
+# ---------------------------------------------------------------------------
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_scr):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"),
+)
+def matmul(
+    a: jax.Array, b: jax.Array, *,
+    bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((bk, bn), lambda i, j, kb: (kb, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# fused SwiGLU gate-up: silu(x @ Wg) * (x @ Wu)
+# ---------------------------------------------------------------------------
+
+def _gateup_kernel(x_ref, wg_ref, wu_ref, o_ref, accg_scr, accu_scr):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _():
+        accg_scr[...] = jnp.zeros_like(accg_scr)
+        accu_scr[...] = jnp.zeros_like(accu_scr)
+
+    x = x_ref[...].astype(jnp.float32)
+    accg_scr[...] += jax.lax.dot_general(
+        x, wg_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    accu_scr[...] += jax.lax.dot_general(
+        x, wu_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _():
+        g = accg_scr[...]
+        o_ref[...] = (g / (1.0 + jnp.exp(-g)) * accu_scr[...]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"),
+)
+def swiglu_gateup(
+    x: jax.Array, w_gate: jax.Array, w_up: jax.Array, *,
+    bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    k2, n = w_gate.shape
+    assert k == k2 and w_up.shape == w_gate.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gateup_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((bk, bn), lambda i, j, kb: (kb, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kb: (kb, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w_gate, w_up)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped GEMM
+# ---------------------------------------------------------------------------
+
+def _moe_kernel(x_ref, w_ref, o_ref, acc_scr):
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kb == pl.num_programs(3) - 1)
+    def _():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"),
+)
+def moe_gemm(
+    x: jax.Array,  # [E, cap, d]
+    w: jax.Array,  # [E, d, f]
+    *,
+    bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    e, cap, d = x.shape
+    e2, d2, f = w.shape
+    assert e == e2 and d == d2
+    bm, bn, bk = min(bm, cap), min(bn, f), min(bk, d)
+    assert cap % bm == 0 and f % bn == 0 and d % bk == 0
+    grid = (e, cap // bm, f // bn, d // bk)
+    return pl.pallas_call(
+        _moe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda ee, i, j, kb: (ee, i, kb)),
+            pl.BlockSpec((1, bk, bn), lambda ee, i, j, kb: (ee, kb, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda ee, i, j, kb: (ee, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, cap, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

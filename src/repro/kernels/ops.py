@@ -1,0 +1,209 @@
+"""Backend dispatch for the kernel layer.
+
+Every model in ``repro.models`` calls these wrappers instead of touching
+Pallas directly.  Backends:
+
+  * ``pallas``    — the real TPU kernels (pl.pallas_call, BlockSpec tiling).
+  * ``interpret`` — same kernel bodies executed by the Pallas interpreter on
+                    CPU; used by the correctness sweeps in tests/.
+  * ``jax``       — pure-JAX implementations with identical semantics.  The
+                    attention path is a chunked online-softmax lax.scan
+                    (flash-style: O(S) memory, compact HLO) — this is what
+                    the 512-device dry-run lowers, since Mosaic kernels do
+                    not lower on the CPU host platform (DESIGN.md §4).
+
+Block parameters default to kernel defaults but are overridden by the
+Reasoning Compiler's tuning cache (core/autotuner.py) when present.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as _mm
+from . import ref as _ref
+from .flash_attention import flash_attention
+
+_DEFAULT_BACKEND: Optional[str] = None
+
+
+def default_backend() -> str:
+    global _DEFAULT_BACKEND
+    if _DEFAULT_BACKEND is None:
+        _DEFAULT_BACKEND = (
+            "pallas" if jax.default_backend() == "tpu" else "jax"
+        )
+    return _DEFAULT_BACKEND
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    assert name in ("pallas", "interpret", "jax", "ref")
+    _DEFAULT_BACKEND = name
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _attention_jax_chunked(
+    q, k, v, *, causal: bool, sm_scale: float, window: Optional[int],
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax over KV chunks via lax.scan: O(S) memory, O(1)-depth
+    HLO. Equivalent to the Pallas kernel's math, one chunk per scan step.
+
+    Q/K/V stream in their storage dtype (bf16 on the full configs) with
+    f32 accumulation — casting them to f32 up front doubled HLO bytes
+    (§Perf iteration B1)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    chunk = min(chunk, skv)
+    if skv % chunk:  # fall back to one chunk when sizes are ragged
+        chunk = skv
+    nchunks = skv // chunk
+    qf = q * jnp.asarray(sm_scale, q.dtype)
+    kc = jnp.moveaxis(k.reshape(b, hkv, nchunks, chunk, d), 2, 0)
+    vc = jnp.moveaxis(v.reshape(b, hkv, nchunks, chunk, d), 2, 0)
+    qpos = jnp.arange(sq) + (skv - sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, idx = xs
+        kb = jnp.repeat(kb, group, axis=1)  # [b, hq, chunk, d]
+        vb = jnp.repeat(vb, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb,
+                       preferred_element_type=jnp.float32)
+        kpos = idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # fully-masked chunks leave m == -inf; guard the exp
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        alpha = jnp.where(
+            jnp.isinf(m), 0.0, jnp.exp(m - m_safe)
+        )
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hq, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kc, vc, jnp.arange(nchunks))
+    )
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+    backend: Optional[str] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    chunk: int = 1024,
+) -> jax.Array:
+    """softmax(QK^T)V with GQA grouping; see module docstring for backends."""
+    backend = backend or default_backend()
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    if backend in ("pallas", "interpret"):
+        return flash_attention(
+            q, k, v, causal=causal, sm_scale=sm_scale, window=window,
+            block_q=block_q, block_k=block_k,
+            interpret=(backend == "interpret"),
+        )
+    if backend == "ref":
+        return _ref.attention_ref(
+            q, k, v, causal=causal, sm_scale=sm_scale, window=window
+        )
+    # pure-JAX: direct for small score matrices, chunked scan otherwise
+    # (the chunked threshold keeps the materialized score block <= ~1M
+    # elements per head — beyond that the O(S^2) buffer dominates training
+    # memory even under per-layer remat)
+    b, hq, sq, _ = q.shape
+    skv = k.shape[2]
+    if sq * skv <= 1024 * 1024 and sq > 1:
+        return _ref.attention_ref(
+            q, k, v, causal=causal, sm_scale=sm_scale, window=window
+        )
+    if sq == 1:
+        return _decode_attention_jax(
+            q, k, v, sm_scale=sm_scale, window=window
+        )
+    return _attention_jax_chunked(
+        q, k, v, causal=causal, sm_scale=sm_scale, window=window, chunk=chunk
+    )
+
+
+def _decode_attention_jax(q, k, v, *, sm_scale, window):
+    """Single-token decode: q [B,Hq,1,D] against the full KV cache."""
+    b, hq, _, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32) * sm_scale
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32))
+    if window is not None:
+        kpos = jnp.arange(skv)
+        s = jnp.where((kpos > skv - 1 - window)[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GEMM family
+# ---------------------------------------------------------------------------
+
+def matmul(a, b, *, backend=None, bm=128, bn=128, bk=512):
+    backend = backend or default_backend()
+    if backend in ("pallas", "interpret"):
+        return _mm.matmul(
+            a, b, bm=bm, bn=bn, bk=bk, interpret=(backend == "interpret")
+        )
+    return _ref.matmul_ref(a, b)
+
+
+def swiglu_gateup(x, w_gate, w_up, *, backend=None, bm=128, bn=128, bk=512):
+    backend = backend or default_backend()
+    if backend in ("pallas", "interpret"):
+        return _mm.swiglu_gateup(
+            x, w_gate, w_up, bm=bm, bn=bn, bk=bk,
+            interpret=(backend == "interpret"),
+        )
+    return _ref.swiglu_gateup_ref(x, w_gate, w_up)
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down, *, backend=None, bm=128, bn=128,
+               bk=512):
+    h = swiglu_gateup(x, w_gate, w_up, backend=backend, bm=bm, bn=bn, bk=bk)
+    return matmul(h, w_down, backend=backend, bm=bm, bn=bn, bk=bk)
+
+
+def moe_gemm(x, w, *, backend=None, bm=128, bn=128, bk=512):
+    backend = backend or default_backend()
+    if backend in ("pallas", "interpret"):
+        return _mm.moe_gemm(
+            x, w, bm=bm, bn=bn, bk=bk, interpret=(backend == "interpret")
+        )
+    return _ref.moe_gemm_ref(x, w)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference).
+
+These are the semantics contracts: each kernel in this package must match
+its oracle to float tolerance across the shape/dtype sweeps in
+``tests/test_kernels.py``.  They are also the CPU execution path for the
+models during dry-runs (via ops.py backend dispatch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """[m, k] @ [k, n] in f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def swiglu_gateup_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array) -> jax.Array:
+    """silu(x @ w_gate) * (x @ w_up): the fused gate-up of a SwiGLU MLP."""
+    g = jnp.dot(x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)
+
+
+def swiglu_mlp_ref(
+    x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array
+) -> jax.Array:
+    h = swiglu_gateup_ref(x, w_gate, w_up)
+    return matmul_ref(h, w_down)
+
+
+def attention_ref(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,  # [B, Hkv, Skv, D]
+    causal: bool = True,
+    sm_scale: float | None = None,
+    window: int | None = None,
+) -> jax.Array:
+    """Materialized softmax(QK^T)V with GQA head grouping and optional
+    causal / sliding-window masking.  O(S^2) memory — oracle only."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * sm_scale
+    skv = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned queries
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def moe_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped expert GEMM: [E, cap, d] @ [E, d, f] -> [E, cap, f]."""
+    return jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)

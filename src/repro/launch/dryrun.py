@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+THE two lines above must run before ANY other import (jax locks the device
+count on first init) — which is why this module sets XLA_FLAGS at the very
+top and why nothing else in the package sets it globally.
+
+Per cell:
+  * abstract params / optimizer state via jax.eval_shape (no allocation),
+  * NamedShardings from dist.sharding rules,
+  * ``jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)``
+  * ``.compile()`` -> memory_analysis (fits?) + cost_analysis (FLOPs/bytes)
+  * post-SPMD HLO text -> collective bytes (roofline.analysis)
+
+Results append to a JSON artifact consumed by benchmarks/roofline_table.py
+and EXPERIMENTS.md.  Cells that a config declares unsupported (encoder
+decode, quadratic attention at 524k) are recorded as skips with the reason.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both \
+      [--arch tinyllama-1.1b ...] [--shape train_4k ...] [--out artifacts/]
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ArchConfig, get_config, input_specs, list_archs
+from ..dist import sharding as shd
+from ..models import model as M
+from ..optim import adamw
+from ..roofline.analysis import Roofline, parse_collectives
+from ..train.train_step import make_train_step
+from .mesh import make_production_mesh
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "artifacts", "dryrun.json")
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _named(tree_specs, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def build_cell(cfg: ArchConfig, shape: str, mesh, backend: str = "jax",
+               microbatches: int = 1, remat: str = "full"):
+    """Returns (jitted_fn, kwargs_of_ShapeDtypeStructs, model_flops)."""
+    sp = SHAPES[shape]
+    tp = shd.tp_degree(mesh)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_a = _abstract(lambda k: M.init_params(cfg, k, tp), key_spec)
+    p_sh = _named(shd.param_specs(cfg, params_a, mesh), mesh)
+    inputs = input_specs(cfg, shape)
+    b_sh = _named(shd.batch_specs(cfg, inputs, mesh), mesh)
+    n_active = cfg.active_param_count()
+
+    if sp.kind == "train":
+        from jax.sharding import NamedSharding, PartitionSpec
+        opt_a = _abstract(adamw.init, params_a)
+        moment_sh = _named(shd.opt_state_specs(
+            shd.param_specs(cfg, params_a, mesh), params_a, mesh), mesh)
+        o_sh = adamw.AdamWState(
+            step=NamedSharding(mesh, PartitionSpec()),
+            m=moment_sh, v=moment_sh,
+        )
+        step = make_train_step(
+            cfg, adamw.AdamWConfig(), backend=backend, remat=remat,
+            microbatches=microbatches,
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_a, opt_a, inputs)
+        tokens = sp.global_batch * sp.seq_len
+        model_flops = 6.0 * n_active * tokens
+        return fn, args, model_flops
+
+    if sp.kind == "prefill":
+        if cfg.block == "encoder":
+            def encode(params, batch):
+                logits, _ = M.forward(cfg, params, batch, backend=backend)
+                return logits
+            fn = jax.jit(encode, in_shardings=(p_sh, b_sh),
+                         out_shardings=None)
+            args = (params_a, inputs)
+        else:
+            def pre(params, batch):
+                return M.prefill(cfg, params, batch, sp.seq_len,
+                                 backend=backend)
+            fn = jax.jit(pre, in_shardings=(p_sh, b_sh), out_shardings=None)
+            args = (params_a, inputs)
+        model_flops = 2.0 * n_active * sp.global_batch * sp.seq_len
+        return fn, args, model_flops
+
+    # decode: one token against a seq_len-deep cache
+    cache_a = M.cache_spec(cfg, sp.global_batch, sp.seq_len, tp)
+    c_sh = _named(shd.cache_specs_tree(cfg, cache_a, mesh), mesh)
+    pos_a = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def dec(params, tokens, cache, pos):
+        return M.decode_step(cfg, params, tokens, cache, pos,
+                             backend=backend)
+
+    fn = jax.jit(
+        dec,
+        in_shardings=(p_sh, b_sh["tokens"], c_sh, None),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+    )
+    args = (params_a, inputs["tokens"], cache_a, pos_a)
+    model_flops = 2.0 * n_active * sp.global_batch
+    return fn, args, model_flops
+
+
+def _cost_point(cfg, shape: str, mesh, backend: str, layers: int,
+                microbatches: int = 1):
+    """Compile a fully-UNROLLED `layers`-deep variant and return
+    (flops, bytes, CollectiveStats) per device.  XLA cost_analysis counts a
+    while-loop body once regardless of trip count, so per-layer costs are
+    extracted from two unrolled points and extrapolated exactly (scanned
+    layers are homogeneous by construction; the microbatch loop is unrolled
+    by the same knob)."""
+    cfg_l = dataclasses.replace(cfg, layers=layers)
+    M.SCAN_UNROLL["n"] = max(2, layers, microbatches)
+    try:
+        fn, args, _ = build_cell(cfg_l, shape, mesh, backend,
+                                 microbatches=microbatches)
+        with mesh:
+            compiled = fn.lower(*args).compile()
+    finally:
+        M.SCAN_UNROLL["n"] = 1
+    cost = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text(), chips_per_pod=256)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def _extrapolate(cfg, shape: str, mesh, backend: str,
+                 microbatches: int = 1):
+    """Two-point linear extrapolation of per-device flops/bytes/collective
+    bytes to the full layer count."""
+    period = 4 if cfg.block == "xlstm" else 1
+    l1, l2 = period, 2 * period
+    f1, b1, c1 = _cost_point(cfg, shape, mesh, backend, l1, microbatches)
+    f2, b2, c2 = _cost_point(cfg, shape, mesh, backend, l2, microbatches)
+    L = cfg.layers
+
+    def fit(v1, v2):
+        body = max(0.0, (v2 - v1) / (l2 - l1))
+        outer = max(0.0, v1 - l1 * body)
+        return outer + L * body
+
+    from ..roofline.analysis import CollectiveStats
+    counts = {
+        k: int(fit(c1.counts.get(k, 0), c2.counts.get(k, 0)))
+        for k in set(c1.counts) | set(c2.counts)
+    }
+    bkind = {
+        k: fit(c1.bytes_by_kind.get(k, 0.0), c2.bytes_by_kind.get(k, 0.0))
+        for k in set(c1.bytes_by_kind) | set(c2.bytes_by_kind)
+    }
+    coll = CollectiveStats(
+        counts, bkind,
+        ici_bytes=fit(c1.ici_bytes, c2.ici_bytes),
+        dcn_bytes=fit(c1.dcn_bytes, c2.dcn_bytes),
+    )
+    return fit(f1, f2), fit(b1, b2), coll
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, backend: str = "jax"):
+    """Lower + compile one cell; returns a result dict."""
+    cfg = get_config(arch)
+    ok, why = cfg.supports(shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    base = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    if not ok:
+        return {**base, "status": "skip", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    sp = SHAPES[shape]
+    t0 = time.time()
+    hbm = 15.5 * 2**30  # v5e HBM with headroom
+    try:
+        # auto-tune gradient-accumulation depth until the cell fits HBM —
+        # the framework's standard response to an over-budget global batch.
+        mb_ladder = [1, 2, 4, 8, 16, 32] if sp.kind == "train" else [1]
+        mb_ladder = [m for m in mb_ladder
+                     if sp.global_batch % m == 0] or [1]
+        mem = compiled = hlo = None
+        microbatches = 1
+        for mb in mb_ladder:
+            fn, args, model_flops = build_cell(cfg, shape, mesh, backend,
+                                               microbatches=mb)
+            with mesh:
+                lowered = fn.lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+                mem = compiled.memory_analysis()
+                hlo = compiled.as_text()
+            microbatches = mb
+            peak = (getattr(mem, "temp_size_in_bytes", 0)
+                    + getattr(mem, "argument_size_in_bytes", 0))
+            if peak <= hbm:
+                break
+        # cost extraction at reduced unrolled depths (exact per-layer fit)
+        flops_dev, bytes_dev, coll = _extrapolate(
+            cfg, shape, mesh, backend, microbatches)
+    except Exception as e:  # a failure here is a bug in our sharding
+        return {
+            **base, "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-2000:],
+        }
+    # cost_analysis is per-partition (the SPMD module is one device's
+    # program): fleet totals scale by chip count.
+    flops_fleet = flops_dev * chips
+    bytes_fleet = bytes_dev * chips
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0),
+    }
+    roof = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops_fleet, hlo_bytes=bytes_fleet, collective=coll,
+        model_flops=model_flops, bytes_per_device=mem_d,
+    )
+    peak = mem_d["peak_bytes"]
+    return {
+        **base, "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "microbatches": microbatches,
+        "fits_hbm": bool(peak <= hbm),
+        **roof.to_dict(),
+    }
+
+
+def load_results(path: str) -> dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(path: str, results: dict) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=None)
+    ap.add_argument("--shape", nargs="*", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = args.arch or list_archs()
+    shapes = args.shape or list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    results = load_results(args.out)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+                if key in results and not args.force \
+                        and results[key].get("status") in ("ok", "skip"):
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                res = run_cell(arch, shape, mp)
+                results[key] = res
+                save_results(args.out, results)
+                status = res["status"]
+                extra = res.get("reason") or res.get("error", "")
+                if status == "ok":
+                    extra = (f"compile={res['compile_s']}s "
+                             f"dom={res['dominant']} "
+                             f"mfu={res['mfu']:.3f} "
+                             f"peakB/dev={res['bytes_per_device']['peak_bytes'] / 2**30:.2f}GiB")
+                print(f"[dryrun] {key}: {status} {extra}", flush=True)
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skip")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets the fake-device XLA flag before
+any jax import, and smoke tests must keep seeing 1 device).
+
+Topology: one TPU v5e pod = 16x16 = 256 chips, axes ("data", "model");
+multi-pod = 2 pods = 512 chips with a leading pure-DP "pod" axis whose
+collectives cross the inter-pod DCN exactly once per step (gradient
+all-reduce).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (tests / examples): (data=n, model=1)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,56 @@
+"""Training launcher.
+
+Host-local (examples, CI): ``python -m repro.launch.train --arch <id>
+--steps 50 --smoke``.  On a real multi-host TPU deployment the same entry
+point runs under ``jax.distributed.initialize()`` with the production mesh;
+parameters/optimizer are sharded by ``dist.sharding`` and the train loop is
+mesh-agnostic (train/trainer.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs.base import SHAPES, ShapeSpec, get_config
+from ..optim.adamw import AdamWConfig
+from ..train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None,
+                    help="assigned shape name (default: small local shape)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=["none", "full"])
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.shape:
+        shape = SHAPES[args.shape]
+    else:
+        shape = ShapeSpec("local", args.seq, args.batch, "train")
+    trainer = Trainer(
+        cfg, shape,
+        TrainerConfig(
+            total_steps=args.steps,
+            checkpoint_dir=args.checkpoint_dir,
+            microbatches=args.microbatches,
+            remat=args.remat,
+            compress_grads=args.compress_grads,
+        ),
+        opt_cfg=AdamWConfig(lr=args.lr, total_steps=args.steps),
+    )
+    hist = trainer.run()
+    print(f"final loss: {hist[-1]['loss']:.4f} over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Kernel autotuning launcher: the Reasoning Compiler as a deploy-time tool.
+
+``python -m repro.launch.tune --arch tinyllama-1.1b --seq 4096 --budget 64``
+searches schedules for the arch's hot kernels on the TPU-v5e profile and
+persists the winning Pallas block parameters in the tuning cache that
+``repro.kernels.ops`` consumers read.
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs.base import get_config
+from ..core.autotuner import KernelTuner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--budget", type=int, default=64)
+    ap.add_argument("--method", default="llm-mcts",
+                    choices=["llm-mcts", "mcts", "evolutionary"])
+    ap.add_argument("--llm", default="gpt-4o-mini")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    tuner = KernelTuner(method=args.method, budget=args.budget, llm=args.llm)
+    if cfg.block not in ("xlstm",):
+        blocks = tuner.tune_attention(
+            cfg.padded_heads(1), args.seq, args.seq, cfg.hd
+        )
+        print(f"{cfg.name} attention: block_q={blocks.block_q} "
+              f"block_k={blocks.block_k}")
+    if cfg.d_ff:
+        g = tuner.tune_gemm(args.seq, cfg.d_ff, cfg.d_model,
+                            epilogue="swiglu")
+        print(f"{cfg.name} mlp gate-up: bm={g.bm} bn={g.bn} bk={g.bk}")
+    print(f"tuning cache: {tuner.cache_path}")
+
+
+if __name__ == "__main__":
+    main()

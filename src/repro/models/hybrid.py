@@ -1,0 +1,158 @@
+"""Hymba hybrid block: parallel attention + Mamba-style SSM heads
+[arXiv:2411.13676].
+
+Each block runs (a) sliding-window GQA attention and (b) a selective SSM
+(S6) path *in parallel* on the same input and mean-combines the normalized
+outputs — Hymba's core idea (attention = snapshot memory, SSM = fading
+memory).  Every ``global_layer_every``-th layer uses full attention.
+
+The SSM path: in-proj -> causal depthwise conv(4) -> silu -> selective SSM
+(input-dependent dt, B, C; diagonal A) -> gate -> out-proj.  Sequence mode
+scans over time; decode keeps {conv tail, ssm state} — O(1) in context, so
+``long_500k`` decode is servable (attention contributes a bounded window).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import AttnDims, attention_block, dense_init, init_attention
+
+CONV_K = 4
+
+
+def init_ssm_path(key, d: int, state: int, dtype) -> dict:
+    inner = 2 * d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, inner), jnp.float32)
+                   / math.sqrt(CONV_K)).astype(dtype),
+        "w_bc": dense_init(ks[2], inner, 2 * state, dtype),
+        "w_dt": dense_init(ks[3], inner, inner, dtype, scale=0.1),
+        "dt_bias": jnp.zeros((inner,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32), (inner, 1))
+        ),
+        "d_skip": jnp.ones((inner,), jnp.float32),
+        "w_out": dense_init(ks[4], inner, d, dtype, scale=0.5),
+    }
+
+
+def ssm_init_state(batch: int, d: int, state: int) -> dict:
+    inner = 2 * d
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, inner), jnp.float32),
+        "h": jnp.zeros((batch, inner, state), jnp.float32),
+    }
+
+
+def _ssm_pre(x, p):
+    """in-proj + split; returns (xm [B,S,inner], z gate [B,S,inner])."""
+    xi = x @ p["w_in"]
+    xm, z = jnp.split(xi, 2, axis=-1)
+    return xm.astype(jnp.float32), jax.nn.silu(z.astype(jnp.float32))
+
+
+def _ssm_conv_seq(xm, p, conv_state):
+    """Causal depthwise conv over time with carried tail."""
+    xpad = jnp.concatenate([conv_state, xm], axis=1)  # [B, K-1+S, inner]
+    w = p["conv_w"].astype(jnp.float32)
+    out = sum(
+        xpad[:, i:i + xm.shape[1]] * w[i] for i in range(CONV_K)
+    )
+    new_state = xpad[:, -(CONV_K - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def _ssm_scan(xc, p, h0):
+    """Selective SSM over time: xc [B,S,inner] -> y [B,S,inner]."""
+    bsz, s, inner = xc.shape
+    state = p["a_log"].shape[1]
+    bc = xc @ p["w_bc"].astype(jnp.float32)          # [B,S,2*state]
+    bmat, cmat = jnp.split(bc, 2, axis=-1)           # [B,S,state]
+    dt = jax.nn.softplus(xc @ p["w_dt"].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                          # [inner, state]
+
+    def step(h, xs):
+        x_t, b_t, c_t, dt_t = xs  # [B,inner], [B,state], [B,state], [B,inner]
+        da = jnp.exp(dt_t[..., None] * a)             # [B,inner,state]
+        h = h * da + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, c_t)
+        return h, y
+
+    xs = (xc.transpose(1, 0, 2), bmat.transpose(1, 0, 2),
+          cmat.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + xc * p["d_skip"]
+    return y, h
+
+
+def ssm_path_seq(
+    x: jax.Array, p: dict, state: Optional[dict] = None
+) -> tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    nstate = p["a_log"].shape[1]
+    if state is None:
+        state = ssm_init_state(b, d, nstate)
+    xm, z = _ssm_pre(x, p)
+    xc, conv_state = _ssm_conv_seq(xm, p, state["conv"])
+    y, h = _ssm_scan(xc, p, state["h"])
+    out = ((y * z).astype(x.dtype)) @ p["w_out"]
+    return out, {"conv": conv_state, "h": h}
+
+
+def ssm_path_step(
+    x_t: jax.Array, p: dict, state: dict
+) -> tuple[jax.Array, dict]:
+    """Single-token decode update."""
+    xm, z = _ssm_pre(x_t, p)                      # [B,1,inner]
+    xc, conv_state = _ssm_conv_seq(xm, p, state["conv"])
+    y, h = _ssm_scan(xc, p, state["h"])
+    out = ((y * z).astype(x_t.dtype)) @ p["w_out"]
+    return out, {"conv": conv_state, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# the combined hybrid block
+# ---------------------------------------------------------------------------
+
+
+def init_hybrid_block(key, dims: AttnDims, ssm_state: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": init_attention(k1, dims, dtype),
+        "ssm": init_ssm_path(k2, dims.d_model, ssm_state, dtype),
+    }
+
+
+def hybrid_block_seq(
+    x: jax.Array,
+    p: dict,
+    dims: AttnDims,
+    positions: jax.Array,
+    *,
+    rope_theta: float,
+    window: Optional[int],
+    is_global,
+    ssm_state: Optional[dict] = None,
+    kv_override: Optional[tuple] = None,
+    backend: Optional[str] = None,
+):
+    """Parallel attn + SSM; `is_global` (traced per-layer scalar) disables
+    the window.  Returns (y, (k, v), new_ssm_state)."""
+    eff_window = None
+    if window:
+        # traced selection: global layers get a window >= sequence length
+        eff_window = jnp.where(
+            is_global, jnp.int32(2**30), jnp.int32(window)
+        )
+    attn_out, kv = attention_block(
+        x, p["attn"], dims, positions, causal=True, rope_theta=rope_theta,
+        window=eff_window, kv_override=kv_override, backend=backend,
+    )
+    ssm_out, new_state = ssm_path_seq(x, p["ssm"], ssm_state)
+    return 0.5 * (attn_out + ssm_out), kv, new_state

@@ -1,0 +1,320 @@
+"""Shared building blocks: norms, RoPE, GQA attention, SwiGLU MLP, MoE.
+
+Parameters are plain pytrees (nested dicts of jnp arrays); layer stacks are
+stacked along a leading [L, ...] axis and driven by ``lax.scan`` so the HLO
+is O(1) in depth (critical for the 512-device dry-run compile).
+
+Sharding is expressed through ``logical_axis`` names carried next to each
+initializer here and resolved to PartitionSpecs in ``repro.dist.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def layer_norm(
+    x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x: jax.Array, params: dict, kind: str) -> jax.Array:
+    if kind == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"])
+    return rms_norm(x, params["scale"])
+
+
+def init_norm(d: int, kind: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(
+    x: jax.Array,  # [B, H, S, D]
+    positions: jax.Array,  # [B, S] or [S]
+    theta: float = 10000.0,
+) -> jax.Array:
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(ang)[:, None]  # [B, 1, S, D/2]
+    sin = jnp.sin(ang)[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(
+        dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    heads: int
+    kv_heads: int
+    hd: int
+    d_model: int
+
+
+def init_attention(key, dims: AttnDims, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], dims.d_model, dims.heads * dims.hd, dtype),
+        "wk": dense_init(ks[1], dims.d_model, dims.kv_heads * dims.hd, dtype),
+        "wv": dense_init(ks[2], dims.d_model, dims.kv_heads * dims.hd, dtype),
+        "wo": dense_init(
+            ks[3], dims.heads * dims.hd, dims.d_model, dtype, scale=0.5
+        ),
+    }
+
+
+def attention_qkv(
+    x: jax.Array, p: dict, dims: AttnDims, positions: jax.Array,
+    rope_theta: float,
+):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, dims.heads, dims.hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(b, s, dims.kv_heads, dims.hd).transpose(
+        0, 2, 1, 3
+    )
+    v = (x @ p["wv"]).reshape(b, s, dims.kv_heads, dims.hd).transpose(
+        0, 2, 1, 3
+    )
+    if rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def attention_block(
+    x: jax.Array,
+    p: dict,
+    dims: AttnDims,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    rope_theta: float = 10000.0,
+    window: Optional[int] = None,
+    kv_override: Optional[tuple] = None,
+    backend: Optional[str] = None,
+) -> tuple[jax.Array, tuple]:
+    """Full attention sub-layer; returns (output, (k, v)) for cache capture.
+
+    ``kv_override`` lets decode substitute the (cache-extended) K/V.
+    """
+    b, s, _ = x.shape
+    q, k, v = attention_qkv(x, p, dims, positions, rope_theta)
+    if kv_override is not None:
+        k_all, v_all = kv_override
+    else:
+        k_all, v_all = k, v
+    o = ops.attention(
+        q, k_all, v_all, causal=causal, window=window, backend=backend
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, dims.heads * dims.hd)
+    return o @ p["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, f, dtype),
+        "w_up": dense_init(ks[1], d, f, dtype),
+        "w_down": dense_init(ks[2], f, d, dtype, scale=0.5),
+    }
+
+
+def mlp_block(x: jax.Array, p: dict, backend: Optional[str] = None):
+    b, s, d = x.shape
+    h = ops.swiglu_mlp(
+        x.reshape(b * s, d), p["w_gate"], p["w_up"], p["w_down"],
+        backend=backend,
+    )
+    return h.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based capacity dispatch, EP-shardable)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, d: int, f: int, n_experts: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+
+    def ew(k, din, dout, scale=1.0):
+        return (
+            jax.random.normal(k, (n_experts, din, dout), jnp.float32)
+            * scale / math.sqrt(din)
+        ).astype(dtype)
+
+    return {
+        "w_router": dense_init(ks[0], d, n_experts, jnp.float32),
+        "w_gate": ew(ks[1], d, f),
+        "w_up": ew(ks[2], d, f),
+        "w_down": ew(ks[3], f, d, scale=0.5),
+    }
+
+
+def _maybe_constrain(x: jax.Array, candidates) -> jax.Array:
+    """Apply the first sharding constraint the active mesh can satisfy.
+
+    Models never hold a mesh; when traced under one (launch/dryrun, multi-
+    host training) the constraint pins GSPMD's layout choice, and in
+    mesh-free unit tests every candidate raises and the value passes
+    through unannotated.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    for spec in candidates:
+        try:
+            return jax.lax.with_sharding_constraint(x, P(*spec))
+        except Exception:
+            continue
+    return x
+
+
+def moe_block(
+    x: jax.Array,  # [B, S, D]
+    p: dict,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    backend: Optional[str] = None,
+    dispatch_groups: int = 32,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k token-choice MoE with GROUP-LOCAL capacity-bounded dispatch.
+
+    Tokens are split into ``dispatch_groups`` groups aligned with the batch
+    sharding; the sort/scatter runs independently per group (vmap), so no
+    collective ever carries the full token stream — the only cross-device
+    movement is the scatter into the [G, E, cap, D] expert buffers (group
+    dim on the batch axes, expert dim on the model axis), which GSPMD lowers
+    to the canonical MoE all-to-all.  (§Perf iteration A1: the previous
+    global-argsort dispatch all-gathered ~TBs per device on qwen3 prefill.)
+
+    Returns (output, aux_loss).  Dropped tokens (over per-group capacity)
+    pass through the residual unchanged (GShard semantics).
+    """
+    b, s, d = x.shape
+    e = p["w_gate"].shape[0]
+    g = math.gcd(b, dispatch_groups)
+    n = (b // g) * s  # tokens per group
+    xf = x.reshape(g, n, d)
+
+    logits = xf.astype(jnp.float32) @ p["w_router"]  # [G, n, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)  # [G, n, K]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style), averaged over groups
+    density = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    router_mean = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * router_mean)
+
+    cap = max(1, int(math.ceil(n * top_k / e * capacity_factor)))
+
+    def dispatch_one(xg, idxg, wg):
+        e_flat = idxg.reshape(-1)                     # [n*K]
+        tok = jnp.arange(n * top_k, dtype=jnp.int32) // top_k
+        order = jnp.argsort(e_flat)                   # stable
+        se = e_flat[order]
+        st = tok[order]
+        sw = wg.reshape(-1)[order]
+        seg_start = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+        pos = jnp.arange(n * top_k, dtype=jnp.int32) - seg_start[se]
+        keep = pos < cap
+        se_safe = jnp.where(keep, se, e)  # over-capacity -> dropped row
+        buf = jnp.zeros((e, cap, d), x.dtype).at[se_safe, pos].set(
+            xg[st], mode="drop"
+        )
+        return buf, se_safe, pos, st, sw, keep
+
+    buf, se_safe, pos, st, sw, keep = jax.vmap(dispatch_one)(
+        xf, idx, weights
+    )
+    batch_first = (("pod", "data"), "model", None, None)
+    buf = _maybe_constrain(
+        buf, [batch_first, (("data",), "model", None, None)]
+    )
+
+    # ---- expert computation (grouped GEMMs, G x E blocked) -----------------
+    # operands stream in storage dtype with f32 accumulation (§Perf A2:
+    # f32-casting the [G,E,cap,*] buffers doubled the memory term)
+    def egemm(t, w):
+        return jnp.einsum(
+            "gecd,edf->gecf", t, w, preferred_element_type=jnp.float32,
+        )
+
+    h = (jax.nn.silu(egemm(buf, p["w_gate"]))
+         * egemm(buf, p["w_up"])).astype(x.dtype)
+    out_e = egemm(h, p["w_down"]).astype(x.dtype)  # [G, E, cap, D]
+
+    def combine_one(oe, se_s, po, stok, swt, kp):
+        gathered = oe[se_s, jnp.minimum(po, cap - 1)]  # [n*K, D]
+        gathered = jnp.where(kp[:, None], gathered, 0.0)
+        return jnp.zeros((n, d), x.dtype).at[stok].add(
+            gathered * swt[:, None].astype(x.dtype)
+        )
+
+    yf = jax.vmap(combine_one)(out_e, se_safe, pos, st, sw, keep)
+    yf = _maybe_constrain(
+        yf, [(("pod", "data"), None, None), (("data",), None, None)]
+    )
+    return yf.reshape(b, s, d), aux

@@ -1,0 +1,597 @@
+"""The model zoo: one generic LM covering all 10 assigned architectures.
+
+``init_params`` / ``forward`` / ``loss_fn`` / ``prefill`` / ``decode_step``
+dispatch on ``ArchConfig.block``:
+
+  dense    — GQA + RoPE + SwiGLU decoder (stablelm/tinyllama/phi4; also the
+             LLaVA backbone with patch-embedding concat and the HuBERT
+             encoder in bidirectional mode)
+  moe      — dense attention + top-k MoE FFN (qwen3-moe, llama4-scout)
+  xlstm    — mLSTM blocks with sLSTM on every 4th layer (xlstm-125m)
+  hybrid   — parallel sliding-window attention + SSM heads (hymba-1.5b)
+
+All layer stacks are scanned (stacked [L, ...] params) so HLO depth is O(1);
+heterogeneous layers (sLSTM/mLSTM, global/local attention) dispatch through
+``lax.cond`` on per-layer flag arrays inside the scan.
+
+TP head/vocab padding (Megatron-style, DESIGN.md §6) zero-initializes the
+padded query-head slices so the padded model computes the *same function*
+as the unpadded one.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import hybrid as hy
+from . import ssm
+from .layers import (
+    AttnDims,
+    apply_norm,
+    attention_block,
+    attention_qkv,
+    dense_init,
+    init_attention,
+    init_mlp,
+    init_moe,
+    init_norm,
+    mlp_block,
+    moe_block,
+)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# Layer-scan unroll knob.  Default 1 (rolled scan: O(1)-in-depth HLO).  The
+# dry-run's cost-extraction compiles set this >1 because XLA cost_analysis
+# counts a while-loop body ONCE regardless of trip count — fully unrolling a
+# 1- and a 2-layer variant yields the exact per-layer marginal cost
+# (launch/dryrun.py).
+SCAN_UNROLL = {"n": 1}
+
+
+def _scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=SCAN_UNROLL["n"])
+
+
+def attn_dims(cfg: ArchConfig, tp: int = 1) -> AttnDims:
+    return AttnDims(
+        heads=cfg.padded_heads(tp),
+        kv_heads=cfg.padded_kv_heads(tp),
+        hd=cfg.hd,
+        d_model=cfg.d_model,
+    )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, tp: int = 1) -> dict:
+    dtype = _dtype(cfg)
+    dims = attn_dims(cfg, tp)
+    vpad = cfg.padded_vocab(tp) if tp > 1 else cfg.vocab
+    keys = jax.random.split(key, cfg.layers + 4)
+
+    def one_layer(k) -> dict:
+        ks = jax.random.split(k, 4)
+        p: dict = {"norm1": init_norm(cfg.d_model, cfg.norm, dtype)}
+        if cfg.block == "xlstm":
+            p["mlstm"] = ssm.init_mlstm(ks[0], cfg.d_model, cfg.heads, dtype)
+            p["slstm"] = ssm.init_slstm(ks[1], cfg.d_model, cfg.heads, dtype)
+            return p
+        p["norm2"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        if cfg.block == "hybrid":
+            p["mix"] = hy.init_hybrid_block(ks[0], dims, cfg.ssm_state, dtype)
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+            return p
+        p["attn"] = _pad_attention(
+            init_attention(ks[0], dims, dtype), cfg, dims
+        )
+        if cfg.block == "moe":
+            p["moe"] = init_moe(
+                ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts, dtype
+            )
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        return p
+
+    layers = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[one_layer(keys[i]) for i in range(cfg.layers)],
+    )
+    params = {
+        "layers": layers,
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if cfg.frontend == "audio":
+        params["frontend"] = dense_init(
+            keys[-1], cfg.frontend_dim, cfg.d_model, dtype
+        )
+    else:
+        params["embed"] = (
+            jax.random.normal(keys[-2], (vpad, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-3], cfg.d_model, vpad, dtype)
+    # per-layer structure flags (scanned alongside the stacked params)
+    if cfg.block == "xlstm":
+        params["is_slstm"] = (
+            jnp.arange(cfg.layers) % 4 == 3
+        ).astype(jnp.float32)
+    if cfg.block == "hybrid":
+        every = cfg.global_layer_every or cfg.layers + 1
+        params["is_global"] = (
+            (jnp.arange(cfg.layers) % every == 0)
+        ).astype(jnp.float32)
+    return params
+
+
+def _pad_attention(p: dict, cfg: ArchConfig, dims: AttnDims) -> dict:
+    """Zero the padded query-head slots so padding is function-preserving.
+
+    Heads are padded PER KV GROUP: the padded layout is
+    [kv_heads, padded_group, hd] with real weights in the first
+    ``real_group`` slots of each group, so ``q_head // padded_group`` maps
+    to the same kv head as the unpadded model.
+    """
+    if dims.heads == cfg.heads:
+        return p
+    pad_group = dims.heads // cfg.kv_heads
+    real_group = cfg.heads // cfg.kv_heads
+    head_idx = jnp.arange(dims.heads)
+    real = (head_idx % pad_group) < real_group  # [H_pad]
+    qmask = jnp.repeat(real, cfg.hd)            # over the H*hd output dim
+    wq = p["wq"] * qmask[None, :].astype(p["wq"].dtype)
+    wo = p["wo"] * qmask[:, None].astype(p["wo"].dtype)
+    return dict(p, wq=wq, wo=wo)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    if cfg.frontend == "audio":
+        return batch["frames"].astype(_dtype(cfg)) @ params["frontend"]
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.frontend == "vision" and "patches" in batch:
+        x = jnp.concatenate(
+            [batch["patches"].astype(x.dtype), x], axis=1
+        )
+    return x
+
+
+def _unembed(cfg: ArchConfig, params: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    *,
+    backend: Optional[str] = None,
+    remat: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward; returns (logits, aux_loss).
+
+    ``remat=True`` checkpoints each scanned layer body (activation
+    rematerialization): backward recomputes the layer instead of saving its
+    internals — the standard memory/compute trade at scale."""
+    x = _embed(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None].repeat(b, axis=0)
+    dims = _dims_from_params(cfg, params)
+
+    def dense_layer(x, lp):
+        h = apply_norm(x, lp["norm1"], cfg.norm)
+        a, _ = attention_block(
+            h, lp["attn"], dims, positions, causal=cfg.causal,
+            rope_theta=cfg.rope_theta, backend=backend,
+        )
+        x = x + a
+        h = apply_norm(x, lp["norm2"], cfg.norm)
+        if cfg.block == "moe":
+            m, aux = moe_block(
+                h, lp["moe"], top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, backend=backend,
+            )
+        else:
+            m, aux = mlp_block(h, lp["mlp"], backend=backend), 0.0
+        return x + m, aux
+
+    def xlstm_layer(x, lp, flag):
+        h = apply_norm(x, lp["norm1"], cfg.norm)
+
+        def do_m(h):
+            y, _ = ssm.mlstm_seq(h, lp["mlstm"], cfg.heads)
+            return y
+
+        def do_s(h):
+            y, _ = ssm.slstm_seq(h, lp["slstm"])
+            return y
+
+        y = jax.lax.cond(flag > 0.5, do_s, do_m, h)
+        return x + y, 0.0
+
+    def hybrid_layer(x, lp, flag):
+        h = apply_norm(x, lp["norm1"], cfg.norm)
+        y, _, _ = hy.hybrid_block_seq(
+            h, lp["mix"], dims, positions, rope_theta=cfg.rope_theta,
+            window=cfg.window, is_global=flag, backend=backend,
+        )
+        x = x + y
+        h = apply_norm(x, lp["norm2"], cfg.norm)
+        return x + mlp_block(h, lp["mlp"], backend=backend), 0.0
+
+    aux_total = 0.0
+    if cfg.block == "xlstm":
+        def body(carry, xs):
+            lp, flag = xs
+            y, aux = xlstm_layer(carry, lp, flag)
+            return y, aux
+        if remat:
+            body = jax.checkpoint(body)
+        x, auxs = _scan(body, x, (params["layers"], params["is_slstm"]))
+    elif cfg.block == "hybrid":
+        def body(carry, xs):
+            lp, flag = xs
+            y, aux = hybrid_layer(carry, lp, flag)
+            return y, aux
+        if remat:
+            body = jax.checkpoint(body)
+        x, auxs = _scan(body, x, (params["layers"], params["is_global"]))
+    else:
+        def body(carry, lp):
+            y, aux = dense_layer(carry, lp)
+            return y, aux
+        if remat:
+            body = jax.checkpoint(body)
+        x, auxs = _scan(body, x, params["layers"])
+    aux_total = jnp.sum(jnp.asarray(auxs))
+
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = _unembed(cfg, params, x)
+    return logits, aux_total
+
+
+def _dims_from_params(cfg: ArchConfig, params: dict) -> AttnDims:
+    """Recover attention dims from the (possibly head-padded) weights."""
+    if cfg.block == "xlstm":
+        return attn_dims(cfg, 1)
+    attn = params["layers"]["mix"]["attn"] if cfg.block == "hybrid" \
+        else params["layers"]["attn"]
+    return AttnDims(
+        heads=attn["wq"].shape[-1] // cfg.hd,
+        kv_heads=attn["wk"].shape[-1] // cfg.hd,
+        hd=cfg.hd,
+        d_model=cfg.d_model,
+    )
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    *,
+    backend: Optional[str] = None,
+    aux_weight: float = 0.01,
+    remat: bool = False,
+) -> tuple[jax.Array, dict]:
+    logits, aux = forward(cfg, params, batch, backend=backend, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1]:]  # loss on text positions only
+    logits = logits.astype(jnp.float32)
+    vpad = logits.shape[-1]
+    if vpad != cfg.vocab:  # mask padded vocab columns out of the softmax
+        pad_mask = jnp.arange(vpad) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None], -1e9, logits)
+    if cfg.block == "encoder" or not cfg.causal:
+        tgt = labels  # frame-level classification (no shift)
+        lg = logits
+    else:
+        tgt = labels[:, 1:]
+        lg = logits[:, :-1]
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux, "ppl": jnp.exp(loss)}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ArchConfig, batch: int, max_len: int, tp: int = 1):
+    """ShapeDtypeStructs of the decode cache (used by launch.dryrun)."""
+    dtype = _dtype(cfg)
+    dims = attn_dims(cfg, tp)
+    L = cfg.layers
+    d = cfg.d_model
+    if cfg.block == "xlstm":
+        inner = 2 * d
+        dh = inner // cfg.heads
+        return {
+            "C": jax.ShapeDtypeStruct((L, batch, cfg.heads, dh, dh),
+                                      jnp.float32),
+            "n": jax.ShapeDtypeStruct((L, batch, cfg.heads, dh), jnp.float32),
+            "m": jax.ShapeDtypeStruct((L, batch, cfg.heads), jnp.float32),
+            "sc": jax.ShapeDtypeStruct((L, batch, d), jnp.float32),
+            "sn": jax.ShapeDtypeStruct((L, batch, d), jnp.float32),
+            "sm": jax.ShapeDtypeStruct((L, batch, d), jnp.float32),
+            "sh": jax.ShapeDtypeStruct((L, batch, d), jnp.float32),
+        }
+    r = _ring_len(cfg, max_len)
+    spec = {
+        "k": jax.ShapeDtypeStruct((L, batch, dims.kv_heads, r, cfg.hd),
+                                  dtype),
+        "v": jax.ShapeDtypeStruct((L, batch, dims.kv_heads, r, cfg.hd),
+                                  dtype),
+        "kv_pos": jax.ShapeDtypeStruct((L, batch, r), jnp.int32),
+    }
+    if cfg.block == "hybrid":
+        inner = 2 * d
+        spec["conv"] = jax.ShapeDtypeStruct(
+            (L, batch, hy.CONV_K - 1, inner), jnp.float32
+        )
+        spec["h"] = jax.ShapeDtypeStruct(
+            (L, batch, inner, cfg.ssm_state), jnp.float32
+        )
+    return spec
+
+
+def _ring_len(cfg: ArchConfig, max_len: int) -> int:
+    """Attention cache length: bounded by the window for very long contexts
+    on windowed archs (DESIGN.md §6 — sub-quadratic serving)."""
+    if cfg.window and max_len > 65536:
+        return cfg.window
+    return max_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, tp: int = 1):
+    return jax.tree.map(
+        lambda sd: jnp.full(sd.shape, -1, sd.dtype)
+        if sd.dtype == jnp.int32 else jnp.zeros(sd.shape, sd.dtype),
+        cache_spec(cfg, batch, max_len, tp),
+    )
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    max_len: int,
+    *,
+    backend: Optional[str] = None,
+):
+    """Run the full prompt; returns (last-token logits, filled cache)."""
+    assert cfg.has_decode
+    x = _embed(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None].repeat(b, axis=0)
+    dims = _dims_from_params(cfg, params)
+    r = _ring_len(cfg, max_len)
+
+    def fit_ring(k):  # [B,Hkv,S,hd] -> [B,Hkv,r,hd] (keep the tail)
+        if s >= r:
+            return k[:, :, s - r:], jnp.arange(s - r, s, dtype=jnp.int32)
+        pad = jnp.zeros(
+            (k.shape[0], k.shape[1], r - s, k.shape[3]), k.dtype
+        )
+        pos = jnp.concatenate([
+            jnp.arange(s, dtype=jnp.int32),
+            jnp.full((r - s,), -1, jnp.int32),
+        ])
+        return jnp.concatenate([k, pad], axis=2), pos
+
+    if cfg.block == "xlstm":
+        def body(carry, xs):
+            lp, flag = xs
+            h = apply_norm(carry, lp["norm1"], cfg.norm)
+
+            def do_m(op):
+                y, st = ssm.mlstm_seq(op[0], op[1]["mlstm"], cfg.heads)
+                sst = ssm.slstm_init_state(b, cfg.d_model)
+                return y, st, sst
+
+            def do_s(op):
+                y, sst = ssm.slstm_seq(op[0], op[1]["slstm"])
+                st = ssm.mlstm_init_state(b, cfg.d_model, cfg.heads)
+                return y, st, sst
+
+            y, mst, sst = jax.lax.cond(flag > 0.5, do_s, do_m, (h, lp))
+            out = {
+                "C": mst["C"], "n": mst["n"], "m": mst["m"],
+                "sc": sst["c"], "sn": sst["n"], "sm": sst["m"],
+                "sh": sst["h"],
+            }
+            return carry + y, out
+
+        x, cache = _scan(body, x, (params["layers"], params["is_slstm"]))
+    elif cfg.block == "hybrid":
+        def body(carry, xs):
+            lp, flag = xs
+            h = apply_norm(carry, lp["norm1"], cfg.norm)
+            y, (k, v), sst = hy.hybrid_block_seq(
+                h, lp["mix"], dims, positions, rope_theta=cfg.rope_theta,
+                window=cfg.window, is_global=flag, backend=backend,
+            )
+            x2 = carry + y
+            h2 = apply_norm(x2, lp["norm2"], cfg.norm)
+            x2 = x2 + mlp_block(h2, lp["mlp"], backend=backend)
+            kr, kpos = fit_ring(k)
+            vr, _ = fit_ring(v)
+            out = {
+                "k": kr, "v": vr,
+                "kv_pos": kpos[None].repeat(b, 0),
+                "conv": sst["conv"], "h": sst["h"],
+            }
+            return x2, out
+
+        x, cache = _scan(body, x, (params["layers"], params["is_global"]))
+    else:
+        def body(carry, lp):
+            h = apply_norm(carry, lp["norm1"], cfg.norm)
+            a, (k, v) = attention_block(
+                h, lp["attn"], dims, positions, causal=cfg.causal,
+                rope_theta=cfg.rope_theta, backend=backend,
+            )
+            x2 = carry + a
+            h2 = apply_norm(x2, lp["norm2"], cfg.norm)
+            if cfg.block == "moe":
+                m, _ = moe_block(
+                    h2, lp["moe"], top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor, backend=backend,
+                )
+            else:
+                m = mlp_block(h2, lp["mlp"], backend=backend)
+            kr, kpos = fit_ring(k)
+            vr, _ = fit_ring(v)
+            out = {"k": kr, "v": vr, "kv_pos": kpos[None].repeat(b, 0)}
+            return x2 + m, out
+
+        x, cache = _scan(body, x, params["layers"])
+
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = _unembed(cfg, params, x[:, -1:])
+    return logits, cache
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,  # [B, 1]
+    cache,
+    pos,                # scalar int32: absolute position of the new token
+    *,
+    backend: Optional[str] = None,
+):
+    """One token through all layers, updating the cache in place."""
+    assert cfg.has_decode
+    batch = {"tokens": tokens}
+    x = _embed(cfg, params, batch)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    dims = _dims_from_params(cfg, params)
+
+    if cfg.block == "xlstm":
+        def body(carry, xs):
+            lp, flag, c = xs
+            h = apply_norm(carry, lp["norm1"], cfg.norm)
+            mst = {"C": c["C"], "n": c["n"], "m": c["m"]}
+            sst = {"c": c["sc"], "n": c["sn"], "m": c["sm"], "h": c["sh"]}
+
+            def do_m(op):
+                y, st = ssm.mlstm_step(op[0], op[1]["mlstm"], cfg.heads, mst)
+                return y, st, sst
+
+            def do_s(op):
+                y, s2 = ssm.slstm_step(op[0], op[1]["slstm"], sst)
+                return y, mst, s2
+
+            y, mst2, sst2 = jax.lax.cond(flag > 0.5, do_s, do_m, (h, lp))
+            out = {
+                "C": mst2["C"], "n": mst2["n"], "m": mst2["m"],
+                "sc": sst2["c"], "sn": sst2["n"], "sm": sst2["m"],
+                "sh": sst2["h"],
+            }
+            return carry + y, out
+
+        x, cache = _scan(body, x, (params["layers"], params["is_slstm"], cache))
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        return _unembed(cfg, params, x), cache
+
+    r = cache["k"].shape[3]
+    slot = pos % r
+
+    def attend_with_cache(h, lp_attn, c, window, is_global=None):
+        q, k_new, v_new = attention_qkv(
+            h, lp_attn, dims, positions, cfg.rope_theta
+        )
+        k = jax.lax.dynamic_update_slice_in_dim(c["k"], k_new, slot, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(c["v"], v_new, slot, axis=2)
+        kv_pos = jax.lax.dynamic_update_slice_in_dim(
+            c["kv_pos"], jnp.full((b, 1), pos, jnp.int32), slot, axis=1
+        )
+        eff_window = None
+        if window:
+            eff_window = jnp.int32(window)
+            if is_global is not None:
+                eff_window = jnp.where(
+                    is_global, jnp.int32(2**30), eff_window
+                )
+        o = _cached_decode_attention(q, k, v, kv_pos, pos, eff_window)
+        o = o.reshape(b, 1, dims.heads * dims.hd)
+        return o @ lp_attn["wo"], {"k": k, "v": v, "kv_pos": kv_pos}
+
+    if cfg.block == "hybrid":
+        def body(carry, xs):
+            lp, flag, c = xs
+            h = apply_norm(carry, lp["norm1"], cfg.norm)
+            a, kv = attend_with_cache(
+                h, lp["mix"]["attn"], c, cfg.window, is_global=flag
+            )
+            sst = {"conv": c["conv"], "h": c["h"]}
+            sout, sst2 = hy.ssm_path_step(h, lp["mix"]["ssm"], sst)
+            x2 = carry + 0.5 * (a + sout)
+            h2 = apply_norm(x2, lp["norm2"], cfg.norm)
+            x2 = x2 + mlp_block(h2, lp["mlp"], backend=backend)
+            out = dict(kv, conv=sst2["conv"], h=sst2["h"])
+            return x2, out
+
+        x, cache = _scan(body, x, (params["layers"], params["is_global"], cache))
+    else:
+        def body(carry, xs):
+            lp, c = xs
+            h = apply_norm(carry, lp["norm1"], cfg.norm)
+            a, kv = attend_with_cache(h, lp["attn"], c, cfg.window or None)
+            x2 = carry + a
+            h2 = apply_norm(x2, lp["norm2"], cfg.norm)
+            if cfg.block == "moe":
+                m, _ = moe_block(
+                    h2, lp["moe"], top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor, backend=backend,
+                )
+            else:
+                m = mlp_block(h2, lp["mlp"], backend=backend)
+            return x2 + m, kv
+
+        x, cache = _scan(body, x, (params["layers"], cache))
+
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return _unembed(cfg, params, x), cache
+
+
+def _cached_decode_attention(q, k, v, kv_pos, pos, window):
+    """GQA decode attention over a (ring) cache with validity masking."""
+    b, hq, _, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32) / math.sqrt(d)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32))
+    valid = (kv_pos >= 0) & (kv_pos <= pos)
+    if window is not None:
+        valid &= kv_pos > pos - window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, 1, d).astype(q.dtype)

@@ -1,0 +1,257 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + recurrent sLSTM [arXiv:2405.04517].
+
+Hardware adaptation (DESIGN.md §3): the mLSTM's matrix-memory recurrence is
+computed in its *chunkwise-parallel* form — within a chunk the interactions
+are dense GEMMs (MXU-friendly), and only the O(S/chunk) inter-chunk state is
+sequential (lax.scan).  The sLSTM has no parallel form (its recurrence is
+input-dependent elementwise, a published property of the architecture), so
+it scans per timestep; the assigned xlstm-125m config places it on every 4th
+layer.
+
+Both blocks expose (sequence, single-step) entry points so training/prefill
+and decode share parameters; decode state is O(1) in context length, which
+is what makes the ``long_500k`` cell servable.
+
+Numerical contract: tests/test_xlstm.py checks the chunkwise mLSTM against
+the naive per-step recurrence oracle to float tolerance.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d: int, heads: int, dtype) -> dict:
+    inner = 2 * d
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, inner, dtype),
+        "w_gate": dense_init(ks[1], d, inner, dtype),
+        "wq": dense_init(ks[2], inner, inner, dtype),
+        "wk": dense_init(ks[3], inner, inner, dtype),
+        "wv": dense_init(ks[4], inner, inner, dtype),
+        "w_if": dense_init(ks[5], inner, 2 * heads, jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((heads,)), 3.0 + jnp.arange(heads, dtype=jnp.float32)]
+        ),
+        "w_down": dense_init(ks[6], inner, d, dtype, scale=0.5),
+    }
+
+
+def mlstm_init_state(batch: int, d: int, heads: int) -> dict:
+    inner = 2 * d
+    dh = inner // heads
+    return {
+        "C": jnp.zeros((batch, heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, heads, dh), jnp.float32),
+        "m": jnp.full((batch, heads), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkv_gates(x, p, heads):
+    b, s, _ = x.shape
+    inner = p["w_up"].shape[1]
+    dh = inner // heads
+    xi = x @ p["w_up"]                       # [B,S,inner]
+    z = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32))
+    def split(h):
+        return h.reshape(b, s, heads, dh).transpose(0, 2, 1, 3)
+    q = split(xi @ p["wq"]) / math.sqrt(dh)
+    k = split(xi @ p["wk"]) / math.sqrt(dh)
+    v = split(xi @ p["wv"])
+    gates = xi.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    li = gates[..., :heads].transpose(0, 2, 1)            # [B,H,S] log-i
+    lf = jax.nn.log_sigmoid(gates[..., heads:]).transpose(0, 2, 1)
+    return q, k, v, li, lf, z
+
+
+def mlstm_seq(
+    x: jax.Array,  # [B, S, D]
+    p: dict,
+    heads: int,
+    state: Optional[dict] = None,
+    chunk: int = 256,
+) -> tuple[jax.Array, dict]:
+    """Chunkwise-parallel mLSTM over a sequence; returns (y, final_state)."""
+    b, s, d = x.shape
+    if state is None:
+        state = mlstm_init_state(b, d, heads)
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    nch = s // chunk
+    q, k, v, li, lf, z = _mlstm_qkv_gates(x, p, heads)
+    dh = q.shape[-1]
+
+    def resh(t):  # [B,H,S,...] -> [nch, B,H,chunk,...]
+        return jnp.moveaxis(
+            t.reshape(t.shape[0], t.shape[1], nch, chunk, *t.shape[3:]), 2, 0
+        )
+
+    qc, kc, vc, lic, lfc = map(resh, (q, k, v, li, lf))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry  # [B,H,dh,dh], [B,H,dh], [B,H]
+        qq, kk, vv, ll, ff = xs  # [B,H,c,...]
+        qq = qq.astype(jnp.float32)
+        kk = kk.astype(jnp.float32)
+        vv = vv.astype(jnp.float32)
+        bcum = jnp.cumsum(ff, axis=-1)               # [B,H,c] inclusive
+        total = bcum[..., -1:]                       # [B,H,1]
+        g = ll - bcum                                # li_s - b_s
+        # intra stabilizer: m_intra[t] = b_t + cummax_{s<=t}(g_s)
+        m_intra = bcum + jax.lax.cummax(g, axis=g.ndim - 1)
+        m_inter = m[..., None] + bcum
+        m_t = jnp.maximum(m_intra, m_inter)          # [B,H,c]
+        # decay matrix D[t,s] = exp(b_t - b_s + li_s - m_t), s <= t
+        Dlog = bcum[..., :, None] + g[..., None, :] - m_t[..., None]
+        c = qq.shape[2]
+        tril = jnp.tril(jnp.ones((c, c), bool))
+        D = jnp.where(tril, jnp.exp(Dlog), 0.0)      # [B,H,c,c]
+        S_mat = jnp.einsum("bhtd,bhsd->bhts", qq, kk) * D
+        intra = jnp.einsum("bhts,bhsd->bhtd", S_mat, vv)
+        inter_scale = jnp.exp(m[..., None] + bcum - m_t)[..., None]
+        inter = jnp.einsum("bhtd,bhde->bhte", qq, C) * inter_scale
+        num = intra + inter
+        denom = jnp.einsum("bhts->bht", S_mat) + \
+            jnp.einsum("bhtd,bhd->bht", qq, n) * inter_scale[..., 0]
+        h = num / jnp.maximum(
+            jnp.abs(denom), jnp.exp(-m_t)
+        )[..., None]                                  # [B,H,c,dh]
+        # state update to end of chunk
+        m_new = jnp.maximum(m + total[..., 0],
+                            jnp.max(ll + total - bcum, axis=-1))
+        sc = jnp.exp(ll + total - bcum - m_new[..., None])  # [B,H,c]
+        C_new = jnp.exp(m + total[..., 0] - m_new)[..., None, None] * C + \
+            jnp.einsum("bhs,bhsd,bhse->bhde", sc, kk, vv)
+        n_new = jnp.exp(m + total[..., 0] - m_new)[..., None] * n + \
+            jnp.einsum("bhs,bhsd->bhd", sc, kk)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(
+        chunk_step, (state["C"], state["n"], state["m"]),
+        (qc, kc, vc, lic, lfc),
+    )
+    h = jnp.moveaxis(hs, 0, 2)  # [B,H,nch,c,dh]
+    h = h.reshape(b, heads, s, dh).transpose(0, 2, 1, 3).reshape(b, s, -1)
+    y = ((h * z).astype(x.dtype)) @ p["w_down"]
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_step(
+    x_t: jax.Array,  # [B, 1, D]
+    p: dict,
+    heads: int,
+    state: dict,
+) -> tuple[jax.Array, dict]:
+    """Single-token recurrent update (decode)."""
+    q, k, v, li, lf, z = _mlstm_qkv_gates(x_t, p, heads)
+    q = q[:, :, 0].astype(jnp.float32)   # [B,H,dh]
+    k = k[:, :, 0].astype(jnp.float32)
+    v = v[:, :, 0].astype(jnp.float32)
+    li = li[..., 0]                      # [B,H]
+    lf = lf[..., 0]
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fs = jnp.exp(lf + m - m_new)[..., None]
+    is_ = jnp.exp(li - m_new)[..., None]
+    C_new = fs[..., None] * C + is_[..., None] * k[..., :, None] \
+        * v[..., None, :]
+    n_new = fs * n + is_ * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    denom = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h = num / jnp.maximum(jnp.abs(denom), jnp.exp(-m_new))[..., None]
+    b = x_t.shape[0]
+    h = h.reshape(b, 1, -1)
+    y = ((h * z).astype(x_t.dtype)) @ p["w_down"]
+    return y, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def mlstm_seq_naive(x, p, heads, state=None):
+    """Per-timestep oracle for the chunkwise form (tests only)."""
+    b, s, d = x.shape
+    if state is None:
+        state = mlstm_init_state(b, d, heads)
+    ys = []
+    for t in range(s):
+        y, state = mlstm_step(x[:, t:t + 1], p, heads, state)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d: int, heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),
+        "r_gates": dense_init(ks[1], d, 4 * d, dtype, scale=0.3),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.ones((d,)), jnp.zeros((d,))]
+        ).astype(jnp.float32),
+        "w_out": dense_init(ks[2], d, d, dtype, scale=0.5),
+    }
+
+
+def slstm_init_state(batch: int, d: int) -> dict:
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, d, x_t, st):
+    """x_t [B,D] float32; one recurrence step (exp-gated, stabilized)."""
+    pre = x_t @ p["w_gates"].astype(jnp.float32) \
+        + st["h"] @ p["r_gates"].astype(jnp.float32) + p["b_gates"]
+    li, lf_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(lf_pre)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    m_new = jnp.maximum(lf + st["m"], li)
+    fs = jnp.exp(lf + st["m"] - m_new)
+    is_ = jnp.exp(li - m_new)
+    c_new = fs * st["c"] + is_ * z
+    n_new = fs * st["n"] + is_
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_seq(
+    x: jax.Array, p: dict, state: Optional[dict] = None
+) -> tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_init_state(b, d)
+
+    def step(st, x_t):
+        st = _slstm_cell(p, d, x_t, st)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(
+        step, state, x.astype(jnp.float32).transpose(1, 0, 2)
+    )
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    return h @ p["w_out"], state
+
+
+def slstm_step(
+    x_t: jax.Array, p: dict, state: dict
+) -> tuple[jax.Array, dict]:
+    b, _, d = x_t.shape
+    st = _slstm_cell(p, d, x_t[:, 0].astype(jnp.float32), state)
+    return (st["h"][:, None].astype(x_t.dtype)) @ p["w_out"], st

@@ -1,0 +1,175 @@
+"""Roofline terms from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective term = collective_bytes / (chips x 3 links x 50e9 B/s ICI)
+
+Sources: ``compiled.cost_analysis()`` supplies HLO FLOPs / bytes accessed
+(fleet-wide: per-partition values x chips).  collective_bytes is parsed from
+the post-SPMD HLO text (``compiled.as_text()``): per collective op we take
+the per-device result-shape bytes, apply a ring-transfer factor (all-reduce
+moves ~2x its bytes, all-gather/reduce-scatter ~1x, all-to-all/permute 1x),
+and attribute DCN-crossing collectives (those whose replica groups span
+pods) to the much slower DCN link instead of ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+TPU_V5E = {
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw_per_link": 50e9,
+    "ici_links": 3,          # per chip on a 2D torus (conservative)
+    "dcn_bw_per_chip": 6.25e9,   # ~50 Gb/s NIC share per chip
+    "hbm_bytes": 16 * 2**30,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,128]' -> bytes; '(bf16[..], f32[..])' -> sum."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    ici_bytes: float     # per-device bytes over ICI
+    dcn_bytes: float     # per-device bytes over DCN (pod-crossing)
+
+    @property
+    def total_bytes(self) -> float:
+        return self.ici_bytes + self.dcn_bytes
+
+
+def parse_collectives(hlo_text: str, chips_per_pod: int = 256) -> CollectiveStats:
+    counts: dict = {}
+    bytes_by_kind: dict = {}
+    ici = dcn = 0.0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+                     r"([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((c for c in _COLLECTIVES if op == c
+                     or op == c + "-start"), None)
+        if kind is None:
+            continue
+        size = _shape_bytes(m.group(1))
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        moved = size * factor
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + moved
+        # pod-crossing detection: replica_groups containing ids >= one pod
+        # apart within a group
+        crossing = False
+        rg = re.search(r"replica_groups=\{(.*?)\}\}?", stripped)
+        if rg:
+            first_group = re.search(r"\{([\d,]+)\}", rg.group(0))
+            if first_group:
+                ids = [int(x) for x in first_group.group(1).split(",")]
+                pods = {i // chips_per_pod for i in ids}
+                crossing = len(pods) > 1
+        if crossing:
+            dcn += moved
+        else:
+            ici += moved
+    return CollectiveStats(counts, bytes_by_kind, ici, dcn)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # fleet-wide
+    hlo_bytes: float          # fleet-wide
+    collective: CollectiveStats
+    model_flops: float        # 6ND (train) / 2ND (decode), fleet-wide work
+    bytes_per_device: Optional[dict] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * TPU_V5E["peak_flops_bf16"])
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * TPU_V5E["hbm_bw"])
+
+    @property
+    def collective_s(self) -> float:
+        ici = self.collective.ici_bytes / (
+            TPU_V5E["ici_links"] * TPU_V5E["ici_bw_per_link"]
+        )
+        dcn = self.collective.dcn_bytes / TPU_V5E["dcn_bw_per_chip"]
+        return ici + dcn
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline estimate: dominant term bounds the step."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: remat/redundancy waste detector."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline-estimated step time."""
+        denom = self.chips * TPU_V5E["peak_flops_bf16"] * self.step_time_s
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_ici_bytes": self.collective.ici_bytes,
+            "collective_dcn_bytes": self.collective.dcn_bytes,
+            "collective_counts": self.collective.counts,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu,
+            "bytes_per_device": self.bytes_per_device,
+        }

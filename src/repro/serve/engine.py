@@ -1,0 +1,147 @@
+"""Batched serving engine: continuous-batching prefill/decode scheduler.
+
+Requests enter a queue, are prefilled into free KV-cache slots, and decode
+advances all active slots in one batched step per iteration (continuous
+batching).  The decode step is ``vmap``-ed over slots with a *per-slot
+position*, so sequences of different lengths share the batch exactly (no
+padding approximations); finished sequences free their slot immediately and
+the next queued request is admitted.
+
+This engine is what the Reasoning Compiler accelerates end-to-end: its
+attention/MLP kernels take their block configs from the tuning cache
+(core/autotuner.py), mirroring the paper's model-serving framing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching over a shared decode cache."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        slots: int = 4,
+        max_len: int = 512,
+        backend: Optional[str] = None,
+    ):
+        assert cfg.has_decode, f"{cfg.name} is encoder-only"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.backend = backend
+
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}       # slot -> request
+        self.positions = np.zeros((slots,), np.int32)
+
+        self.cache = M.init_cache(cfg, slots, max_len)
+        self._prefill_one = jax.jit(
+            lambda p, toks: M.prefill(
+                cfg, p, {"tokens": toks}, max_len, backend=backend
+            )
+        )
+
+        def _dec_row(p, tok, cache_row, pos):
+            cache1 = jax.tree.map(lambda x: x[:, None], cache_row)
+            logits, cache1 = M.decode_step(
+                cfg, p, tok[None, None], cache1, pos, backend=backend
+            )
+            return logits[0], jax.tree.map(lambda x: x[:, 0], cache1)
+
+        self._decode = jax.jit(
+            jax.vmap(_dec_row, in_axes=(None, 0, 1, 0), out_axes=(0, 1))
+        )
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_iters: int = 10_000) -> list[Request]:
+        """Drive until queue + active drain; returns completed requests."""
+        finished: list[Request] = []
+        for _ in range(max_iters):
+            if not self.queue and not self.active:
+                break
+            self._admit()
+            finished.extend(self._decode_iteration())
+        return finished
+
+    # -- internals ----------------------------------------------------------------
+    def _free_slots(self) -> list[int]:
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, cache1 = self._prefill_one(self.params, toks)
+            self.cache = jax.tree.map(
+                lambda full, one: full.at[:, slot].set(
+                    _pad_row(one[:, 0], full[:, slot])
+                ),
+                self.cache, cache1,
+            )
+            req.output.append(int(jnp.argmax(logits[0, -1])))
+            self.active[slot] = req
+            self.positions[slot] = len(req.prompt)
+
+    def _decode_iteration(self) -> list[Request]:
+        if not self.active:
+            return []
+        toks = np.zeros((self.slots,), np.int32)
+        for slot, req in self.active.items():
+            toks[slot] = req.output[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.positions),
+        )
+        done = []
+        for slot, req in list(self.active.items()):
+            nxt = int(jnp.argmax(logits[slot, -1]))
+            req.output.append(nxt)
+            self.positions[slot] += 1
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and nxt == req.eos_id)
+                    or int(self.positions[slot]) >= self.max_len - 1):
+                req.done = True
+                done.append(req)
+                del self.active[slot]
+                self.positions[slot] = 0
+        return done
+
+
+def _pad_row(one_row, full_row):
+    """Pad a single-request cache row onto the shared cache row; integer
+    (kv_pos) pads use -1 (= invalid) so masks stay correct."""
+    if one_row.shape == full_row.shape:
+        return one_row.astype(full_row.dtype)
+    pads = [(0, f - o) for o, f in zip(one_row.shape, full_row.shape)]
+    fill = -1 if jnp.issubdtype(full_row.dtype, jnp.integer) else 0
+    return jnp.pad(one_row, pads, constant_values=fill).astype(full_row.dtype)

@@ -1,0 +1,96 @@
+"""Fault-tolerance machinery: straggler watchdog, heartbeats, retry policy.
+
+At 1000+ nodes the dominant failure modes are (a) full node loss — handled
+by checkpoint/restart (checkpoint.py, elastic re-mesh), (b) stragglers —
+slow-but-alive hosts that stall synchronous steps, and (c) transient step
+failures.  This module provides the detection half; the Trainer wires it to
+the restart policy (tests inject delays/failures to exercise the paths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration_s: float
+    baseline_s: float
+
+    @property
+    def slowdown(self) -> float:
+        return self.duration_s / max(self.baseline_s, 1e-9)
+
+
+class StragglerWatchdog:
+    """EWMA step-time baseline; flags steps slower than ``threshold``x.
+
+    In a multi-host deployment the flagged events feed the controller's
+    restart/reassign policy; here they are surfaced in trainer metrics and
+    asserted in tests with injected delays.
+    """
+
+    def __init__(self, threshold: float = 2.5, alpha: float = 0.1,
+                 warmup_steps: int = 3):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup_steps = warmup_steps
+        self.baseline: Optional[float] = None
+        self.events: list[StragglerEvent] = []
+        self._seen = 0
+
+    def observe(self, step: int, duration_s: float) -> Optional[StragglerEvent]:
+        self._seen += 1
+        if self._seen <= self.warmup_steps:
+            # warmup (JIT compile, cache fill) must not poison the baseline
+            return None
+        if self.baseline is None:
+            self.baseline = duration_s
+            return None
+        if duration_s > self.threshold * self.baseline:
+            ev = StragglerEvent(step, duration_s, self.baseline)
+            self.events.append(ev)
+            # do not fold outliers into the baseline
+            return ev
+        self.baseline = (1 - self.alpha) * self.baseline \
+            + self.alpha * duration_s
+        return None
+
+
+class Heartbeat:
+    """Liveness signal a controller polls; a silent host => presumed dead."""
+
+    def __init__(self, timeout_s: float = 60.0, clock: Callable = time.time):
+        self.timeout_s = timeout_s
+        self._clock = clock
+        self._last: dict[int, float] = {}
+
+    def beat(self, host: int) -> None:
+        self._last[host] = self._clock()
+
+    def dead_hosts(self) -> list[int]:
+        now = self._clock()
+        return [h for h, t in self._last.items()
+                if now - t > self.timeout_s]
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounded retry with checkpoint rollback on repeated failure."""
+
+    max_retries: int = 3
+    failures: int = 0
+
+    def record_failure(self) -> str:
+        """Returns the action: 'retry' | 'restore' | 'abort'."""
+        self.failures += 1
+        if self.failures <= 1:
+            return "retry"
+        if self.failures <= self.max_retries:
+            return "restore"
+        return "abort"
+
+    def record_success(self) -> None:
+        self.failures = 0

@@ -1,0 +1,145 @@
+"""The training driver: wires data, train_step, checkpointing, and FT.
+
+Single-host usage (examples/train_lm.py) runs on whatever devices exist;
+multi-pod usage goes through ``launch/train.py`` which builds the production
+mesh and shards params/batches via ``dist.sharding`` before handing off to
+this loop.  The loop itself is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..data.pipeline import SyntheticLMDataset
+from ..models import model as M
+from ..optim import adamw
+from . import checkpoint as ckpt
+from .fault_tolerance import RetryPolicy, StragglerWatchdog
+from .train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    microbatches: int = 1
+    remat: str = "none"
+    compress_grads: bool = False
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        shape: ShapeSpec,
+        tcfg: TrainerConfig,
+        opt_cfg: Optional[adamw.AdamWConfig] = None,
+        backend: Optional[str] = None,
+        inject_failure_at: Optional[int] = None,  # tests: simulated fault
+        inject_delay_at: Optional[int] = None,    # tests: simulated straggler
+    ):
+        self.cfg = cfg
+        self.shape = shape
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(
+            total_steps=tcfg.total_steps
+        )
+        self.data = SyntheticLMDataset(cfg, shape, seed=tcfg.seed)
+        self.watchdog = StragglerWatchdog()
+        self.retry = RetryPolicy()
+        self._inject_failure_at = inject_failure_at
+        self._inject_delay_at = inject_delay_at
+
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params = M.init_params(cfg, key)
+        self.opt_state = adamw.init(self.params)
+        self.step = 0
+        self.history: list[dict] = []
+
+        fn = make_train_step(
+            cfg, self.opt_cfg, backend=backend,
+            microbatches=tcfg.microbatches, remat=tcfg.remat,
+            compress=tcfg.compress_grads,
+        )
+        self.train_step = jax.jit(fn, donate_argnums=(0, 1))
+
+    # -- checkpointing -------------------------------------------------------
+    def save(self) -> Optional[str]:
+        if not self.tcfg.checkpoint_dir:
+            return None
+        return ckpt.save(
+            self.tcfg.checkpoint_dir, self.step, self.params,
+            self.opt_state, extra={"data": self.data.state_dict()},
+        )
+
+    def restore(self, step: Optional[int] = None) -> None:
+        assert self.tcfg.checkpoint_dir
+        self.step, self.params, self.opt_state, extra = ckpt.restore(
+            self.tcfg.checkpoint_dir, step, self.params, self.opt_state
+        )
+        if "data" in extra:
+            self.data.load_state_dict(extra["data"])
+
+    # -- main loop --------------------------------------------------------------
+    def run(self) -> list[dict]:
+        preempt = ckpt.PreemptionHandler().install()
+        try:
+            while self.step < self.tcfg.total_steps:
+                t0 = time.perf_counter()
+                batch = self.data.next_batch()
+                try:
+                    if self._inject_failure_at == self.step:
+                        self._inject_failure_at = None
+                        raise RuntimeError("injected node failure")
+                    out = self.train_step(
+                        self.params, self.opt_state, batch
+                    )
+                    self.params, self.opt_state, metrics = out
+                    self.retry.record_success()
+                except RuntimeError:
+                    action = self.retry.record_failure()
+                    if action == "retry":
+                        self.data.state.step -= 1  # replay the batch
+                        continue
+                    if action == "restore" and self.tcfg.checkpoint_dir \
+                            and ckpt.latest_step(self.tcfg.checkpoint_dir) \
+                            is not None:
+                        self.restore()
+                        continue
+                    raise
+                if self._inject_delay_at == self.step:
+                    self._inject_delay_at = None
+                    time.sleep(0.2)
+                dur = time.perf_counter() - t0
+                self.watchdog.observe(self.step, dur)
+                self.step += 1
+                rec = {
+                    "step": self.step,
+                    "loss": float(metrics["loss"]),
+                    "grad_norm": float(metrics["grad_norm"]),
+                    "time_s": dur,
+                }
+                self.history.append(rec)
+                if self.step % self.tcfg.log_every == 0:
+                    print(
+                        f"step {rec['step']:5d} loss {rec['loss']:.4f} "
+                        f"gnorm {rec['grad_norm']:.3f} {dur * 1e3:.0f}ms"
+                    )
+                if (self.tcfg.checkpoint_dir
+                        and (self.step % self.tcfg.checkpoint_every == 0
+                             or preempt.requested.is_set())):
+                    self.save()
+                    if preempt.requested.is_set():
+                        print("preemption requested: saved and exiting")
+                        break
+        finally:
+            preempt.uninstall()
+        return self.history

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Keep smoke tests on the single real device (the dry-run sets its own
+# fake-device count in a subprocess; never globally — see launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

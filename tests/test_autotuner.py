@@ -1,0 +1,51 @@
+"""Autotuner: schedule -> Pallas block extraction + tuning cache."""
+import os
+import tempfile
+
+from repro.core import schedule as S
+from repro.core.autotuner import (
+    AttentionBlocks,
+    GemmBlocks,
+    KernelTuner,
+    _quantize_block,
+    attention_tuning_workload,
+)
+
+
+def test_quantize_block():
+    assert _quantize_block(100, 4096, lo=8) == 64
+    assert _quantize_block(128, 4096, lo=8) == 128
+    assert _quantize_block(3, 4096, lo=8) == 8
+    assert _quantize_block(2000, 4096, lo=8, hi=1024) == 1024
+    # must divide the extent
+    assert 4096 % _quantize_block(100, 4096) == 0
+
+
+def test_blocks_from_schedule():
+    w = attention_tuning_workload(8, 1024, 1024, 128)
+    s = S.initial_schedule(w)
+    s = S.TileSize("i", (8, 1, 2, 64)).apply(s)
+    s = S.TileSize("j", (4, 1, 2, 128)).apply(s)
+    b = AttentionBlocks.from_schedule(s)
+    assert b.block_q == 128 and b.block_k == 256
+    assert 1024 % b.block_q == 0 and 1024 % b.block_k == 0
+
+
+def test_tuner_caches(tmp_path):
+    cache = os.path.join(tmp_path, "cache.json")
+    t = KernelTuner(budget=12, cache_path=cache)
+    b1 = t.tune_gemm(256, 512, 512)
+    assert os.path.exists(cache)
+    # second tuner instance hits the cache (no search)
+    t2 = KernelTuner(budget=12, cache_path=cache)
+    b2 = t2.tune_gemm(256, 512, 512)
+    assert (b1.bm, b1.bn, b1.bk) == (b2.bm, b2.bn, b2.bk)
+
+
+def test_tuned_blocks_are_legal_for_pallas(tmp_path):
+    t = KernelTuner(budget=16,
+                    cache_path=os.path.join(tmp_path, "c.json"))
+    b = t.tune_attention(8, 512, 512, 64)
+    assert 512 % b.block_q == 0 and 512 % b.block_k == 0
+    g = t.tune_gemm(512, 1024, 2048)
+    assert 512 % g.bm == 0 and 1024 % g.bn == 0 and 2048 % g.bk == 0

@@ -1,0 +1,134 @@
+"""Checkpoint atomicity/restore + fault-tolerance machinery + trainer
+integration (injected failures and stragglers)."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import (
+    Heartbeat,
+    RetryPolicy,
+    StragglerWatchdog,
+)
+from repro.train.trainer import Trainer, TrainerConfig
+
+CFG = get_config("tinyllama-1.1b", smoke=True)
+
+
+def test_checkpoint_roundtrip_bitwise():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 7, params, opt, extra={"data": {"step": 7}})
+        step, p2, o2, extra = ckpt.restore(d, None, params, opt)
+        assert step == 7 and extra["data"]["step"] == 7
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(opt), jax.tree.leaves(o2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_keeps_latest():
+    params = {"w": jnp.ones((4,))}
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4):
+            ckpt.save(d, s, params, keep=2)
+        steps = sorted(
+            int(x.split("_")[1]) for x in os.listdir(d)
+            if x.startswith("step_")
+        )
+        assert steps == [3, 4]
+        assert ckpt.latest_step(d) == 4
+
+
+def test_checkpoint_no_tmp_left_behind():
+    params = {"w": jnp.ones((4,))}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, params)
+        assert not [x for x in os.listdir(d) if x.endswith(".tmp")]
+
+
+def test_straggler_watchdog_flags_outliers():
+    w = StragglerWatchdog(threshold=2.0, warmup_steps=2)
+    for i in range(2):
+        assert w.observe(i, 10.0) is None  # warmup (compile) ignored
+    for i in range(2, 8):
+        assert w.observe(i, 0.1) is None
+    ev = w.observe(8, 0.5)
+    assert ev is not None and ev.slowdown > 2.0
+    # outlier did not poison the baseline
+    assert w.observe(9, 0.1) is None
+
+
+def test_heartbeat_detects_dead_hosts():
+    t = [0.0]
+    hb = Heartbeat(timeout_s=5.0, clock=lambda: t[0])
+    hb.beat(0)
+    hb.beat(1)
+    t[0] = 3.0
+    hb.beat(0)
+    t[0] = 7.0
+    assert hb.dead_hosts() == [1]
+
+
+def test_retry_policy_escalates():
+    rp = RetryPolicy(max_retries=3)
+    assert rp.record_failure() == "retry"
+    assert rp.record_failure() == "restore"
+    assert rp.record_failure() == "restore"
+    assert rp.record_failure() == "abort"
+    rp.record_success()
+    assert rp.failures == 0
+
+
+@pytest.mark.slow
+def test_trainer_recovers_from_failure_and_flags_straggler():
+    shape = ShapeSpec("t", 32, 4, "train")
+    with tempfile.TemporaryDirectory() as d:
+        t = Trainer(
+            CFG, shape,
+            TrainerConfig(total_steps=8, checkpoint_every=4,
+                          checkpoint_dir=d, log_every=100),
+            inject_failure_at=5, inject_delay_at=6,
+        )
+        hist = t.run()
+        assert len(hist) == 8            # failure retried, not fatal
+        assert t.watchdog.events         # straggler flagged
+        # restart from checkpoint continues the run (elastic restore path)
+        t2 = Trainer(CFG, shape, TrainerConfig(
+            total_steps=10, checkpoint_dir=d, log_every=100))
+        t2.restore()
+        assert t2.step == 8
+        t2.run()
+        assert t2.step == 10
+
+
+@pytest.mark.slow
+def test_trainer_loss_decreases():
+    shape = ShapeSpec("t", 64, 8, "train")
+    t = Trainer(CFG, shape, TrainerConfig(total_steps=30, log_every=100))
+    hist = t.run()
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first, (first, last)
+
+
+@pytest.mark.slow
+def test_trainer_microbatch_equivalence():
+    """Grad accumulation must match the monolithic step (same seed)."""
+    shape = ShapeSpec("t", 32, 8, "train")
+    t1 = Trainer(CFG, shape, TrainerConfig(total_steps=3, log_every=100))
+    t2 = Trainer(CFG, shape, TrainerConfig(total_steps=3, microbatches=4,
+                                           log_every=100))
+    h1, h2 = t1.run(), t2.run()
+    np.testing.assert_allclose(
+        [h["loss"] for h in h1], [h["loss"] for h in h2], rtol=2e-2
+    )

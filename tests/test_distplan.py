@@ -1,0 +1,50 @@
+"""Distribution-plan tuner: reasoned proposals drive the dominant roofline
+term down on an analytical stand-in cell (the production evaluator is a
+dryrun re-lower; tests/test_dryrun_integration.py covers that path)."""
+from repro.core.distplan import DistPlan, DistPlanTuner, PlanEval
+
+
+def _toy_cell(plan: DistPlan) -> PlanEval:
+    """Analytical cell: memory shrinks with microbatching/remat, collectives
+    grow with microbatching and dispatch granularity, compute grows with
+    remat. Optimum is an interior point, not a corner."""
+    act = 40.0 / plan.microbatches * (0.55 if plan.remat else 1.0) \
+        * (plan.attn_chunk / 1024) ** 0.3
+    peak = act * 2**30
+    mem_s = 2.0 / plan.microbatches * (0.7 if plan.remat else 1.0)
+    coll_s = 0.4 + 0.05 * plan.microbatches + 0.004 * plan.dispatch_groups
+    comp_s = 0.8 * (1.33 if plan.remat else 1.0)
+    return PlanEval(plan, comp_s, mem_s, coll_s, peak, peak <= 15.5 * 2**30)
+
+
+def test_tuner_fixes_oom_then_improves():
+    t = DistPlanTuner(_toy_cell)
+    start = DistPlan(microbatches=1, remat=False)
+    assert not _toy_cell(start).fits  # starts OOM
+    best = t.tune(start, budget=10)
+    assert best.fits
+    assert best.step_s < _toy_cell(start).step_s
+    assert t.log and any(s.accepted for s in t.log)
+    # the log reads as hypothesis -> before -> after
+    rep = t.report()
+    assert "ACCEPT" in rep and "->" in rep
+
+
+def test_tuner_respects_budget():
+    t = DistPlanTuner(_toy_cell)
+    t.tune(DistPlan(), budget=4)
+    assert t.samples <= 4
+
+
+def test_proposals_target_dominant_term():
+    t = DistPlanTuner(_toy_cell)
+    ev = _toy_cell(DistPlan(microbatches=16, remat=True))
+    assert ev.dominant == "collective"
+    ideas = t.propose(ev)
+    assert any("collective-bound" in h for h, _ in ideas)
+
+
+def test_plan_knob_navigation():
+    p = DistPlan()
+    assert p.with_knob("microbatches", 8).microbatches == 8
+    assert p.with_knob("remat", False).remat is False

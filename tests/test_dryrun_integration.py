@@ -1,0 +1,56 @@
+"""Dry-run integration: the full lower+compile+roofline path on a small
+fake-device mesh (subprocess, so the device-count flag never leaks into the
+rest of the suite)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, %r)
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch import dryrun
+    from repro.roofline.analysis import parse_collectives
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    out = {}
+    for shape in ("train_4k", "decode_32k"):
+        fn, args, mf = dryrun.build_cell(cfg, shape, mesh)
+        with mesh:
+            compiled = fn.lower(*args).compile()
+        cost = compiled.cost_analysis()
+        coll = parse_collectives(compiled.as_text(), chips_per_pod=4)
+        mem = compiled.memory_analysis()
+        out[shape] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "collectives": sum(coll.counts.values()),
+            "temp": int(mem.temp_size_in_bytes),
+        }
+    print("RESULT:" + json.dumps(out))
+""") % os.path.abspath(SRC)
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_compiles():
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = json.loads(line[len("RESULT:"):])
+    for shape in ("train_4k", "decode_32k"):
+        assert out[shape]["flops"] > 0
+        assert out[shape]["temp"] > 0
+    # TP over 4-way model axis must introduce collectives in training
+    assert out["train_4k"]["collectives"] > 0

@@ -1,0 +1,130 @@
+"""Per-kernel correctness sweeps: Pallas (interpret mode) vs pure-jnp
+oracles across shapes, dtypes, and masking variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul, moe_gemm, swiglu_gateup
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return (x * 0.25).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,d,causal,window",
+    [
+        (1, 2, 2, 64, 64, 32, True, None),     # MHA causal
+        (2, 4, 2, 64, 64, 64, True, None),     # GQA
+        (1, 8, 1, 64, 64, 32, False, None),    # MQA bidirectional
+        (1, 4, 4, 32, 128, 32, True, None),    # cross lengths (right-aligned)
+        (1, 2, 2, 64, 64, 32, True, 48),       # sliding window
+        (1, 4, 2, 32, 32, 128, True, None),    # wide head_dim
+    ],
+)
+def test_flash_attention_vs_ref(b, hq, hkv, sq, skv, d, causal, window,
+                                dtype):
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (b, hq, sq, d), dtype)
+    k = _rand(ks[1], (b, hkv, skv, d), dtype)
+    v = _rand(ks[2], (b, hkv, skv, d), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, block_q=32, block_k=32,
+        interpret=True,
+    )
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        out.astype(np.float32), want.astype(np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("blocks", [(16, 32, 32), (64, 128, 128)])
+def test_flash_attention_block_shape_invariance(blocks):
+    bq, bk, _ = blocks
+    q = _rand(KEY, (1, 2, 128, 32), jnp.float32)
+    k = _rand(KEY, (1, 2, 128, 32), jnp.float32)
+    v = _rand(jax.random.PRNGKey(1), (1, 2, 128, 32), jnp.float32)
+    want = ref.attention_ref(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+    (64, 64, 64, 32, 32, 32),
+    (128, 256, 512, 64, 128, 128),
+])
+def test_matmul_vs_ref(m, n, k, bm, bn, bk, dtype):
+    a = _rand(KEY, (m, k), dtype)
+    b = _rand(jax.random.PRNGKey(1), (k, n), dtype)
+    out = matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.matmul_ref(a, b).astype(np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@pytest.mark.parametrize("m,n,k", [(64, 128, 64), (128, 256, 256)])
+def test_swiglu_gateup_vs_ref(m, n, k):
+    x = _rand(KEY, (m, k), jnp.float32)
+    wg = _rand(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    wu = _rand(jax.random.PRNGKey(2), (k, n), jnp.float32)
+    out = swiglu_gateup(x, wg, wu, bm=32, bn=64, bk=32, interpret=True)
+    np.testing.assert_allclose(
+        out, ref.swiglu_gateup_ref(x, wg, wu), atol=1e-4, rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("e,cap,d,f", [(4, 32, 64, 128), (8, 64, 128, 64)])
+def test_moe_gemm_vs_ref(e, cap, d, f):
+    x = _rand(KEY, (e, cap, d), jnp.float32)
+    w = _rand(jax.random.PRNGKey(1), (e, d, f), jnp.float32)
+    out = moe_gemm(x, w, bm=16, bn=64, bk=32, interpret=True)
+    np.testing.assert_allclose(
+        out, ref.moe_gemm_ref(x, w), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_chunked_attention_matches_ref_across_chunks():
+    q = _rand(KEY, (2, 4, 256, 32), jnp.float32)
+    k = _rand(jax.random.PRNGKey(1), (2, 2, 256, 32), jnp.float32)
+    v = _rand(jax.random.PRNGKey(2), (2, 2, 256, 32), jnp.float32)
+    want = ref.attention_ref(q, k, v, causal=True)
+    for chunk in (32, 64, 256):
+        out = ops._attention_jax_chunked(
+            q, k, v, causal=True, sm_scale=32 ** -0.5, window=None,
+            chunk=chunk,
+        )
+        np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+def test_ops_backend_dispatch():
+    q = _rand(KEY, (1, 2, 64, 32), jnp.float32)
+    k = _rand(jax.random.PRNGKey(1), (1, 2, 64, 32), jnp.float32)
+    v = _rand(jax.random.PRNGKey(2), (1, 2, 64, 32), jnp.float32)
+    a = ops.attention(q, k, v, backend="jax")
+    b = ops.attention(q, k, v, backend="interpret", block_q=32, block_k=32)
+    c = ops.attention(q, k, v, backend="ref")
+    np.testing.assert_allclose(a, c, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(b, c, atol=2e-5, rtol=2e-5)
+
+
+def test_swiglu_mlp_pipeline():
+    x = _rand(KEY, (64, 128), jnp.float32)
+    wg = _rand(jax.random.PRNGKey(1), (128, 256), jnp.float32)
+    wu = _rand(jax.random.PRNGKey(2), (128, 256), jnp.float32)
+    wd = _rand(jax.random.PRNGKey(3), (256, 128), jnp.float32)
+    a = ops.swiglu_mlp(x, wg, wu, wd, backend="jax")
+    b = ops.swiglu_mlp(x, wg, wu, wd, backend="interpret", bm=32, bn=128,
+                       bk=64)
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)

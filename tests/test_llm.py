@@ -1,0 +1,157 @@
+"""LLM interface: prompt construction, parsing, validation, fallback
+(paper §3.1, Appendix A/G)."""
+import random
+
+import pytest
+
+from repro.core import schedule as S
+from repro.core.cost_model import get_platform
+from repro.core.llm import (
+    MODEL_TIERS,
+    APILLM,
+    HeuristicReasonerLLM,
+    LLMProposer,
+    TraceEntry,
+    build_prompt,
+    make_llm,
+    parse_response,
+)
+from repro.core.workloads import get_workload
+
+
+def _trace(wname="deepseek_r1_moe", n=3):
+    w = get_workload(wname)
+    s = S.initial_schedule(w)
+    entries = [TraceEntry(s, 1.0, 1.0)]
+    rng = random.Random(0)
+    for i in range(n - 1):
+        s = S.random_transform(rng, s).apply(s)
+        entries.insert(0, TraceEntry(s, 1.0 / (i + 2), float(i + 2)))
+    return entries
+
+
+def test_prompt_contains_paper_sections():
+    p = build_prompt(_trace(), get_platform("core-i9"), trace_depth=2)
+    for frag in (
+        "Monte Carlo Tree Search", "Transformation history",
+        "Performance estimate", "Available transformations",
+        "Transformations to apply", "Reasoning:",
+    ):
+        assert frag in p.text, frag
+    assert len(p.trace) == 3  # current + parent + grandparent
+
+
+def test_prompt_trace_depth():
+    assert len(build_prompt(_trace(n=4), get_platform("core-i9"),
+                            trace_depth=1).trace) == 2
+    assert len(build_prompt(_trace(n=4), get_platform("core-i9"),
+                            trace_depth=3).trace) == 4
+
+
+def test_parse_paper_example_format():
+    """The exact output format from the paper's Appendix A."""
+    w = get_workload("deepseek_r1_moe")
+    s = S.initial_schedule(w)
+    text = ("Reasoning: The current schedule tiles the j-axis as 2048; "
+            "I would retile and unroll.\n"
+            "Transformations to apply: TileSize, TileSize, ComputeLocation, "
+            "Parallel, Unroll, Unroll.")
+    prop = parse_response(text, s, random.Random(0))
+    assert not prop.fallback
+    assert prop.n_proposed == 6
+    # ComputeLocation is illegal on an epilogue-free matmul -> dropped
+    names = [t.name for t in prop.transforms]
+    assert "ComputeLocation" not in names
+    assert names.count("TileSize") == 2
+    assert "reasoning" not in prop.reasoning.lower()[:0]  # parsed non-empty
+    assert prop.reasoning.startswith("The current schedule")
+
+
+def test_parse_parameterized_calls():
+    w = get_workload("deepseek_r1_moe")
+    s = S.initial_schedule(w)
+    text = ("Reasoning: x.\nTransformations to apply: "
+            "TileSize(axis=j, decision=[4, 4, 2, 64]), Vectorize(width=8), "
+            "Parallel(levels=1), CacheRead(operand=B)")
+    prop = parse_response(text, s, random.Random(0))
+    assert [t.name for t in prop.transforms] == [
+        "TileSize", "Vectorize", "Parallel", "CacheRead",
+    ]
+    ts = prop.transforms[0]
+    assert ts.axis == "j" and ts.decision == (4, 4, 2, 64)
+    # sequence is applied cumulatively: Vectorize(8) legal only AFTER retile
+    out = s
+    for t in prop.transforms:
+        out = t.apply(out)
+    assert out.vector_width == 8
+
+
+def test_all_invalid_triggers_fallback():
+    w = get_workload("deepseek_r1_moe")
+    s = S.initial_schedule(w)
+    text = "Reasoning: x.\nTransformations to apply: WarpShuffle, Hoist."
+    prop = parse_response(text, s, random.Random(0))
+    assert prop.fallback and prop.n_invalid == 2
+
+
+def test_invalid_params_fall_back_to_family_sampling():
+    w = get_workload("deepseek_r1_moe")
+    s = S.initial_schedule(w)
+    text = ("Reasoning: x.\nTransformations to apply: "
+            "TileSize(axis=zz, decision=[4]), Vectorize(width=8)")
+    prop = parse_response(text, s, random.Random(0))
+    # bad TileSize dropped; Vectorize(8) illegal on inner tile 1 -> dropped
+    assert prop.n_invalid >= 1
+
+
+def test_tier_fallback_ordering():
+    """Weaker tiers emit more invalid mentions and fall back more
+    (Table 8); strong tiers essentially never do."""
+    plat = get_platform("core-i9")
+    fb, inv = {}, {}
+    for tier in ("gpt-4o-mini", "llama3.1-8b", "deepseek-r1-distill-7b"):
+        prop = LLMProposer(make_llm(tier), plat)
+        rng = random.Random(0)
+        trace = _trace()
+        for _ in range(300):
+            prop.propose(trace, rng)
+        fb[tier] = prop.stats.fallback_rate
+        inv[tier] = prop.stats.invalid_rate
+    assert fb["gpt-4o-mini"] <= 0.01
+    assert inv["deepseek-r1-distill-7b"] > inv["llama3.1-8b"] \
+        > inv["gpt-4o-mini"]
+    assert fb["deepseek-r1-distill-7b"] >= fb["gpt-4o-mini"]
+    assert fb["llama3.1-8b"] >= fb["gpt-4o-mini"]
+
+
+def test_reasoner_output_is_paper_format():
+    llm = HeuristicReasonerLLM("gpt-4o-mini")
+    p = build_prompt(_trace(), get_platform("core-i9"))
+    text = llm.complete(p, random.Random(0))
+    assert text.startswith("Reasoning:")
+    assert "Transformations to apply:" in text
+
+
+def test_reasoner_deterministic():
+    llm = HeuristicReasonerLLM("gpt-4o-mini")
+    p = build_prompt(_trace(), get_platform("graviton2"))
+    assert llm.complete(p, random.Random(7)) == \
+        llm.complete(p, random.Random(7))
+
+
+def test_api_llm_constructs_offline():
+    api = APILLM(model="gpt-4o-mini")
+    assert api.name == "api:gpt-4o-mini"
+    assert make_llm("api:gpt-4o-mini").model == "gpt-4o-mini"
+
+
+def test_make_llm_rejects_unknown():
+    with pytest.raises(KeyError):
+        make_llm("gpt-17")
+
+
+def test_tier_registry_matches_paper_models():
+    assert set(MODEL_TIERS) == {
+        "gpt-4o-mini", "o1-mini", "llama3.3-70b",
+        "deepseek-r1-distill-32b", "llama3.1-8b", "deepseek-r1-distill-7b",
+    }

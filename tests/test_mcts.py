@@ -1,0 +1,131 @@
+"""MCTS invariants (paper §3.2): UCT accounting, acyclicity, sample
+accounting, fallback integration, and the search-method ordering."""
+import math
+import random
+
+import pytest
+
+from repro.core.cost_model import HardwareOracle, get_platform
+from repro.core.evolutionary import EvolutionarySearch
+from repro.core.llm import LLMProposer, make_llm
+from repro.core.mcts import MCTS, SearchCurve
+from repro.core.search import compare_efficiency, run_search
+from repro.core.workloads import get_workload
+
+
+def _mcts(wname="deepseek_r1_moe", guided=False, **kw):
+    plat = get_platform("core-i9")
+    oracle = HardwareOracle(plat)
+    prop = LLMProposer(make_llm("gpt-4o-mini"), plat) if guided else None
+    return MCTS(get_workload(wname), oracle, proposer=prop, seed=0, **kw)
+
+
+def test_visit_count_accounting():
+    m = _mcts()
+    n_iters = 0
+    for _ in range(60):
+        if m.step() is not None:
+            n_iters += 1
+    assert m.root.N == n_iters  # every backprop touches the root
+    # W bounded by N (rewards in (0,1))
+    def walk(node):
+        assert 0.0 <= node.W <= node.N + 1e-9
+        assert len(node.children) <= m.branching
+        for c in node.children:
+            assert c.parent is node
+            walk(c)
+    walk(m.root)
+
+
+def test_acyclicity_no_duplicate_programs():
+    m = _mcts()
+    for _ in range(80):
+        m.step()
+    keys = []
+    def walk(node):
+        keys.append(node.schedule.key())
+        for c in node.children:
+            walk(c)
+    walk(m.root)
+    assert len(keys) == len(set(keys))
+
+
+def test_sample_accounting():
+    m = _mcts()
+    for _ in range(50):
+        m.step()
+    n_nodes = 0
+    def walk(node):
+        nonlocal n_nodes
+        n_nodes += 1
+        for c in node.children:
+            walk(c)
+    walk(m.root)
+    assert m.samples == n_nodes - 1  # root is not a sample
+    assert m.curve[-1][0] == m.samples
+
+
+def test_curve_monotone():
+    m = _mcts(guided=True)
+    curve = m.search(80)
+    best = 0.0
+    for s, v in curve.points:
+        assert v >= best
+        best = v
+
+
+def test_branching_respected():
+    m = _mcts(branching=4)
+    for _ in range(60):
+        m.step()
+    def walk(node):
+        assert len(node.children) <= 4
+        for c in node.children:
+            walk(c)
+    walk(m.root)
+
+
+def test_curve_helpers():
+    c = SearchCurve([(10, 2.0), (20, 5.0), (30, 5.0)])
+    assert c.at(5) == 1.0 and c.at(15) == 2.0 and c.at(100) == 5.0
+    assert c.samples_to_reach(4.9) == 20
+    assert c.samples_to_reach(9.0) is None
+
+
+def test_method_ordering_low_budget():
+    """The paper's central claim at 36 samples, seed-averaged."""
+    for wname in ("llama4_scout_mlp", "flux_attention"):
+        def mean_at(method, **kw):
+            vals = []
+            for seed in range(3):
+                r = run_search(wname, "core-i9", method, budget=40,
+                               seed=seed, **kw)
+                vals.append(r.curve.at(36))
+            return sum(vals) / len(vals)
+        guided = mean_at("llm-mcts")
+        plain = mean_at("mcts")
+        evo = mean_at("evolutionary")
+        assert guided > plain, (wname, guided, plain)
+        assert guided > evo, (wname, guided, evo)
+
+
+def test_evolutionary_budget_respected():
+    oracle = HardwareOracle(get_platform("core-i9"))
+    es = EvolutionarySearch(get_workload("deepseek_r1_moe"), oracle, seed=0)
+    es.search(55)
+    assert es.samples == 55
+
+
+def test_compare_efficiency_metrics():
+    base = SearchCurve([(100, 2.0), (500, 4.0)])
+    ours = SearchCurve([(20, 4.5)])
+    c = compare_efficiency(base, ours, 600)
+    assert c.ours_samples == 20
+    assert c.sample_reduction == pytest.approx(500 / 20)
+    assert c.efficiency_gain > 1
+
+
+def test_transposition_and_prior_options_run():
+    m = _mcts(guided=True, transposition_table=True, prior_weight=0.5)
+    m.search(40)
+    assert m.best.speedup >= 1.0

@@ -1,0 +1,120 @@
+"""Property tests for the schedule IR + transformation space (paper §2).
+
+Invariants: every legal transformation preserves (a) tile products ==
+loop extents, (b) annotation legality (vector width divides the inner tile,
+unroll <= inner tile), (c) history append-only; illegal applications raise
+ScheduleError and never corrupt state (schedules are immutable).
+"""
+import math
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedule as S
+from repro.core.workloads import (
+    PAPER_WORKLOADS,
+    get_workload,
+    matmul_workload,
+)
+
+WORKLOADS = sorted(PAPER_WORKLOADS)
+
+
+@st.composite
+def schedules(draw):
+    wname = draw(st.sampled_from(WORKLOADS))
+    seed = draw(st.integers(0, 2**16))
+    steps = draw(st.integers(0, 10))
+    w = get_workload(wname)
+    rng = random.Random(seed)
+    s = S.initial_schedule(w)
+    for _ in range(steps):
+        try:
+            s = S.random_transform(rng, s).apply(s)
+        except S.ScheduleError:
+            break
+    return s
+
+
+@settings(max_examples=60, deadline=None)
+@given(schedules(), st.integers(0, 2**16))
+def test_transform_preserves_invariants(s, seed):
+    rng = random.Random(seed)
+    try:
+        t = S.random_transform(rng, s)
+    except S.ScheduleError:
+        return
+    out = t.apply(s)
+    w = out.workload
+    for loop in w.loops:
+        dec = out.tile_map[loop.name]
+        assert math.prod(dec) == loop.extent
+        assert all(f >= 1 for f in dec)
+        levels = (S.SPATIAL_LEVELS if loop.kind == "S"
+                  else S.REDUCTION_LEVELS)
+        assert len(dec) == levels
+    vec_axis = w.output.axes[-1]
+    assert out.inner_tile(vec_axis) % out.vector_width == 0
+    for axis, f in out.unroll:
+        assert f <= out.inner_tile(axis)
+    assert len(out.history) == len(s.history) + 1
+    assert out.history[:len(s.history)] == s.history
+    # original untouched (immutability)
+    assert s.key() == s.key()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 65536), st.integers(1, 6), st.integers(0, 2**16))
+def test_sample_perfect_tile_product(extent, parts, seed):
+    rng = random.Random(seed)
+    dec = S.sample_perfect_tile(rng, extent, parts)
+    assert len(dec) == parts
+    assert math.prod(dec) == extent
+
+
+def test_initial_schedule_trivial():
+    w = get_workload("deepseek_r1_moe")
+    s = S.initial_schedule(w)
+    for loop in w.loops:
+        assert s.tile_map[loop.name][0] == loop.extent
+    assert s.vector_width == 1 and s.parallel_levels == 0
+    assert s.history == ()
+
+
+def test_illegal_transforms_raise():
+    w = get_workload("deepseek_r1_moe")
+    s = S.initial_schedule(w)
+    with pytest.raises(S.ScheduleError):
+        S.TileSize("nope", (1, 1)).apply(s)
+    with pytest.raises(S.ScheduleError):
+        S.TileSize("k", (2, 2)).apply(s)  # product != extent
+    with pytest.raises(S.ScheduleError):
+        S.Vectorize(8).apply(s)  # inner tile 1 not divisible
+    with pytest.raises(S.ScheduleError):
+        S.Unroll("i", 8).apply(s)
+    with pytest.raises(S.ScheduleError):
+        S.Layout("A", "diag").apply(s)
+    with pytest.raises(S.ScheduleError):
+        S.ComputeLocation(2).apply(s)  # matmul w/o epilogue
+
+
+def test_tilesize_revalidates_annotations():
+    w = matmul_workload("m", m=64, n=64, k=64)
+    s = S.initial_schedule(w)
+    s = S.TileSize("j", (4, 1, 1, 16)).apply(s)
+    s = S.Vectorize(8).apply(s)
+    s = S.Unroll("j", 16).apply(s)
+    # shrinking the inner tile must clamp both annotations
+    s = S.TileSize("j", (16, 1, 2, 2)).apply(s)
+    assert s.vector_width in (1, 2)
+    assert s.unroll_map["j"] <= 2
+
+
+def test_key_identity_for_reordered_paths():
+    w = matmul_workload("m", m=64, n=64, k=64)
+    s0 = S.initial_schedule(w)
+    a = S.Parallel(1).apply(S.CacheWrite(True).apply(s0))
+    b = S.CacheWrite(True).apply(S.Parallel(1).apply(s0))
+    assert a.key() == b.key()          # same program
+    assert a.history != b.history      # different derivation

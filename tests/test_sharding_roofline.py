@@ -1,0 +1,123 @@
+"""Sharding rules (structure-level, 1-device mesh) + roofline HLO parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, input_specs
+from repro.dist import sharding as shd
+from repro.models import model as M
+from repro.roofline.analysis import (
+    Roofline,
+    CollectiveStats,
+    parse_collectives,
+    _shape_bytes,
+)
+
+MESH = jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _abstract_params(cfg, tp=1):
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k, tp),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+
+def test_param_specs_cover_tree():
+    for arch in ("tinyllama-1.1b", "qwen3-moe-30b-a3b", "xlstm-125m",
+                 "hymba-1.5b", "hubert-xlarge"):
+        cfg = get_config(arch, smoke=True)
+        params = _abstract_params(cfg)
+        specs = shd.param_specs(cfg, params, MESH)
+        flat_p = jax.tree.leaves(params)
+        flat_s = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            assert len(spec) <= len(leaf.shape), (arch, leaf.shape, spec)
+
+
+def test_tp_rules():
+    cfg = get_config("tinyllama-1.1b")
+    params = _abstract_params(cfg)
+    specs = shd.param_specs(cfg, params, MESH)
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    # kv heads (4) < tp on a big mesh would replicate; on tp=1 they shard
+    assert specs["layers"]["mlp"]["w_gate"] == P(None, None, "model")
+    assert specs["layers"]["mlp"]["w_down"] == P(None, "model", None)
+    assert specs["embed"] == P("model", None)
+
+
+def test_moe_expert_parallel_rule():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    params = _abstract_params(cfg)
+    specs = shd.param_specs(cfg, params, MESH)
+    assert specs["layers"]["moe"]["w_gate"] == P(None, "model", None, None)
+    assert specs["layers"]["moe"]["w_router"] == P(None, None, None)
+
+
+def test_batch_specs_replicate_non_divisible():
+    cfg = get_config("tinyllama-1.1b")
+    batch = {"tokens": jax.ShapeDtypeStruct((3, 8), jnp.int32)}
+    spec = shd.batch_specs(cfg, batch, MESH)["tokens"]
+    # batch 3 divisible by data=1 -> sharded over ("data",)
+    assert spec == P(("data",), None)
+
+
+def test_zero1_opt_sharding():
+    cfg = get_config("tinyllama-1.1b")
+    params = _abstract_params(cfg)
+    pspecs = shd.param_specs(cfg, params, MESH)
+    ospecs = shd.opt_state_specs(pspecs, params, MESH)
+    # wq [L, D, H*hd]: param (None, None, model) -> opt shards D over data
+    assert ospecs["layers"]["attn"]["wq"] == P(None, "data", "model")
+
+
+def test_shape_bytes_parser():
+    assert _shape_bytes("bf16[16,128]") == 16 * 128 * 2
+    assert _shape_bytes("f32[8]") == 32
+    assert _shape_bytes("(f32[4,4], bf16[2])") == 64 + 4
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_synthetic_hlo():
+    hlo = """
+  %ag.1 = bf16[64,128]{1,0} all-gather(bf16[4,128]{1,0} %x), replica_groups={{0,1,2,3}}
+  %ar.2 = f32[1024]{0} all-reduce(f32[1024]{0} %y), replica_groups={{0,256}}, to_apply=%add
+  %rs = f32[32]{0} reduce-scatter(f32[128]{0} %z), replica_groups={{0,1}}
+  %done = bf16[64,128]{1,0} all-gather-done(%ag.1)
+  %notacoll = f32[2]{0} add(f32[2]{0} %a, f32[2]{0} %b)
+"""
+    st = parse_collectives(hlo, chips_per_pod=256)
+    assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                         "reduce-scatter": 1}
+    # all-reduce group {0,256} crosses pods -> DCN
+    assert st.dcn_bytes == 1024 * 4 * 2.0
+    assert st.ici_bytes == 64 * 128 * 2 + 32 * 4
+
+
+def test_roofline_terms():
+    st = CollectiveStats({}, {}, ici_bytes=150e9, dcn_bytes=0.0)
+    r = Roofline(
+        arch="a", shape="s", mesh="16x16", chips=256,
+        hlo_flops=197e12 * 256, hlo_bytes=819e9 * 256 * 0.5,
+        collective=st, model_flops=197e12 * 256 * 0.5,
+    )
+    assert np.isclose(r.compute_s, 1.0)
+    assert np.isclose(r.memory_s, 0.5)
+    assert np.isclose(r.collective_s, 1.0)
+    assert r.dominant in ("compute", "collective")
+    assert np.isclose(r.useful_flops_ratio, 0.5)
+    assert 0 < r.mfu <= 1
+
+
+def test_input_specs_shapes():
+    cfg = get_config("tinyllama-1.1b")
+    sp = input_specs(cfg, "train_4k")
+    assert sp["tokens"].shape == (256, 4096)
+    sp = input_specs(cfg, "decode_32k")
+    assert sp["tokens"].shape == (128, 1)
+    enc = get_config("hubert-xlarge")
+    sp = input_specs(enc, "prefill_32k")
+    assert sp["frames"].shape == (32, 32768, 512)
