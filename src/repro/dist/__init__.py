@@ -1,0 +1,17 @@
+"""repro.dist — the distribution (sharding) subsystem.
+
+``rules`` holds the name-based Megatron-TP / MoE-EP partitioning table;
+``sharding`` resolves it against parameter / batch / optimizer / cache
+pytrees for a given mesh.  See launch/mesh.py for the mesh axis contract
+and EXPERIMENTS.md §Roofline for how layouts are evaluated.
+"""
+from .sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs_tree,
+    dp_axes,
+    dp_degree,
+    named_shardings,
+    opt_state_specs,
+    param_specs,
+    tp_degree,
+)

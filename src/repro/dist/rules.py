@@ -1,0 +1,131 @@
+"""Name-based tensor-parallel partitioning rules (Megatron-style).
+
+Each rule maps an ``(owner, leaf-name)`` pair — the last two keys of a
+parameter's pytree path — to a ``PartitionSpec`` over the leaf's OWN axes.
+The stacked ``[L, ...]`` layer axis that ``model.init_params`` prepends is
+NOT part of a rule's contract; ``sharding.param_specs`` prefixes ``None``
+for it.  Keeping the table owner-keyed means the same rule covers a weight
+wherever it appears (``layers/attn/wq`` and ``layers/mix/attn/wq`` both
+resolve through the ``attn`` owner).
+
+Conventions:
+  * column-parallel (``_col``): shard the OUTPUT-feature axis over
+    ``"model"`` — the producing GEMM writes a model-sharded activation.
+  * row-parallel (``_row``): shard the INPUT-feature axis over ``"model"``
+    — consumes a model-sharded activation; GSPMD inserts the all-reduce.
+  * expert-parallel (``_expert``): shard the leading expert axis of MoE
+    weights over ``"model"`` (8 experts/device on qwen3's 128 over tp=16);
+    the router stays replicated so every device routes every token.
+  * every rule degrades to full replication when the target dim does not
+    divide the TP degree — this is the divisibility check promised by
+    ``ArchConfig.padded_heads`` (e.g. hymba's 25 query heads on tp=16
+    keep their true count and attention runs replicated on the model axis).
+
+Per-architecture notes:
+  * dense / moe / encoder attention: ``wq``/``wk``/``wv`` column-parallel
+    by (padded) head, ``wo`` row-parallel; KV projections replicate when
+    ``kv_heads < tp`` (the padded count no longer divides tp).
+  * mLSTM (xlstm): up/gate/q/k/v projections column-parallel over the
+    2*d_model inner dim, ``w_down`` row-parallel; the tiny per-head gate
+    projections replicate.
+  * sLSTM (xlstm): fully replicated — its recurrence has no parallel form
+    (models/ssm.py), so sharding its small GEMMs would add per-timestep
+    collectives for no win.
+  * hybrid SSM path (hymba): the 2*d_model inner dim stays model-sharded
+    end-to-end — ``w_in``/``w_dt``/``conv_w`` produce it (column),
+    ``w_bc``/``a_log``/``d_skip``/``dt_bias``/``w_out`` follow it (row).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleCtx:
+    """Per-(config, mesh) facts the rules condition on."""
+
+    tp: int             # size of the "model" mesh axis
+    q_shardable: bool   # padded query heads divide tp
+    kv_shardable: bool  # padded kv heads divide tp (False when kv < tp)
+
+    def div(self, dim: int) -> bool:
+        return self.tp > 0 and dim % self.tp == 0
+
+
+def replicate(shape) -> P:
+    return P(*([None] * len(shape)))
+
+
+def _one_axis(shape, axis: int) -> P:
+    return P(*[("model" if i == axis else None) for i in range(len(shape))])
+
+
+def _col(ctx: RuleCtx, shape) -> P:
+    """Column-parallel: output-feature (last) axis over "model"."""
+    if not shape or not ctx.div(shape[-1]):
+        return replicate(shape)
+    return _one_axis(shape, len(shape) - 1)
+
+
+def _row(ctx: RuleCtx, shape) -> P:
+    """Row-parallel: input-feature (first) axis over "model"."""
+    if not shape or not ctx.div(shape[0]):
+        return replicate(shape)
+    return _one_axis(shape, 0)
+
+
+def _expert(ctx: RuleCtx, shape) -> P:
+    """Expert-parallel: leading [E, ...] axis over "model"."""
+    if not shape or not ctx.div(shape[0]):
+        return replicate(shape)
+    return _one_axis(shape, 0)
+
+
+def _gated(ctx: RuleCtx, ok: bool, shape, kind) -> P:
+    return kind(ctx, shape) if ok else replicate(shape)
+
+
+def leaf_spec(ctx: RuleCtx, owner: str, name: str, shape) -> P:
+    """PartitionSpec for one parameter leaf (layer-stack axis excluded)."""
+    if owner == "attn":
+        if name == "wq":
+            return _gated(ctx, ctx.q_shardable, shape, _col)
+        if name in ("wk", "wv"):
+            return _gated(ctx, ctx.kv_shardable, shape, _col)
+        if name == "wo":
+            return _gated(ctx, ctx.q_shardable, shape, _row)
+        return replicate(shape)
+    if owner == "mlp":
+        if name in ("w_gate", "w_up"):
+            return _col(ctx, shape)
+        if name == "w_down":
+            return _row(ctx, shape)
+        return replicate(shape)
+    if owner == "moe":
+        if name == "w_router":
+            return replicate(shape)
+        return _expert(ctx, shape)  # w_gate / w_up / w_down: [E, ., .]
+    if owner == "mlstm":
+        if name in ("w_up", "w_gate", "wq", "wk", "wv"):
+            return _col(ctx, shape)
+        if name == "w_down":
+            return _row(ctx, shape)
+        return replicate(shape)  # w_if / b_if per-head gates
+    if owner == "slstm":
+        return replicate(shape)  # sequential recurrence: no parallel form
+    if owner == "ssm":
+        if name in ("w_in", "w_dt", "conv_w"):
+            return _col(ctx, shape)
+        if name in ("w_bc", "a_log", "w_out", "dt_bias", "d_skip"):
+            return _row(ctx, shape)
+        return replicate(shape)
+    # --- top-level (non-layer) leaves ---
+    if name == "embed":
+        return _row(ctx, shape)   # vocab-parallel: [V, D] -> ("model", None)
+    if name == "lm_head":
+        return _col(ctx, shape)   # [D, V] -> (None, "model")
+    if name == "frontend":
+        return _col(ctx, shape)   # [feat, D]: project into sharded d_model
+    return replicate(shape)       # norms, per-layer flags, anything unknown

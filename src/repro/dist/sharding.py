@@ -1,0 +1,205 @@
+"""PartitionSpec trees for params, batches, optimizer state, and caches.
+
+The distribution layer of the repo: every launcher (``launch/dryrun``,
+``launch/train``), the serving engine (``serve/engine``), and the roofline
+pipeline consume these functions instead of hand-writing shardings.  The
+mesh axis contract (``launch/mesh.py``) is:
+
+  * ``"model"`` — tensor/expert parallelism inside a layer,
+  * ``"data"``  — batch data-parallelism within a pod,
+  * ``"pod"``   — optional leading pure-DP axis across pods (DCN).
+
+Entry points (all return trees of ``jax.sharding.PartitionSpec`` mirroring
+their input tree; wrap with ``named_shardings`` to get ``NamedSharding``
+leaves for ``jax.jit`` / ``jax.device_put``):
+
+  * ``param_specs``      — Megatron TP + MoE EP rules (``dist.rules``)
+    resolved against the model's parameter pytree by leaf path.
+  * ``batch_specs``      — leading batch axis over the DP axes, replicated
+    when the global batch does not divide them.
+  * ``opt_state_specs``  — ZeRO-1 style: each AdamW moment additionally
+    shards its largest still-replicated axis over ``"data"``.
+  * ``cache_specs_tree`` — decode caches: batch over DP, KV heads (or the
+    SSM inner dim) over ``"model"``; KV heads replicate when
+    ``kv_heads < tp`` exactly as the weight rules do.
+
+Rules are STRUCTURAL: a spec never changes the computed function (GSPMD
+inserts whatever collectives the layout implies), so an undivisible dim
+always degrades to replication rather than an error.  Concrete per-rule
+expectations live in tests/test_sharding_roofline.py; the measurement
+protocol that judges layout choices is EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from . import rules
+
+# ---------------------------------------------------------------------------
+# mesh introspection
+# ---------------------------------------------------------------------------
+
+
+def tp_degree(mesh) -> int:
+    """Size of the "model" axis (1 when the mesh has none)."""
+    return int(dict(mesh.shape).get("model", 1))
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel mesh axes, outermost first (("pod", "data") on the
+    multi-pod production mesh, ("data",) otherwise)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_degree(mesh) -> int:
+    shape = dict(mesh.shape)
+    n = 1
+    for a in dp_axes(mesh):
+        n *= int(shape[a])
+    return n
+
+
+def named_shardings(tree_specs, mesh):
+    """PartitionSpec tree -> NamedSharding tree (P leaves are tuples, so
+    the map needs the explicit is_leaf guard)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _ctx(cfg: ArchConfig, mesh) -> rules.RuleCtx:
+    tp = tp_degree(mesh)
+    return rules.RuleCtx(
+        tp=tp,
+        q_shardable=cfg.padded_heads(tp) % tp == 0,
+        kv_shardable=cfg.padded_kv_heads(tp) % tp == 0,
+    )
+
+
+def _path_names(path) -> list:
+    return [k.key for k in path if isinstance(k, jax.tree_util.DictKey)]
+
+
+def _zip_specs(fn, specs, tree):
+    """Map fn(spec, leaf) over (specs, tree); specs' P leaves are opaque."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat) == len(flat_s), (len(flat), len(flat_s))
+    return jax.tree_util.tree_unflatten(
+        treedef, [fn(s, leaf) for s, leaf in zip(flat_s, flat)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ArchConfig, params, mesh):
+    """PartitionSpec tree for a ``model.init_params`` pytree (abstract or
+    concrete).  Leaves under ``"layers"`` carry the stacked [L, ...] axis,
+    which is never sharded (the layer scan runs it sequentially)."""
+    ctx = _ctx(cfg, mesh)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        owner = names[-2] if len(names) >= 2 else ""
+        name = names[-1] if names else ""
+        if names and names[0] == "layers":
+            return P(None, *rules.leaf_spec(ctx, owner, name, leaf.shape[1:]))
+        return rules.leaf_spec(ctx, owner, name, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ArchConfig, inputs, mesh):
+    """Shard every input's leading (global-batch) axis over the DP axes;
+    replicate when the batch does not divide them (small host-local runs)."""
+    axes = dp_axes(mesh)
+    dp = dp_degree(mesh)
+
+    def one(leaf):
+        shape = leaf.shape
+        if axes and len(shape) >= 1 and shape[0] % dp == 0:
+            return P(axes, *([None] * (len(shape) - 1)))
+        return rules.replicate(shape)
+
+    return jax.tree.map(one, inputs)
+
+
+# ---------------------------------------------------------------------------
+# optimizer state (ZeRO-1)
+# ---------------------------------------------------------------------------
+
+
+def opt_state_specs(param_specs_tree, params, mesh):
+    """AdamW moment specs: start from the param spec and additionally shard
+    the LARGEST still-replicated axis over "data" (ZeRO-1: optimizer state
+    is the dominant f32 footprint over bf16 params, and the data axis is
+    otherwise idle during the update).  Ties break toward the outermost
+    axis; an axis is only taken when its extent divides the data size."""
+    shape_d = dict(mesh.shape)
+    if "data" not in shape_d:
+        return param_specs_tree
+    dsize = int(shape_d["data"])
+
+    def one(spec, leaf):
+        dims = leaf.shape
+        full = tuple(spec) + (None,) * (len(dims) - len(spec))
+        cands = [
+            i for i in range(len(dims))
+            if full[i] is None and dims[i] % dsize == 0
+        ]
+        if not cands:
+            return P(*full)
+        best = max(cands, key=lambda i: (dims[i], -i))
+        return P(*[("data" if i == best else s)
+                   for i, s in enumerate(full)])
+
+    return _zip_specs(one, param_specs_tree, params)
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+
+def cache_specs_tree(cfg: ArchConfig, cache, mesh):
+    """Specs for a ``model.cache_spec`` tree (all leaves are [L, B, ...]).
+
+    Batch shards over the DP axes.  The head-like axis shards over "model"
+    mirroring the weight rules: KV heads for attention caches (replicated
+    when ``kv_heads < tp``), mLSTM heads when they divide tp, and the
+    hybrid SSM inner dim for conv/state carries.  sLSTM per-feature states
+    stay replicated like their (sequential) weights."""
+    ctx = _ctx(cfg, mesh)
+    axes = dp_axes(mesh)
+    dp = dp_degree(mesh)
+    tp = ctx.tp
+
+    def one(path, leaf):
+        name = _path_names(path)[-1]
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if axes and len(shape) >= 2 and shape[1] % dp == 0:
+            spec[1] = axes
+        if name in ("k", "v") and ctx.kv_shardable and ctx.div(shape[2]):
+            spec[2] = "model"                      # [L, B, Hkv, r, hd]
+        elif name in ("C", "n", "m") and ctx.div(shape[2]):
+            spec[2] = "model"                      # mLSTM [L, B, H, ...]
+        elif name == "h" and len(shape) == 4 and ctx.div(shape[2]):
+            spec[2] = "model"                      # SSM state [L, B, inner, S]
+        elif name == "conv" and len(shape) == 4 and ctx.div(shape[3]):
+            spec[3] = "model"                      # conv tail [L, B, K-1, inner]
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -38,7 +38,7 @@ from ..configs.base import SHAPES, ArchConfig, get_config, input_specs, list_arc
 from ..dist import sharding as shd
 from ..models import model as M
 from ..optim import adamw
-from ..roofline.analysis import Roofline, parse_collectives
+from ..roofline.analysis import Roofline, cost_analysis_dict, parse_collectives
 from ..train.train_step import make_train_step
 from .mesh import make_production_mesh
 
@@ -51,12 +51,7 @@ def _abstract(fn, *args):
 
 
 def _named(tree_specs, mesh):
-    from jax.sharding import NamedSharding, PartitionSpec
-    return jax.tree.map(
-        lambda s: NamedSharding(mesh, s),
-        tree_specs,
-        is_leaf=lambda x: isinstance(x, PartitionSpec),
-    )
+    return shd.named_shardings(tree_specs, mesh)
 
 
 def build_cell(cfg: ArchConfig, shape: str, mesh, backend: str = "jax",
@@ -149,7 +144,7 @@ def _cost_point(cfg, shape: str, mesh, backend: str, layers: int,
             compiled = fn.lower(*args).compile()
     finally:
         M.SCAN_UNROLL["n"] = 1
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = parse_collectives(compiled.as_text(), chips_per_pod=256)
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), coll)

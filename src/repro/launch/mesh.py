@@ -8,6 +8,11 @@ Topology: one TPU v5e pod = 16x16 = 256 chips, axes ("data", "model");
 multi-pod = 2 pods = 512 chips with a leading pure-DP "pod" axis whose
 collectives cross the inter-pod DCN exactly once per step (gradient
 all-reduce).
+
+Axis contract (consumed by ``repro.dist.sharding``): "model" carries
+tensor/expert parallelism, "data" batch parallelism within a pod, "pod"
+pure DP across pods.  Any mesh honoring these names works — the sharding
+rules read sizes from the mesh, so tests run the same code on (1, 1).
 """
 from __future__ import annotations
 

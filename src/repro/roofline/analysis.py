@@ -41,6 +41,16 @@ _COLLECTIVES = (
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jaxlib versions:
+    older releases return a one-element list of dicts (per executable),
+    newer ones a flat dict.  Callers always get the flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _shape_bytes(shape_str: str) -> int:
     """'bf16[16,128]' -> bytes; '(bf16[..], f32[..])' -> sum."""
     total = 0

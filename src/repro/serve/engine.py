@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
+from ..dist import sharding as shd
 from ..models import model as M
 
 
@@ -47,6 +48,7 @@ class ServeEngine:
         slots: int = 4,
         max_len: int = 512,
         backend: Optional[str] = None,
+        mesh=None,
     ):
         assert cfg.has_decode, f"{cfg.name} is encoder-only"
         self.cfg = cfg
@@ -54,12 +56,30 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.backend = backend
+        self.mesh = mesh
 
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}       # slot -> request
         self.positions = np.zeros((slots,), np.int32)
 
         self.cache = M.init_cache(cfg, slots, max_len)
+        if mesh is not None:
+            # Commit params and the shared KV/state cache to the mesh layout
+            # from dist.sharding (TP weights, slot axis over "data", KV
+            # heads over "model"); jit then compiles against these committed
+            # layouts with no in_shardings plumbing.
+            self.params = jax.device_put(
+                params,
+                shd.named_shardings(
+                    shd.param_specs(cfg, params, mesh), mesh
+                ),
+            )
+            self.cache = jax.device_put(
+                self.cache,
+                shd.named_shardings(
+                    shd.cache_specs_tree(cfg, self.cache, mesh), mesh
+                ),
+            )
         self._prefill_one = jax.jit(
             lambda p, toks: M.prefill(
                 cfg, p, {"tokens": toks}, max_len, backend=backend

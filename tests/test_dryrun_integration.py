@@ -19,7 +19,7 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from repro.configs import get_config
     from repro.launch import dryrun
-    from repro.roofline.analysis import parse_collectives
+    from repro.roofline.analysis import cost_analysis_dict, parse_collectives
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     cfg = get_config("tinyllama-1.1b", smoke=True)
@@ -28,7 +28,7 @@ SCRIPT = textwrap.dedent("""
         fn, args, mf = dryrun.build_cell(cfg, shape, mesh)
         with mesh:
             compiled = fn.lower(*args).compile()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         coll = parse_collectives(compiled.as_text(), chips_per_pod=4)
         mem = compiled.memory_analysis()
         out[shape] = {

@@ -9,7 +9,9 @@ import math
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="dev dependency (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import schedule as S
 from repro.core.workloads import (
