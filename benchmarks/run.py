@@ -17,6 +17,7 @@ from . import (
     bench_llm_ablation,
     bench_platforms,
     bench_sample_efficiency,
+    bench_serving,
     bench_trace_depth,
     roofline_table,
 )
@@ -31,6 +32,7 @@ TABLES = {
     "table6": bench_branching.run,           # Table 6
     "table8": bench_fallback.run,            # Table 8
     "roofline": roofline_table.run,          # beyond-paper: dry-run roofline
+    "serving": bench_serving.run,            # beyond-paper: engine TTFT/TPOT
 }
 
 

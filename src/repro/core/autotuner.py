@@ -86,9 +86,36 @@ class GemmBlocks:
         )
 
 
+def local_attention_dims(cfg, tp: int = 1) -> tuple[int, int]:
+    """Post-SPMD per-device (query_heads, kv_heads) for an ArchConfig.
+
+    Mirrors ``dist.rules`` exactly: an axis shards over "model" only when
+    the padded head count divides the TP degree, otherwise it stays
+    replicated (e.g. KV heads when ``kv_heads < tp``).  Tuning against
+    these LOCAL extents is what makes the cached block specs legal for the
+    per-device Pallas launch after GSPMD partitioning — the global shapes
+    can suggest tiles larger than a device's actual slice.
+    """
+    def local(padded: int) -> int:
+        return padded // tp if tp > 0 and padded % tp == 0 else padded
+
+    return local(cfg.padded_heads(tp)), local(cfg.padded_kv_heads(tp))
+
+
 def attention_tuning_workload(
-    heads: int, seq_q: int, seq_kv: int, head_dim: int, name: str = "attn"
+    heads: int, seq_q: int, seq_kv: int, head_dim: int,
+    kv_heads: Optional[int] = None, name: str = "attn",
 ) -> Workload:
+    """Attention workload keyed by the GQA shape.
+
+    ``kv_heads`` (default: MHA, == heads) is folded into the workload name
+    — and therefore the tuning-cache key — because the K/V streaming
+    volume per query tile depends on the KV head count: a block_k tuned
+    for 32 local KV heads is not the right tile for 1 replicated head.
+    """
+    kv_heads = heads if kv_heads is None else kv_heads
+    if kv_heads != heads:
+        name = f"{name}.kv{kv_heads}"
     return attention_workload(
         name, heads=heads, seq_q=seq_q, seq_kv=seq_kv, head_dim=head_dim,
         dtype_bytes=2,
@@ -126,8 +153,12 @@ class KernelTuner:
         dims = ",".join(f"{l.name}={l.extent}" for l in w.loops)
         return f"{self.platform}:{w.name}[{dims}]"
 
-    def tune_attention(self, heads, seq_q, seq_kv, head_dim) -> AttentionBlocks:
-        w = attention_tuning_workload(heads, seq_q, seq_kv, head_dim)
+    def tune_attention(
+        self, heads, seq_q, seq_kv, head_dim, kv_heads=None
+    ) -> AttentionBlocks:
+        w = attention_tuning_workload(
+            heads, seq_q, seq_kv, head_dim, kv_heads=kv_heads
+        )
         key = self._key(w)
         if key in self._cache:
             e = self._cache[key]
@@ -136,6 +167,17 @@ class KernelTuner:
         blocks = AttentionBlocks.from_schedule(res.best_schedule)
         self._store(key, dataclasses.asdict(blocks), res)
         return blocks
+
+    def lookup_attention(
+        self, heads, seq_q, seq_kv, head_dim, kv_heads=None
+    ) -> Optional[AttentionBlocks]:
+        """Read-only cache probe (no search on miss) — the model-build-time
+        path ``kernels.ops.tuned_attention_blocks`` uses."""
+        w = attention_tuning_workload(
+            heads, seq_q, seq_kv, head_dim, kv_heads=kv_heads
+        )
+        e = self._cache.get(self._key(w))
+        return AttentionBlocks(e["block_q"], e["block_k"]) if e else None
 
     def tune_gemm(self, m, n, k, epilogue="none") -> GemmBlocks:
         w = gemm_tuning_workload(m, n, k, epilogue=epilogue)

@@ -87,6 +87,22 @@ def _gated(ctx: RuleCtx, ok: bool, shape, kind) -> P:
     return kind(ctx, shape) if ok else replicate(shape)
 
 
+def paged_leaf_spec(ctx: RuleCtx, name: str, shape) -> P:
+    """PartitionSpec for one paged-KV pool leaf (serve/kvcache.py layout).
+
+    Pool leaves are [L, P, Hkv, page, hd] (k/v) and [L, P, page] (kv_pos).
+    The KV-head axis shards over "model" exactly like the weight rules
+    (replicated when ``kv_heads < tp``).  The page axis P is deliberately
+    REPLICATED across the DP axes: pages are a shared pool addressed by
+    per-slot page-table gathers, and slot→page assignment is dynamic, so
+    sharding P would turn every gather/scatter into a data-axis collective.
+    """
+    if name in ("k", "v") and len(shape) == 5 and ctx.kv_shardable \
+            and ctx.div(shape[2]):
+        return P(None, None, "model", None, None)
+    return replicate(shape)
+
+
 def leaf_spec(ctx: RuleCtx, owner: str, name: str, shape) -> P:
     """PartitionSpec for one parameter leaf (layer-stack axis excluded)."""
     if owner == "attn":

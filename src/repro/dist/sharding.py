@@ -203,3 +203,18 @@ def cache_specs_tree(cfg: ArchConfig, cache, mesh):
         return P(*spec)
 
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def paged_cache_specs_tree(cfg: ArchConfig, pool, mesh):
+    """Specs for a ``serve.kvcache`` page-pool tree ([L, P, ...] leaves).
+
+    KV heads shard over "model" mirroring the weight rules; the page axis
+    replicates (``dist.rules.paged_leaf_spec`` explains why a dynamic
+    page pool cannot usefully shard over the DP axes)."""
+    ctx = _ctx(cfg, mesh)
+
+    def one(path, leaf):
+        name = _path_names(path)[-1]
+        return rules.paged_leaf_spec(ctx, name, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, pool)

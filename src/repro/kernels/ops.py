@@ -45,6 +45,44 @@ def set_default_backend(name: str) -> None:
     _DEFAULT_BACKEND = name
 
 
+_TUNER = None  # lazy singleton over the persistent JSON tuning cache
+
+
+def tuned_attention_blocks(
+    cfg,
+    seq_q: int,
+    seq_kv: int,
+    *,
+    tp: int = 1,
+) -> tuple[int, int]:
+    """(block_q, block_k) for an ``ArchConfig``'s attention launch, from
+    the tuning cache.
+
+    ``tp`` selects the post-SPMD per-device head extents via the SAME
+    ``local_attention_dims`` helper ``launch/tune.py`` stores entries
+    under (head padding + replication rules included), so the lookup key
+    agrees with the tune-time key by construction — a TP-sharded model
+    gets the block specs tuned for the local shapes the Pallas kernel
+    will actually see.  Read-only: a cache miss returns the kernel
+    defaults instead of launching a search.
+    """
+    from ..core.autotuner import (
+        AttentionBlocks,
+        KernelTuner,
+        local_attention_dims,
+    )
+
+    global _TUNER
+    if _TUNER is None:
+        _TUNER = KernelTuner()
+
+    heads, kv_heads = local_attention_dims(cfg, tp)
+    blocks = _TUNER.lookup_attention(
+        heads, seq_q, seq_kv, cfg.hd, kv_heads=kv_heads
+    ) or AttentionBlocks()
+    return blocks.block_q, blocks.block_k
+
+
 # ---------------------------------------------------------------------------
 # attention
 # ---------------------------------------------------------------------------

@@ -1,37 +1,58 @@
-"""Serving launcher: batched requests through the continuous-batching
-engine (serve/engine.py) with Reasoning-Compiler-tuned kernels.
+"""Serving launcher: batched requests through a continuous-batching engine
+with Reasoning-Compiler-tuned kernels.
+
+``--engine paged`` (default) uses the paged-KV scheduler — batched
+bucketed prefill, optional chunked prefill, page-pool occupancy — and
+``--engine dense`` the dense-cache baseline, so the two are one flag apart
+for A/B runs (protocol: EXPERIMENTS.md §Serve).
 
 ``python -m repro.launch.serve --arch tinyllama-1.1b --smoke --requests 8``
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from ..configs.base import get_config
 from ..models import model as M
-from ..serve.engine import Request, ServeEngine
+from ..serve import PagedServeEngine, Request, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", default="paged", choices=["paged", "dense"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunk long prompts (dense blocks): prompts over "
+                         "this many tokens prefill incrementally, "
+                         "interleaved with decode")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="page-pool capacity (0 = fully provisioned); "
+                         "smaller overcommits and gates admission")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    if args.engine == "paged":
+        engine = PagedServeEngine(
+            cfg, params, slots=args.slots, max_len=args.max_len,
+            page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+            capacity=args.kv_pages or None,
+        )
+    else:
+        engine = ServeEngine(
+            cfg, params, slots=args.slots, max_len=args.max_len
+        )
     rng = np.random.RandomState(0)
-    t0 = time.perf_counter()
     for uid in range(args.requests):
         plen = args.prompt_len + int(rng.randint(-4, 5))
         engine.submit(Request(
@@ -39,10 +60,17 @@ def main():
             max_new_tokens=args.max_new,
         ))
     done = engine.run()
-    dt = time.perf_counter() - t0
-    toks = sum(len(r.output) for r in done)
-    print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s)")
+    s = engine.metrics.summary()
+    print(f"served {s['requests']}/{len(done)} requests, "
+          f"{s['generated_tokens']} tokens in {s['wall_s']:.2f}s "
+          f"({s['throughput_tok_s']:.1f} tok/s)")
+    print(f"  ttft mean {s['ttft_mean_s'] * 1e3:.1f}ms  "
+          f"tpot mean {s['tpot_mean_s'] * 1e3:.1f}ms  "
+          f"prefill calls {s['prefill_calls']} "
+          f"(+{s['prefill_chunk_calls']} chunks)  "
+          f"decode steps {s['decode_steps']}  "
+          f"kv occupancy {s['kv_occupancy_mean']:.2f} "
+          f"(max {s['kv_occupancy_max']:.2f})")
 
 
 if __name__ == "__main__":

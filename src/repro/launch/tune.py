@@ -10,13 +10,16 @@ from __future__ import annotations
 import argparse
 
 from ..configs.base import get_config
-from ..core.autotuner import KernelTuner
+from ..core.autotuner import KernelTuner, local_attention_dims
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: tune against the "
+                         "post-SPMD per-device head counts")
     ap.add_argument("--budget", type=int, default=64)
     ap.add_argument("--method", default="llm-mcts",
                     choices=["llm-mcts", "mcts", "evolutionary"])
@@ -26,11 +29,12 @@ def main():
     cfg = get_config(args.arch)
     tuner = KernelTuner(method=args.method, budget=args.budget, llm=args.llm)
     if cfg.block not in ("xlstm",):
+        hq, hkv = local_attention_dims(cfg, args.tp)
         blocks = tuner.tune_attention(
-            cfg.padded_heads(1), args.seq, args.seq, cfg.hd
+            hq, args.seq, args.seq, cfg.hd, kv_heads=hkv
         )
-        print(f"{cfg.name} attention: block_q={blocks.block_q} "
-              f"block_k={blocks.block_k}")
+        print(f"{cfg.name} attention (tp={args.tp}, local {hq}q/{hkv}kv): "
+              f"block_q={blocks.block_q} block_k={blocks.block_k}")
     if cfg.d_ff:
         g = tuner.tune_gemm(args.seq, cfg.d_ff, cfg.d_model,
                             epilogue="swiglu")

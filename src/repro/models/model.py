@@ -381,9 +381,20 @@ def prefill(
     batch: dict,
     max_len: int,
     *,
+    lengths: Optional[jax.Array] = None,
     backend: Optional[str] = None,
 ):
-    """Run the full prompt; returns (last-token logits, filled cache)."""
+    """Run the full prompt; returns (last-token logits, filled cache).
+
+    ``lengths`` ([B] int32) enables ragged batched prefill over right-padded
+    prompts: logits are taken at each row's last REAL token and cache
+    positions at-or-beyond a row's length are marked invalid (kv_pos = -1),
+    so later decode attends only to real tokens.  Padding is exact for
+    attention caches (causal masking keeps pad tokens out of real rows);
+    recurrent-state blocks (xlstm, hybrid SSM path) advance their state on
+    every input token, so callers must pass equal-length rows (no padding)
+    for those — the serve scheduler groups by exact length there.
+    """
     assert cfg.has_decode
     x = _embed(cfg, params, batch)
     b, s, _ = x.shape
@@ -402,6 +413,12 @@ def prefill(
             jnp.full((r - s,), -1, jnp.int32),
         ])
         return jnp.concatenate([k, pad], axis=2), pos
+
+    def ring_pos(kpos):  # [r] -> [B, r] with per-row length masking
+        kvp = kpos[None].repeat(b, 0)
+        if lengths is None:
+            return kvp
+        return jnp.where(kvp < lengths[:, None], kvp, -1)
 
     if cfg.block == "xlstm":
         def body(carry, xs):
@@ -442,7 +459,7 @@ def prefill(
             vr, _ = fit_ring(v)
             out = {
                 "k": kr, "v": vr,
-                "kv_pos": kpos[None].repeat(b, 0),
+                "kv_pos": ring_pos(kpos),
                 "conv": sst["conv"], "h": sst["h"],
             }
             return x2, out
@@ -466,14 +483,75 @@ def prefill(
                 m = mlp_block(h2, lp["mlp"], backend=backend)
             kr, kpos = fit_ring(k)
             vr, _ = fit_ring(v)
-            out = {"k": kr, "v": vr, "kv_pos": kpos[None].repeat(b, 0)}
+            out = {"k": kr, "v": vr, "kv_pos": ring_pos(kpos)}
             return x2 + m, out
 
         x, cache = _scan(body, x, params["layers"])
 
     x = apply_norm(x, params["final_norm"], cfg.norm)
-    logits = _unembed(cfg, params, x[:, -1:])
+    if lengths is None:
+        logits = _unembed(cfg, params, x[:, -1:])
+    else:
+        last = jnp.clip(lengths - 1, 0, s - 1)
+        logits = _unembed(cfg, params, x[jnp.arange(b), last][:, None])
     return logits, cache
+
+
+def prefill_chunk(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,  # [B, C]: the next C prompt tokens of every row
+    cache,
+    start,              # scalar int32: absolute position of tokens[:, 0]
+    *,
+    backend: Optional[str] = None,
+):
+    """One prefill chunk against an existing cache (chunked prefill).
+
+    Processes ``C`` prompt tokens at positions ``start .. start+C-1``,
+    attending to everything already in the cache plus (causally) the chunk
+    itself, and writes the chunk's K/V at those cache positions.  Returns
+    (last-chunk-token logits, cache) — the logits only matter on the final
+    chunk of a prompt.
+
+    Only stateless (attention-cache) blocks are supported: recurrent-state
+    blocks would need their scan state carried between chunks, and MoE
+    capacity-based token dropping depends on the tokens-per-dispatch count,
+    so chunking would not be bit-identical to whole-prompt prefill there.
+    Callers must ensure ``start + C <= ring length`` (serving keeps
+    ``max_len`` under the ring threshold, so the ring never wraps).
+    """
+    assert cfg.has_decode and cfg.block == "dense", \
+        f"chunked prefill requires a stateless dense block, got {cfg.block}"
+    x = _embed(cfg, params, {"tokens": tokens})
+    b, c_len, _ = x.shape
+    start = jnp.asarray(start, jnp.int32)
+    qpos = start + jnp.arange(c_len, dtype=jnp.int32)
+    positions = qpos[None].repeat(b, axis=0)
+    dims = _dims_from_params(cfg, params)
+
+    def body(carry, xs):
+        lp, c = xs
+        h = apply_norm(carry, lp["norm1"], cfg.norm)
+        q, k_new, v_new = attention_qkv(
+            h, lp["attn"], dims, positions, cfg.rope_theta
+        )
+        k = jax.lax.dynamic_update_slice_in_dim(c["k"], k_new, start, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(c["v"], v_new, start, axis=2)
+        kv_pos = jax.lax.dynamic_update_slice_in_dim(
+            c["kv_pos"], positions, start, axis=1
+        )
+        window = jnp.int32(cfg.window) if cfg.window else None
+        o = _cached_attention(q, k, v, kv_pos, qpos, window)
+        o = o.transpose(0, 2, 1, 3).reshape(b, c_len, dims.heads * dims.hd)
+        x2 = carry + o @ lp["attn"]["wo"]
+        h2 = apply_norm(x2, lp["norm2"], cfg.norm)
+        m = mlp_block(h2, lp["mlp"], backend=backend)
+        return x2 + m, {"k": k, "v": v, "kv_pos": kv_pos}
+
+    x, cache = _scan(body, x, (params["layers"], cache))
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return _unembed(cfg, params, x[:, -1:]), cache
 
 
 def decode_step(
@@ -539,7 +617,7 @@ def decode_step(
                 eff_window = jnp.where(
                     is_global, jnp.int32(2**30), eff_window
                 )
-        o = _cached_decode_attention(q, k, v, kv_pos, pos, eff_window)
+        o = _cached_attention(q, k, v, kv_pos, pos, eff_window)
         o = o.reshape(b, 1, dims.heads * dims.hd)
         return o @ lp_attn["wo"], {"k": k, "v": v, "kv_pos": kv_pos}
 
@@ -581,17 +659,27 @@ def decode_step(
     return _unembed(cfg, params, x), cache
 
 
-def _cached_decode_attention(q, k, v, kv_pos, pos, window):
-    """GQA decode attention over a (ring) cache with validity masking."""
-    b, hq, _, d = q.shape
+def _cached_attention(q, k, v, kv_pos, qpos, window):
+    """GQA attention over a (ring) cache with validity masking.
+
+    ``q`` is [B, Hq, C, hd] (C = 1 for single-token decode, > 1 for a
+    prefill chunk); ``qpos`` the absolute position(s) of the C query
+    tokens — a scalar or a [C] vector.  Cache entries are valid when
+    ``0 <= kv_pos <= qpos`` (per query), i.e. causal within the chunk.
+    """
+    b, hq, c, d = q.shape
     hkv = k.shape[1]
     group = hq // hkv
-    qg = q.reshape(b, hkv, group, d).astype(jnp.float32) / math.sqrt(d)
-    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32))
-    valid = (kv_pos >= 0) & (kv_pos <= pos)
+    qpos = jnp.asarray(qpos, jnp.int32)
+    if qpos.ndim == 0:
+        qpos = qpos[None]
+    qg = q.reshape(b, hkv, group, c, d).astype(jnp.float32) / math.sqrt(d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    kp = kv_pos[:, None, :]                       # [B, 1, r]
+    valid = (kp >= 0) & (kp <= qpos[None, :, None])   # [B, C, r]
     if window is not None:
-        valid &= kv_pos > pos - window
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+        valid &= kp > qpos[None, :, None] - window
+    s = jnp.where(valid[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
-    return o.reshape(b, hq, 1, d).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, c, d).astype(q.dtype)

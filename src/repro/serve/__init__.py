@@ -1,0 +1,24 @@
+"""Serving subsystem: batching, paged KV caching, and telemetry.
+
+  * ``engine``    — dense-cache continuous-batching baseline engine.
+  * ``kvcache``   — paged KV pool (fixed-size pages, per-slot page tables,
+                    free-list allocation, dense-compatibility view).
+  * ``scheduler`` — ``PagedServeEngine``: batched/bucketed + chunked
+                    prefill admission over the paged cache, donated
+                    mesh-committed buffers.
+  * ``metrics``   — TTFT / TPOT / throughput / occupancy counters
+                    (protocol: EXPERIMENTS.md §Serve).
+"""
+from .engine import Request, ServeEngine
+from .kvcache import PagedKVCache
+from .metrics import EngineMetrics, RequestMetrics
+from .scheduler import PagedServeEngine
+
+__all__ = [
+    "Request",
+    "ServeEngine",
+    "PagedKVCache",
+    "PagedServeEngine",
+    "EngineMetrics",
+    "RequestMetrics",
+]

@@ -24,6 +24,7 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..dist import sharding as shd
 from ..models import model as M
+from .metrics import EngineMetrics
 
 
 @dataclasses.dataclass
@@ -35,6 +36,22 @@ class Request:
     # filled by the engine
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+def batched_decode_fn(cfg: ArchConfig, backend: Optional[str]):
+    """vmapped per-slot decode: a [slots]-batch of single-token
+    ``decode_step``s with PER-SLOT positions, so sequences of different
+    lengths share the batch exactly.  Shared by the dense engine and the
+    paged scheduler (which composes it with page gather/scatter)."""
+
+    def dec_row(p, tok, cache_row, pos):
+        cache1 = jax.tree.map(lambda x: x[:, None], cache_row)
+        logits, cache1 = M.decode_step(
+            cfg, p, tok[None, None], cache1, pos, backend=backend
+        )
+        return logits[0], jax.tree.map(lambda x: x[:, 0], cache1)
+
+    return jax.vmap(dec_row, in_axes=(None, 0, 1, 0), out_axes=(0, 1))
 
 
 class ServeEngine:
@@ -49,7 +66,11 @@ class ServeEngine:
         max_len: int = 512,
         backend: Optional[str] = None,
         mesh=None,
+        tp: int = 1,
     ):
+        """``tp`` must match the degree the params were built with
+        (``init_params(cfg, key, tp)``) so the cache's padded KV-head
+        axis lines up with the weights."""
         assert cfg.has_decode, f"{cfg.name} is encoder-only"
         self.cfg = cfg
         self.params = params
@@ -62,7 +83,7 @@ class ServeEngine:
         self.active: dict[int, Request] = {}       # slot -> request
         self.positions = np.zeros((slots,), np.int32)
 
-        self.cache = M.init_cache(cfg, slots, max_len)
+        self.cache = M.init_cache(cfg, slots, max_len, tp)
         if mesh is not None:
             # Commit params and the shared KV/state cache to the mesh layout
             # from dist.sharding (TP weights, slot axis over "data", KV
@@ -80,26 +101,38 @@ class ServeEngine:
                     shd.cache_specs_tree(cfg, self.cache, mesh), mesh
                 ),
             )
+        self.metrics = EngineMetrics()
         self._prefill_one = jax.jit(
             lambda p, toks: M.prefill(
                 cfg, p, {"tokens": toks}, max_len, backend=backend
             )
         )
 
-        def _dec_row(p, tok, cache_row, pos):
-            cache1 = jax.tree.map(lambda x: x[:, None], cache_row)
-            logits, cache1 = M.decode_step(
-                cfg, p, tok[None, None], cache1, pos, backend=backend
+        def _slot_write(full_cache, one_cache, slot):
+            # Jitted (donated) so the committed mesh layout of the shared
+            # cache is updated in place: an eager `.at[].set` produced
+            # fresh arrays that silently dropped the NamedSharding and
+            # replicated the cache on every admission.
+            return jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                    full,
+                    _pad_row(one[:, 0], full.shape[:1] + full.shape[2:],
+                             full.dtype),
+                    slot, axis=1,
+                ),
+                full_cache, one_cache,
             )
-            return logits[0], jax.tree.map(lambda x: x[:, 0], cache1)
+
+        self._slot_write = jax.jit(_slot_write, donate_argnums=(0,))
 
         self._decode = jax.jit(
-            jax.vmap(_dec_row, in_axes=(None, 0, 1, 0), out_axes=(0, 1))
+            batched_decode_fn(cfg, backend), donate_argnums=(2,)
         )
 
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        self.metrics.on_submit(req.uid, len(req.prompt))
 
     def run(self, max_iters: int = 10_000) -> list[Request]:
         """Drive until queue + active drain; returns completed requests."""
@@ -122,15 +155,15 @@ class ServeEngine:
             req = self.queue.popleft()
             toks = jnp.asarray(req.prompt, jnp.int32)[None]
             logits, cache1 = self._prefill_one(self.params, toks)
-            self.cache = jax.tree.map(
-                lambda full, one: full.at[:, slot].set(
-                    _pad_row(one[:, 0], full[:, slot])
-                ),
-                self.cache, cache1,
+            self.metrics.prefill_calls += 1
+            self.metrics.prefill_tokens += len(req.prompt)
+            self.cache = self._slot_write(
+                self.cache, cache1, jnp.int32(slot)
             )
             req.output.append(int(jnp.argmax(logits[0, -1])))
             self.active[slot] = req
             self.positions[slot] = len(req.prompt)
+            self.metrics.on_first_token(req.uid)
 
     def _decode_iteration(self) -> list[Request]:
         if not self.active:
@@ -142,6 +175,9 @@ class ServeEngine:
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(self.positions),
         )
+        self.metrics.decode_steps += 1
+        self.metrics.decode_tokens += len(self.active)
+        self.metrics.on_occupancy(len(self.active) / self.slots)
         done = []
         for slot, req in list(self.active.items()):
             nxt = int(jnp.argmax(logits[slot, -1]))
@@ -154,14 +190,16 @@ class ServeEngine:
                 done.append(req)
                 del self.active[slot]
                 self.positions[slot] = 0
+                self.metrics.on_finish(req.uid, len(req.output))
         return done
 
 
-def _pad_row(one_row, full_row):
-    """Pad a single-request cache row onto the shared cache row; integer
-    (kv_pos) pads use -1 (= invalid) so masks stay correct."""
-    if one_row.shape == full_row.shape:
-        return one_row.astype(full_row.dtype)
-    pads = [(0, f - o) for o, f in zip(one_row.shape, full_row.shape)]
-    fill = -1 if jnp.issubdtype(full_row.dtype, jnp.integer) else 0
-    return jnp.pad(one_row, pads, constant_values=fill).astype(full_row.dtype)
+def _pad_row(one_row, shape, dtype):
+    """Pad a single-request cache row onto the shared cache row's (slot-
+    stripped) shape; integer (kv_pos) pads use -1 (= invalid) so masks
+    stay correct."""
+    if one_row.shape == tuple(shape):
+        return one_row.astype(dtype)
+    pads = [(0, f - o) for o, f in zip(one_row.shape, shape)]
+    fill = -1 if jnp.issubdtype(dtype, jnp.integer) else 0
+    return jnp.pad(one_row, pads, constant_values=fill).astype(dtype)

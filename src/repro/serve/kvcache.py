@@ -1,0 +1,368 @@
+"""Paged KV cache: fixed-size pages, per-slot page tables, free-list alloc.
+
+Dense decode caches waste memory on ragged prompts: every slot owns a full
+``[layer, max_len]`` strip whether its request is 5 or 500 tokens long.
+This module stores the per-token attention-cache leaves (``k``/``v``/
+``kv_pos``) in a shared *page pool* instead — ``[L, P, Hkv, page, hd]`` —
+with a small per-slot page table mapping ring positions to pool pages and a
+free list for allocation/reclaim.  Per-request state leaves that are O(1)
+in sequence length (hybrid conv/SSM carries, xLSTM states) stay dense
+per-slot; paging only ever applies to per-token storage.
+
+Two layers:
+
+  * **Functional core** — ``gather_view`` / ``scatter_pages`` /
+    ``scatter_token`` are pure, traceable pytree ops, so the scheduler can
+    fuse gather → decode → scatter into one jitted, buffer-donated call.
+  * **Stateful shell** — ``PagedKVCache`` owns the pool buffers plus the
+    host-side page table, free list, and admission reservations, and wraps
+    the core ops in cached ``jax.jit`` calls with pool donation so the
+    committed (mesh) layout is reused in place rather than re-materialized.
+
+Exactness contract: ``dense_view()`` reproduces precisely the dense cache
+``models.model.decode_step`` expects — unallocated table entries point at a
+permanent *null page* whose ``kv_pos`` is all ``-1`` (invalid), so masked
+attention sees the same valid set as the dense engine and decodes
+token-for-token identically (tests/test_serve.py equivalence test).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import model as M
+
+# Per-token attention-cache leaves; everything else is per-slot state.
+PAGED_LEAVES = ("k", "v", "kv_pos")
+
+# Reserved pool pages.  NULL is never written: it backs every unallocated
+# page-table entry with an all-invalid (kv_pos = -1) page.  TRASH absorbs
+# writes from inactive decode rows (the batched decode step advances every
+# slot; rows without a request redirect their token write here).
+NULL_PAGE = 0
+TRASH_PAGE = 1
+RESERVED_PAGES = 2
+
+
+def split_leaves(cache: dict) -> tuple[dict, dict]:
+    """Split a dense cache dict into (paged leaves, per-slot state leaves)."""
+    paged = {k: v for k, v in cache.items() if k in PAGED_LEAVES}
+    state = {k: v for k, v in cache.items() if k not in PAGED_LEAVES}
+    return paged, state
+
+
+# ---------------------------------------------------------------------------
+# functional core (traceable)
+# ---------------------------------------------------------------------------
+
+
+def gather_view(pool: dict, table: jax.Array) -> dict:
+    """Assemble the dense-compatibility view from the page pool.
+
+    ``table`` is [slots, pages_per_slot] int32 page ids.  Returns leaves
+    shaped exactly like the dense cache ([L, slots, Hkv, view_len, hd] /
+    [L, slots, view_len]) where view_len = pages_per_slot * page_size.
+    """
+    slots, pps = table.shape
+    flat = table.reshape(-1)
+
+    def one(name, leaf):
+        g = jnp.take(leaf, flat, axis=1)
+        if name == "kv_pos":                   # [L, slots*pps, page]
+            L = g.shape[0]
+            return g.reshape(L, slots, pps * g.shape[-1])
+        L, _, hkv, page, hd = g.shape          # [L, slots*pps, Hkv, page, hd]
+        g = g.reshape(L, slots, pps, hkv, page, hd)
+        return g.transpose(0, 1, 3, 2, 4, 5).reshape(
+            L, slots, hkv, pps * page, hd
+        )
+
+    return {k: one(k, v) for k, v in pool.items()}
+
+
+def scatter_pages(pool: dict, rows: dict, page_ids: jax.Array) -> dict:
+    """Write whole cache rows into pages (prefill admission).
+
+    ``rows`` leaves are [L, N, Hkv, S_pad, hd] / [L, N, S_pad] with
+    ``S_pad = n_pages * page_size``; ``page_ids`` is [N, n_pages].  Rows
+    must arrive fully masked (kv_pos = -1 beyond each row's real length),
+    which ``models.model.prefill(..., lengths=...)`` guarantees.
+    """
+    n, n_pages = page_ids.shape
+    flat = page_ids.reshape(-1)
+
+    def one(name, leaf, row):
+        if name == "kv_pos":                   # row [L, N, S_pad]
+            L = row.shape[0]
+            vals = row.reshape(L, n * n_pages, -1)
+            return leaf.at[:, flat].set(vals)
+        L, _, hkv, s_pad, hd = row.shape
+        page = s_pad // n_pages
+        vals = row.reshape(L, n, hkv, n_pages, page, hd)
+        vals = vals.transpose(0, 1, 3, 2, 4, 5).reshape(
+            L, n * n_pages, hkv, page, hd
+        )
+        return leaf.at[:, flat].set(vals)
+
+    return {k: one(k, v, rows[k]) for k, v in pool.items()}
+
+
+def scatter_token(
+    pool: dict,
+    rows: dict,
+    page_ids: jax.Array,   # [slots] target page per slot (TRASH if inactive)
+    offsets: jax.Array,    # [slots] in-page offset of the written token
+    positions: jax.Array,  # [slots] absolute position (kv_pos value)
+) -> dict:
+    """Write one decoded token's K/V per slot back into the pool.
+
+    ``rows`` carries the token rows extracted from the decoded dense view:
+    k/v are [L, slots, Hkv, hd].  Inactive slots must point ``page_ids`` at
+    ``TRASH_PAGE`` so the null page stays pristine.
+    """
+    out = dict(pool)
+    if "kv_pos" in pool:
+        # adjacent advanced indices (axes 1, 2) stay in place: [L, slots]
+        out["kv_pos"] = pool["kv_pos"].at[:, page_ids, offsets].set(
+            positions[None]
+        )
+    for name in ("k", "v"):
+        if name not in pool:
+            continue
+        # advanced indices split by a slice move to the front: the target
+        # selection pool[:, ids, :, offs] is [slots, L, Hkv, hd]
+        vals = rows[name].transpose(1, 0, 2, 3)
+        out[name] = pool[name].at[:, page_ids, :, offsets].set(vals)
+    return out
+
+
+def reset_pages(pool: dict, page_ids: jax.Array) -> dict:
+    """Invalidate freed pages (kv_pos = -1) so reuse never leaks stale
+    positions into a future gather.  K/V bytes are left as-is (masked)."""
+    if "kv_pos" not in pool:
+        return pool
+    out = dict(pool)
+    out["kv_pos"] = pool["kv_pos"].at[:, page_ids].set(-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# stateful shell
+# ---------------------------------------------------------------------------
+
+
+class PagedKVCache:
+    """Page pool + page tables + free list for one serving engine.
+
+    ``capacity`` (data pages) defaults to full provisioning
+    (slots × pages_per_slot = the dense cache's footprint); pass a smaller
+    value to overcommit — admission then gates on reservations
+    (``reserve``) and short prompts pack more requests into the same
+    memory, which is the whole point of paging.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        slots: int,
+        max_len: int,
+        *,
+        page_size: int = 16,
+        capacity: Optional[int] = None,
+        mesh=None,
+        tp: int = 1,
+    ):
+        assert page_size >= 1
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.page_size = page_size
+
+        spec = M.cache_spec(cfg, slots, max_len, tp)
+        ring = spec["k"].shape[3] if "k" in spec else max_len
+        self.pages_per_slot = max(1, math.ceil(ring / page_size))
+        self.view_len = self.pages_per_slot * page_size
+        self.capacity = capacity or slots * self.pages_per_slot
+        n_pool = self.capacity + RESERVED_PAGES
+
+        def pool_leaf(name, sd):
+            if name == "kv_pos":
+                return jnp.full((sd.shape[0], n_pool, page_size), -1,
+                                jnp.int32)
+            L, _, hkv, _, hd = sd.shape
+            return jnp.zeros((L, n_pool, hkv, page_size, hd), sd.dtype)
+
+        self.pool = {
+            k: pool_leaf(k, sd) for k, sd in spec.items()
+            if k in PAGED_LEAVES
+        }
+        self.state = {
+            k: (jnp.full(sd.shape, -1, sd.dtype) if sd.dtype == jnp.int32
+                else jnp.zeros(sd.shape, sd.dtype))
+            for k, sd in spec.items() if k not in PAGED_LEAVES
+        }
+        self.mesh = mesh
+        if mesh is not None:
+            from ..dist import sharding as shd
+            self.pool = jax.device_put(
+                self.pool,
+                shd.named_shardings(
+                    shd.paged_cache_specs_tree(cfg, self.pool, mesh), mesh
+                ),
+            )
+            if self.state:
+                self.state = jax.device_put(
+                    self.state,
+                    shd.named_shardings(
+                        shd.cache_specs_tree(cfg, self.state, mesh), mesh
+                    ),
+                )
+
+        # host-side bookkeeping
+        self.table = np.full((slots, self.pages_per_slot), NULL_PAGE,
+                             np.int32)
+        self._free: list[int] = list(
+            range(RESERVED_PAGES, n_pool)
+        )
+        self._owned: dict[int, list[int]] = {s: [] for s in range(slots)}
+        self._reserved: dict[int, int] = {s: 0 for s in range(slots)}
+
+        self._gather_j = jax.jit(gather_view)
+        self._scatter_pages_j = jax.jit(scatter_pages, donate_argnums=(0,))
+        self._reset_j = jax.jit(reset_pages, donate_argnums=(0,))
+        # jitted + donated for the same reason as ServeEngine._slot_write:
+        # an eager .at[].set would rebuild the state tree and silently
+        # drop its mesh-committed sharding on every admission
+        self._state_write_j = jax.jit(
+            lambda state, rows, idx: jax.tree.map(
+                lambda full, one: full.at[:, idx].set(
+                    one.astype(full.dtype)
+                ),
+                state, rows,
+            ),
+            donate_argnums=(0,),
+        )
+
+    # -- accounting ---------------------------------------------------------
+    def pages_needed(self, n_tokens: int) -> int:
+        return max(1, math.ceil(min(n_tokens, self.view_len)
+                                / self.page_size))
+
+    @property
+    def used_pages(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def available_pages(self) -> int:
+        """Free pages not already promised to an admitted request."""
+        return len(self._free) - sum(self._reserved.values())
+
+    def occupancy(self) -> float:
+        return self.used_pages / max(1, self.capacity)
+
+    def reserve(self, slot: int, n_pages: int) -> bool:
+        """Admission gate: promise ``n_pages`` of future growth to a slot.
+        Returns False (and reserves nothing) when the pool cannot honor the
+        worst case — the request must wait for a release."""
+        n_pages = min(n_pages, self.pages_per_slot)
+        extra = max(0, n_pages - len(self._owned[slot]))
+        if extra > self.available_pages:
+            return False
+        self._reserved[slot] += extra
+        return True
+
+    def alloc_upto(self, slot: int, n_tokens: int) -> None:
+        """Ensure pages covering token positions [0, n_tokens) exist for the
+        slot, drawing from its reservation (decode growth is lazy)."""
+        need = self.pages_needed(n_tokens)
+        own = self._owned[slot]
+        while len(own) < need:
+            page = self._free.pop()
+            own.append(page)
+            self.table[slot, len(own) - 1] = page
+            self._reserved[slot] = max(0, self._reserved[slot] - 1)
+
+    def release(self, slot: int, *, invalidate: bool = True) -> list[int]:
+        """Reclaim a finished request's pages; returns the freed ids.
+
+        ``invalidate=False`` skips the jitted kv_pos reset so a caller
+        freeing several slots in one engine step can batch the resets
+        into a single ``invalidate()`` dispatch — freed pages MUST be
+        invalidated before they can be reallocated."""
+        own = self._owned[slot]
+        if own:
+            if invalidate:
+                self.invalidate(own)
+            self._free.extend(own)
+        self._owned[slot] = []
+        self._reserved[slot] = 0
+        self.table[slot] = NULL_PAGE
+        return own
+
+    def invalidate(self, page_ids: list[int]) -> None:
+        """One jitted reset marking the given pages all-invalid; the id
+        array pads to a page-count multiple to bound retraces."""
+        if not page_ids or not self.pool:
+            return
+        n = math.ceil(len(page_ids) / self.pages_per_slot) \
+            * self.pages_per_slot
+        ids = np.full((n,), TRASH_PAGE, np.int32)
+        ids[: len(page_ids)] = page_ids
+        self.pool = self._reset_j(self.pool, jnp.asarray(ids))
+
+    def page_ids(self, slot: int) -> list[int]:
+        return list(self._owned[slot])
+
+    def table_device(self) -> jax.Array:
+        return jnp.asarray(self.table)
+
+    # -- data movement ------------------------------------------------------
+    def dense_view(self) -> dict:
+        """Materialize the dense cache ([L, slots, ...]) the model decodes
+        against; unallocated positions are invalid by construction."""
+        view = self._gather_j(self.pool, self.table_device()) if self.pool \
+            else {}
+        return {**view, **self.state}
+
+    def write_prefill(self, slots: list[int], rows: dict) -> None:
+        """Admit prefilled rows: paged leaves scatter into each slot's
+        pages ([L, N, ..., S_pad, ...] with S_pad a page multiple, already
+        allocated via ``alloc_upto``); state leaves land dense per slot.
+        Rows beyond ``len(slots)`` are padding and scatter into TRASH."""
+        paged_rows, state_rows = split_leaves(rows)
+        if paged_rows:
+            n = next(iter(paged_rows.values())).shape[1]
+            s_pad = paged_rows["kv_pos"].shape[2] if "kv_pos" in paged_rows \
+                else paged_rows["k"].shape[3]
+            n_pages = s_pad // self.page_size
+            ids = np.full((n, n_pages), TRASH_PAGE, np.int32)
+            for i, slot in enumerate(slots):
+                own = self._owned[slot][:n_pages]
+                ids[i, : len(own)] = own
+            self.pool = self._scatter_pages_j(
+                self.pool, paged_rows, jnp.asarray(ids)
+            )
+        if state_rows and slots:
+            idx = jnp.asarray(np.asarray(slots, np.int32))
+            real = {k: v[:, : len(slots)] for k, v in state_rows.items()}
+            self.state = self._state_write_j(self.state, real, idx)
+
+    def token_targets(self, positions: np.ndarray) -> tuple:
+        """(page_ids, offsets) arrays routing each slot's next token write;
+        slots without an allocated page at that position go to TRASH."""
+        pages = np.full((self.slots,), TRASH_PAGE, np.int32)
+        offs = np.zeros((self.slots,), np.int32)
+        for slot in range(self.slots):
+            pos = int(positions[slot])
+            idx = pos // self.page_size
+            if 0 <= idx < self.pages_per_slot:
+                page = int(self.table[slot, idx])
+                if page != NULL_PAGE:
+                    pages[slot] = page
+                    offs[slot] = pos % self.page_size
+        return pages, offs

@@ -1,0 +1,129 @@
+"""Serving telemetry: TTFT / TPOT / throughput / cache occupancy.
+
+One ``EngineMetrics`` per engine; one ``RequestMetrics`` per request.  The
+engine calls the ``on_*`` hooks at submit / first token / finish and bumps
+step counters from its scheduling loop; ``summary()`` folds everything into
+the flat dict that ``benchmarks/bench_serving.py`` emits and
+EXPERIMENTS.md §Serve defines the measurement rules for:
+
+  * **TTFT** — submit → first generated token (queueing + prefill).
+  * **TPOT** — (finish − first token) / (new_tokens − 1): steady decode.
+  * **throughput** — generated tokens / (first submit → last finish).
+  * **occupancy** — used / capacity KV pages, sampled once per engine step.
+
+The clock is injectable for deterministic tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Lifecycle timestamps and counts for one request."""
+
+    uid: int
+    prompt_len: int = 0
+    submit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    new_tokens: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.submit_t is None or self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean per-token latency over the decode phase."""
+        if (self.first_token_t is None or self.finish_t is None
+                or self.new_tokens < 2):
+            return None
+        return (self.finish_t - self.first_token_t) / (self.new_tokens - 1)
+
+
+def _mean(xs: list) -> float:
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def _p50(xs: list) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+class EngineMetrics:
+    """Per-engine counters + the registry of per-request metrics."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self.requests: dict[int, RequestMetrics] = {}
+        # jitted-call counters: the batching win shows up here directly
+        # (N queued prompts admitted in far fewer prefill calls)
+        self.prefill_calls = 0
+        self.prefill_chunk_calls = 0
+        self.prefill_tokens = 0        # real prompt tokens prefilled
+        self.prefill_padded_tokens = 0  # bucket-padding overhead tokens
+        self.decode_steps = 0
+        self.decode_tokens = 0
+        self.admitted = 0
+        self.finished = 0
+        self._occ_sum = 0.0
+        self._occ_max = 0.0
+        self._occ_n = 0
+
+    # -- request lifecycle hooks -------------------------------------------
+    def on_submit(self, uid: int, prompt_len: int) -> None:
+        self.requests[uid] = RequestMetrics(
+            uid, prompt_len=prompt_len, submit_t=self.clock()
+        )
+
+    def on_first_token(self, uid: int) -> None:
+        r = self.requests.get(uid)
+        if r is not None and r.first_token_t is None:
+            r.first_token_t = self.clock()
+        self.admitted += 1
+
+    def on_finish(self, uid: int, new_tokens: int) -> None:
+        r = self.requests.get(uid)
+        if r is not None:
+            r.finish_t = self.clock()
+            r.new_tokens = new_tokens
+        self.finished += 1
+
+    def on_occupancy(self, occ: float) -> None:
+        self._occ_sum += occ
+        self._occ_max = max(self._occ_max, occ)
+        self._occ_n += 1
+
+    # -- aggregation --------------------------------------------------------
+    def summary(self) -> dict:
+        done = [r for r in self.requests.values() if r.finish_t is not None]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [r.tpot for r in done if r.tpot is not None]
+        toks = sum(r.new_tokens for r in done)
+        t0 = min((r.submit_t for r in done), default=0.0)
+        t1 = max((r.finish_t for r in done), default=0.0)
+        wall = max(t1 - t0, 1e-9)
+        return {
+            "requests": len(done),
+            "generated_tokens": toks,
+            "wall_s": wall,
+            "throughput_tok_s": toks / wall,
+            "ttft_mean_s": _mean(ttfts),
+            "ttft_p50_s": _p50(ttfts),
+            "tpot_mean_s": _mean(tpots),
+            "prefill_calls": self.prefill_calls,
+            "prefill_chunk_calls": self.prefill_chunk_calls,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_padded_tokens": self.prefill_padded_tokens,
+            "decode_steps": self.decode_steps,
+            "decode_tokens": self.decode_tokens,
+            "kv_occupancy_mean": self._occ_sum / max(1, self._occ_n),
+            "kv_occupancy_max": self._occ_max,
+        }

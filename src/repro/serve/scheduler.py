@@ -1,0 +1,358 @@
+"""Admission/step scheduler over the paged KV cache: batched + chunked
+prefill with continuous-batching decode.
+
+The dense ``ServeEngine`` admits one request per jitted prefill call and
+re-traces per distinct prompt length — admission serializes behind
+sequential prefill, exactly the bottleneck ROADMAP's "serving-engine batch
+sharding" item names.  ``PagedServeEngine`` replaces that path with:
+
+  * **Batched prefill** — every admission round fills all free slots from
+    the queue in one jitted ``models.model.prefill`` call per *bucket*
+    (prompt lengths padded to power-of-two page counts, batch rows padded
+    to power-of-two; padding is exact because ``lengths`` masking
+    invalidates pad positions and causal attention never lets pad tokens
+    into real rows).  Archs where extra tokens are NOT function-preserving
+    — recurrent state (xlstm / hybrid) advances on every input token, MoE
+    capacity dropping depends on the dispatched token count — still batch,
+    but group by exact prompt length with no padding.
+  * **Chunked prefill** — prompts longer than ``prefill_chunk`` (dense
+    blocks only) advance one chunk per engine step via
+    ``models.model.prefill_chunk``, interleaved with decode so active
+    requests' TPOT does not stall behind a long admission.
+  * **Paged KV + donated buffers** — cache storage lives in
+    ``kvcache.PagedKVCache``; the decode step fuses page-gather → batched
+    decode → token-scatter in ONE jitted call whose pool/state buffers are
+    donated, so the mesh-committed layout is updated in place (no
+    per-iteration ``device_put``).  Params are committed once at
+    construction.
+
+Telemetry (``serve.metrics``) records TTFT / TPOT / throughput / page
+occupancy / jitted-call counts; ``benchmarks/bench_serving.py`` turns them
+into the repo's serving perf number (protocol: EXPERIMENTS.md §Serve).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import model as M
+from . import kvcache as KV
+from .engine import Request, batched_decode_fn
+from .metrics import EngineMetrics
+
+
+@dataclasses.dataclass
+class _Prefilling:
+    """A slot mid-way through chunked prefill."""
+
+    req: Request
+    done: int      # prompt tokens already processed
+    cache: dict    # dense scratch row [L, 1, ...] the chunks write into
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+class PagedServeEngine:
+    """Continuous batching over a paged KV cache with batched admission."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        slots: int = 4,
+        max_len: int = 512,
+        page_size: int = 16,
+        capacity: Optional[int] = None,
+        prefill_chunk: int = 0,
+        backend: Optional[str] = None,
+        mesh=None,
+        tp: int = 1,
+        metrics: Optional[EngineMetrics] = None,
+    ):
+        """``tp`` must match the degree the params were built with
+        (``init_params(cfg, key, tp)``) so the pool's padded KV-head axis
+        lines up with the weights — and can shard over "model"."""
+        assert cfg.has_decode, f"{cfg.name} is encoder-only"
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.backend = backend
+        self.mesh = mesh
+        # chunked prefill needs stateless layers AND deterministic token
+        # dispatch (MoE capacity dropping is count-dependent), so it only
+        # engages on dense blocks
+        self.prefill_chunk = prefill_chunk if cfg.block == "dense" else 0
+
+        self.kv = KV.PagedKVCache(
+            cfg, slots, max_len, page_size=page_size, capacity=capacity,
+            mesh=mesh, tp=tp,
+        )
+        self.params = params
+        if mesh is not None:
+            from ..dist import sharding as shd
+            self.params = jax.device_put(
+                params,
+                shd.named_shardings(
+                    shd.param_specs(cfg, params, mesh), mesh
+                ),
+            )
+
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}
+        self.prefilling: dict[int, _Prefilling] = {}
+        self.positions = np.zeros((slots,), np.int32)
+        self.metrics = metrics or EngineMetrics()
+
+        self._prefill_jits: dict[int, callable] = {}
+        self._chunk_j = jax.jit(
+            lambda p, toks, cache, start: M.prefill_chunk(
+                cfg, p, toks, cache, start, backend=backend
+            ),
+            donate_argnums=(2,),
+        )
+        self._decode_j = self._build_decode()
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) < self.max_len, (
+            f"prompt of {len(req.prompt)} tokens does not fit "
+            f"max_len={self.max_len}"
+        )
+        budget = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        if self.kv.pages_needed(budget) > self.kv.capacity:
+            # reject up front: once queued, an unserveable request would
+            # deadlock admission after the pool drains
+            raise ValueError(
+                f"request {req.uid} needs {self.kv.pages_needed(budget)} "
+                f"KV pages but the pool capacity is {self.kv.capacity}"
+            )
+        self.queue.append(req)
+        self.metrics.on_submit(req.uid, len(req.prompt))
+
+    def run(self, max_iters: int = 10_000) -> list[Request]:
+        """Drive until queue + active + prefilling drain."""
+        finished: list[Request] = []
+        for _ in range(max_iters):
+            if not self.queue and not self.active and not self.prefilling:
+                break
+            finished.extend(self.step())
+        return finished
+
+    def step(self) -> list[Request]:
+        """One engine iteration: admit, advance chunked prefills, decode."""
+        self._admit()
+        self._advance_prefill()
+        return self._decode_iteration()
+
+    # -- admission ----------------------------------------------------------
+    def _free_slots(self) -> list[int]:
+        return [
+            s for s in range(self.slots)
+            if s not in self.active and s not in self.prefilling
+        ]
+
+    def _admit(self) -> None:
+        batch: list[tuple[int, Request]] = []
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue[0]
+            budget = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+            if not self.kv.reserve(slot, self.kv.pages_needed(budget)):
+                # submit() rejects requests that can NEVER fit, so a failed
+                # reservation always resolves once running requests release
+                break  # FCFS: wait for a release to free pages
+            self.queue.popleft()
+            batch.append((slot, req))
+        if not batch:
+            return
+        if self.prefill_chunk:
+            long = [(s, r) for s, r in batch
+                    if len(r.prompt) > self.prefill_chunk]
+            batch = [(s, r) for s, r in batch
+                     if len(r.prompt) <= self.prefill_chunk]
+            for slot, req in long:
+                self.prefilling[slot] = _Prefilling(
+                    req, 0, M.init_cache(self.cfg, 1, self.kv.view_len)
+                )
+        self._batched_prefill(batch)
+
+    def _bucket_tokens(self, plen: int) -> int:
+        """Prompt-length bucket: power-of-two page count (bounds jit
+        retraces to O(log max_len) distinct prefill shapes)."""
+        pages = min(_next_pow2(self.kv.pages_needed(plen)),
+                    self.kv.pages_per_slot)
+        return pages * self.kv.page_size
+
+    def _prefill_fn(self, cache_len: int):
+        fn = self._prefill_jits.get(cache_len)
+        if fn is None:
+            cfg, backend = self.cfg, self.backend
+
+            def f(p, toks, lens):
+                return M.prefill(
+                    cfg, p, {"tokens": toks}, cache_len, lengths=lens,
+                    backend=backend,
+                )
+
+            if cfg.block == "moe":
+                # MoE capacity dispatch pools tokens across batch rows
+                # (group-local, gcd-based), so a b=N prefill drops
+                # different tokens than the dense engine's b=1 calls.
+                # vmap keeps one jitted admission call but gives every
+                # row its own b=1 dispatch — bit-identical to dense.
+                def one(p, t, l):
+                    lg, cache = M.prefill(
+                        cfg, p, {"tokens": t[None]}, cache_len,
+                        lengths=l[None], backend=backend,
+                    )
+                    return lg[0], jax.tree.map(lambda x: x[:, 0], cache)
+
+                def f(p, toks, lens):  # noqa: F811
+                    return jax.vmap(
+                        one, in_axes=(None, 0, 0), out_axes=(0, 1)
+                    )(p, toks, lens)
+
+            fn = self._prefill_jits[cache_len] = jax.jit(f)
+        return fn
+
+    def _batched_prefill(self, items: list[tuple[int, Request]]) -> None:
+        if not items:
+            return
+        # Padding is only function-preserving for pure attention blocks:
+        # recurrent state advances on pad tokens, and MoE capacity-based
+        # dropping depends on the dispatched token count, so both group by
+        # EXACT length (batched, but no pad tokens and no dummy rows).
+        pad_ok = self.cfg.block == "dense"
+        groups: dict[int, list[tuple[int, Request]]] = {}
+        for slot, req in items:
+            plen = len(req.prompt)
+            key = self._bucket_tokens(plen) if pad_ok else plen
+            groups.setdefault(key, []).append((slot, req))
+
+        for key, group in groups.items():
+            n = len(group)
+            n_pad = min(_next_pow2(n), self.slots) if pad_ok else n
+            s_tok = key                                  # tokens fed in
+            cache_len = key if pad_ok else \
+                self.kv.pages_needed(key) * self.kv.page_size
+            toks = np.zeros((n_pad, s_tok), np.int32)
+            lens = np.ones((n_pad,), np.int32)
+            for i, (_, req) in enumerate(group):
+                toks[i, : len(req.prompt)] = req.prompt
+                lens[i] = len(req.prompt)
+            logits, rows = self._prefill_fn(cache_len)(
+                self.params, jnp.asarray(toks), jnp.asarray(lens)
+            )
+            self.metrics.prefill_calls += 1
+            real = int(sum(len(r.prompt) for _, r in group))
+            self.metrics.prefill_tokens += real
+            self.metrics.prefill_padded_tokens += n_pad * s_tok - real
+            for slot, req in group:
+                self.kv.alloc_upto(slot, len(req.prompt))
+            self.kv.write_prefill([s for s, _ in group], rows)
+            for i, (slot, req) in enumerate(group):
+                req.output.append(int(jnp.argmax(logits[i, -1])))
+                self.active[slot] = req
+                self.positions[slot] = len(req.prompt)
+                self.metrics.on_first_token(req.uid)
+
+    # -- chunked prefill ----------------------------------------------------
+    def _advance_prefill(self) -> None:
+        for slot, st in list(self.prefilling.items()):
+            plen = len(st.req.prompt)
+            take = min(self.prefill_chunk, plen - st.done)
+            chunk = np.asarray(st.req.prompt[st.done: st.done + take],
+                               np.int32)
+            logits, st.cache = self._chunk_j(
+                self.params, jnp.asarray(chunk)[None], st.cache,
+                jnp.int32(st.done),
+            )
+            self.metrics.prefill_chunk_calls += 1
+            self.metrics.prefill_tokens += take
+            st.done += take
+            if st.done < plen:
+                continue
+            # final chunk: move the scratch row into pages and activate
+            self.kv.alloc_upto(slot, plen)
+            s_pad = self.kv.pages_needed(plen) * self.kv.page_size
+            rows = {
+                name: (leaf[:, :, :, :s_pad] if name in ("k", "v")
+                       else leaf[:, :, :s_pad] if name == "kv_pos"
+                       else leaf)
+                for name, leaf in st.cache.items()
+            }
+            self.kv.write_prefill([slot], rows)
+            req = st.req
+            req.output.append(int(jnp.argmax(logits[0, -1])))
+            self.active[slot] = req
+            self.positions[slot] = plen
+            self.metrics.on_first_token(req.uid)
+            del self.prefilling[slot]
+
+    # -- decode -------------------------------------------------------------
+    def _build_decode(self):
+        vdec = batched_decode_fn(self.cfg, self.backend)
+
+        def step(p, toks, pool, state, table, positions, page_ids, offs):
+            view = KV.gather_view(pool, table) if pool else {}
+            logits, cache2 = vdec(p, toks, {**view, **state}, positions)
+            paged2, state2 = KV.split_leaves(cache2)
+            rows = {}
+            for name in ("k", "v"):
+                if name in paged2:
+                    idx = positions[None, :, None, None, None]
+                    rows[name] = jnp.take_along_axis(
+                        paged2[name], idx, axis=3
+                    )[:, :, :, 0]
+            pool2 = KV.scatter_token(pool, rows, page_ids, offs, positions) \
+                if pool else pool
+            return logits, pool2, state2
+
+        return jax.jit(step, donate_argnums=(2, 3))
+
+    def _decode_iteration(self) -> list[Request]:
+        if not self.active:
+            return []
+        toks = np.zeros((self.slots,), np.int32)
+        for slot, req in self.active.items():
+            toks[slot] = req.output[-1]
+            self.kv.alloc_upto(slot, int(self.positions[slot]) + 1)
+        page_ids, offs = self.kv.token_targets(self.positions)
+        logits, self.kv.pool, self.kv.state = self._decode_j(
+            self.params, jnp.asarray(toks), self.kv.pool, self.kv.state,
+            self.kv.table_device(), jnp.asarray(self.positions),
+            jnp.asarray(page_ids), jnp.asarray(offs),
+        )
+        self.metrics.decode_steps += 1
+        self.metrics.decode_tokens += len(self.active)
+        self.metrics.on_occupancy(self.kv.occupancy())
+        done = []
+        freed: list[int] = []
+        for slot, req in list(self.active.items()):
+            nxt = int(jnp.argmax(logits[slot, -1]))
+            req.output.append(nxt)
+            self.positions[slot] += 1
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and nxt == req.eos_id)
+                    or int(self.positions[slot]) >= self.max_len - 1):
+                req.done = True
+                done.append(req)
+                del self.active[slot]
+                self.positions[slot] = 0
+                freed.extend(self.kv.release(slot, invalidate=False))
+                self.metrics.on_finish(req.uid, len(req.output))
+        self.kv.invalidate(freed)  # one reset dispatch per step
+        return done

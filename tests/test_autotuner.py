@@ -49,3 +49,54 @@ def test_tuned_blocks_are_legal_for_pallas(tmp_path):
     assert 512 % b.block_q == 0 and 512 % b.block_k == 0
     g = t.tune_gemm(512, 1024, 2048)
     assert 512 % g.bm == 0 and 1024 % g.bn == 0 and 2048 % g.bk == 0
+
+
+def test_kv_heads_in_cache_key(tmp_path):
+    """GQA shapes must not collide in the tuning cache: the same query-head
+    count with different (tp-local) KV head counts are distinct entries."""
+    t = KernelTuner(budget=12, cache_path=os.path.join(tmp_path, "c.json"))
+    t.tune_attention(8, 256, 256, 64)               # MHA: kv == heads
+    t.tune_attention(8, 256, 256, 64, kv_heads=2)   # GQA group of 4
+    t.tune_attention(8, 256, 256, 64, kv_heads=1)   # replicated kv under tp
+    keys = sorted(t._cache)
+    assert len(keys) == 3
+    assert sum(".kv2" in k for k in keys) == 1
+    assert sum(".kv1" in k for k in keys) == 1
+    # read-only probe hits without searching; a miss returns None
+    assert t.lookup_attention(8, 256, 256, 64, kv_heads=2) is not None
+    assert t.lookup_attention(8, 999, 999, 64) is None
+
+
+def test_local_attention_dims_match_sharding_rules():
+    from repro.configs import get_config
+    from repro.core.autotuner import local_attention_dims
+
+    cfg = get_config("tinyllama-1.1b")      # 32q / 4kv
+    assert local_attention_dims(cfg, 1) == (32, 4)
+    assert local_attention_dims(cfg, 4) == (8, 1)
+    # kv (4) < tp (8): kv heads replicate, exactly like dist.rules
+    assert local_attention_dims(cfg, 8) == (4, 4)
+
+
+def test_ops_tuned_lookup_defaults(tmp_path, monkeypatch):
+    """kernels.ops consumers get kernel defaults on a cache miss and the
+    tuned entry (keyed by tp-local shapes) on a hit — through the SAME
+    local_attention_dims mapping launch/tune.py stores entries under,
+    including head padding (phi4's 10 kv heads pad to 12 at tp=4)."""
+    import json
+
+    from repro.configs import get_config
+    from repro.core.autotuner import local_attention_dims
+    from repro.kernels import ops
+
+    cfg = get_config("phi4-mini-3.8b")          # 24q / 8kv... padded rules
+    hq, hkv = local_attention_dims(cfg, 4)
+    cache = os.path.join(tmp_path, "tc.json")
+    t = KernelTuner(budget=12, cache_path=cache)
+    tuned = t.tune_attention(hq, 256, 256, cfg.hd, kv_heads=hkv)
+    monkeypatch.setattr(ops, "_TUNER", KernelTuner(cache_path=cache))
+    bq, bk = ops.tuned_attention_blocks(cfg, 256, 256, tp=4)
+    assert (bq, bk) == (tuned.block_q, tuned.block_k)
+    assert json.load(open(cache))  # persisted
+    # miss -> defaults, no search side effects
+    assert ops.tuned_attention_blocks(cfg, 64, 64, tp=1) == (128, 128)

@@ -1,0 +1,138 @@
+"""Paged KV cache unit tests: page accounting, gather/scatter round-trips,
+reservation gating — plus the serving metrics aggregation (fake clock)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.kvcache import (
+    NULL_PAGE,
+    PagedKVCache,
+    TRASH_PAGE,
+    split_leaves,
+)
+from repro.serve.metrics import EngineMetrics
+
+CFG = get_config("tinyllama-1.1b", smoke=True)
+
+
+def _cache_rows(n, s_pad, seed=0):
+    """Dense prefill-shaped rows with recognizable values."""
+    rng = np.random.RandomState(seed)
+    spec = M.cache_spec(CFG, n, s_pad)
+    rows = {}
+    for name, sd in spec.items():
+        if name == "kv_pos":
+            rows[name] = jnp.asarray(
+                np.broadcast_to(np.arange(s_pad, dtype=np.int32),
+                                sd.shape).copy()
+            )
+        else:
+            rows[name] = jnp.asarray(
+                rng.randn(*sd.shape).astype(np.float32)
+            )
+    return rows
+
+
+def test_alloc_release_accounting():
+    kv = PagedKVCache(CFG, slots=2, max_len=64, page_size=16)
+    assert kv.pages_per_slot == 4 and kv.capacity == 8
+    assert kv.available_pages == 8
+    assert kv.reserve(0, 3)
+    assert kv.available_pages == 5
+    kv.alloc_upto(0, 33)            # 3 pages (33 tokens / 16 per page)
+    assert kv.used_pages == 3 and kv.available_pages == 5
+    assert all(kv.table[0, :3] >= 2) and kv.table[0, 3] == NULL_PAGE
+    kv.release(0)
+    assert kv.used_pages == 0 and kv.available_pages == 8
+    assert (kv.table[0] == NULL_PAGE).all()
+
+
+def test_reserve_gates_admission():
+    kv = PagedKVCache(CFG, slots=4, max_len=64, page_size=16, capacity=4)
+    assert kv.reserve(0, 3)
+    assert not kv.reserve(1, 2)     # only 1 unreserved page left
+    assert kv.reserve(1, 1)
+    assert not kv.reserve(2, 1)
+
+
+def test_dense_view_roundtrip():
+    """scatter_pages → gather_view reproduces the dense layout exactly."""
+    kv = PagedKVCache(CFG, slots=3, max_len=64, page_size=16)
+    rows = _cache_rows(2, 32)
+    paged_rows, state_rows = split_leaves(rows)
+    assert not state_rows           # dense arch: everything is per-token
+    kv.reserve(0, 2), kv.reserve(2, 2)
+    kv.alloc_upto(0, 32)
+    kv.alloc_upto(2, 32)
+    kv.write_prefill([0, 2], rows)
+    view = kv.dense_view()
+    for name in ("k", "v"):
+        got = np.asarray(view[name])
+        want = np.asarray(rows[name])
+        assert got.shape[1] == 3 and got.shape[3] == kv.view_len
+        np.testing.assert_array_equal(got[:, 0, :, :32], want[:, 0])
+        np.testing.assert_array_equal(got[:, 2, :, :32], want[:, 1])
+        assert (got[:, 1] == 0).all()      # never written
+    kvp = np.asarray(view["kv_pos"])
+    np.testing.assert_array_equal(kvp[:, 0, :32],
+                                  np.asarray(rows["kv_pos"])[:, 0])
+    assert (kvp[:, 1] == -1).all()         # null page: all invalid
+    assert (kvp[:, :, 32:] == -1).all()    # beyond allocation: invalid
+
+
+def test_release_invalidates_reused_pages():
+    kv = PagedKVCache(CFG, slots=1, max_len=32, page_size=16)
+    rows = _cache_rows(1, 32)
+    kv.reserve(0, 2)
+    kv.alloc_upto(0, 32)
+    kv.write_prefill([0], rows)
+    kv.release(0)
+    kv.reserve(0, 1)
+    kv.alloc_upto(0, 1)             # reuse a freed page for one token
+    kvp = np.asarray(kv.dense_view()["kv_pos"])
+    assert (kvp == -1).all()        # no stale positions leak through
+
+
+def test_deferred_release_batches_invalidation():
+    kv = PagedKVCache(CFG, slots=2, max_len=32, page_size=16)
+    rows = _cache_rows(2, 32)
+    for s in (0, 1):
+        kv.reserve(s, 2)
+        kv.alloc_upto(s, 32)
+    kv.write_prefill([0, 1], rows)
+    freed = kv.release(0, invalidate=False) + \
+        kv.release(1, invalidate=False)
+    assert len(freed) == 4 and kv.used_pages == 0
+    kv.invalidate(freed)            # one dispatch for both slots' pages
+    for s in (0, 1):
+        kv.reserve(s, 1)
+        kv.alloc_upto(s, 1)
+    assert (np.asarray(kv.dense_view()["kv_pos"]) == -1).all()
+
+
+def test_token_targets_trash_for_unallocated():
+    kv = PagedKVCache(CFG, slots=2, max_len=32, page_size=16)
+    kv.reserve(0, 1)
+    kv.alloc_upto(0, 5)
+    pages, offs = kv.token_targets(np.asarray([4, 9], np.int32))
+    assert pages[0] == kv.table[0, 0] and offs[0] == 4
+    assert pages[1] == TRASH_PAGE            # slot 1 owns nothing
+
+
+def test_metrics_summary_fake_clock():
+    t = [0.0]
+    m = EngineMetrics(clock=lambda: t[0])
+    m.on_submit(7, prompt_len=5)
+    t[0] = 2.0
+    m.on_first_token(7)
+    t[0] = 6.0
+    m.on_finish(7, new_tokens=5)
+    m.on_occupancy(0.25)
+    m.on_occupancy(0.75)
+    s = m.summary()
+    assert s["requests"] == 1 and s["generated_tokens"] == 5
+    assert s["ttft_mean_s"] == 2.0
+    assert s["tpot_mean_s"] == 1.0           # 4s over 4 decode intervals
+    assert s["throughput_tok_s"] == 5 / 6.0
+    assert s["kv_occupancy_mean"] == 0.5 and s["kv_occupancy_max"] == 0.75

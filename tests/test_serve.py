@@ -1,5 +1,6 @@
-"""Serving engine: continuous batching with ragged prompts must exactly
-match sequential single-request decoding."""
+"""Serving engines: continuous batching with ragged prompts must exactly
+match sequential single-request decoding, and the paged scheduler must
+decode token-for-token identically to the dense baseline."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,9 +8,15 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import PagedServeEngine, Request, ServeEngine
 
 CFG = get_config("tinyllama-1.1b", smoke=True)
+
+
+def _run_engine(eng, prompts, max_new=5, **req_kw):
+    for u, p in prompts.items():
+        eng.submit(Request(u, p, max_new_tokens=max_new, **req_kw))
+    return {r.uid: r.output for r in eng.run()}
 
 
 def _sequential_greedy(params, prompt, n):
@@ -61,3 +68,149 @@ def test_engine_slot_reuse():
         ))
     done = eng.run()
     assert len(done) == 3  # one slot served all three sequentially
+    assert eng.metrics.summary()["requests"] == 3
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.RandomState(2)
+    return {u: rng.randint(0, CFG.vocab, size=n).astype(np.int32)
+            for u, n in enumerate([7, 12, 5, 9, 21, 3])}
+
+
+def test_engine_eos_early_stop(params):
+    prompt = np.arange(8, dtype=np.int32) % CFG.vocab
+    eng = ServeEngine(CFG, params, slots=1, max_len=64)
+    eng.submit(Request(0, prompt, max_new_tokens=20))
+    free_run = eng.run()[0].output
+    assert len(free_run) == 20
+    eng2 = ServeEngine(CFG, params, slots=1, max_len=64)
+    eng2.submit(Request(1, prompt, max_new_tokens=20, eos_id=free_run[3]))
+    stopped = eng2.run()[0].output
+    assert stopped == free_run[:4]  # stops AT the eos token
+
+
+def test_engine_max_len_truncation(params):
+    prompt = np.arange(10, dtype=np.int32) % CFG.vocab
+    eng = ServeEngine(CFG, params, slots=1, max_len=16)
+    eng.submit(Request(0, prompt, max_new_tokens=100))
+    out = eng.run(max_iters=200)[0].output
+    # positions stop at max_len - 1: prompt + generated never exceed the
+    # cache (first token comes from prefill, the rest from decode)
+    assert len(prompt) + len(out) - 1 <= 16 - 1
+    assert len(out) < 100
+
+
+@pytest.mark.slow
+def test_paged_matches_dense_ragged(params, prompts):
+    """The acceptance bar: paged scheduler decodes token-for-token
+    identically to the dense engine across ragged prompts."""
+    dense = _run_engine(ServeEngine(CFG, params, slots=2, max_len=64),
+                        prompts)
+    paged = _run_engine(
+        PagedServeEngine(CFG, params, slots=2, max_len=64, page_size=16),
+        prompts,
+    )
+    assert dense.keys() == paged.keys()
+    for u in dense:
+        assert dense[u] == paged[u], (u, dense[u], paged[u])
+
+
+@pytest.mark.slow
+def test_paged_chunked_prefill_matches(params):
+    rng = np.random.RandomState(3)
+    prompts = {u: rng.randint(0, CFG.vocab, size=n).astype(np.int32)
+               for u, n in enumerate([40, 7, 33])}
+    dense = _run_engine(ServeEngine(CFG, params, slots=2, max_len=64),
+                        prompts, max_new=4)
+    chunked = PagedServeEngine(CFG, params, slots=2, max_len=64,
+                               prefill_chunk=16)
+    got = _run_engine(chunked, prompts, max_new=4)
+    for u in dense:
+        assert dense[u] == got[u], (u, dense[u], got[u])
+    assert chunked.metrics.prefill_chunk_calls >= 4  # 40- and 33-token
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen3-moe-30b-a3b", "hymba-1.5b",
+                                  "xlstm-125m"])
+def test_paged_matches_dense_stateful_archs(arch):
+    """MoE (capacity dropping) and recurrent-state archs must admit via
+    exact-length groups — padding would change the computed function.
+    Repeated lengths force multi-row groups: MoE rows must each keep
+    their own b=1 capacity pool inside the batched admission call."""
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.RandomState(6)
+    prompts = {u: rng.randint(0, cfg.vocab, size=n).astype(np.int32)
+               for u, n in enumerate([6, 6, 6, 13, 6])}
+    dense = _run_engine(ServeEngine(cfg, params, slots=3, max_len=32),
+                        prompts, max_new=3)
+    paged = _run_engine(
+        PagedServeEngine(cfg, params, slots=3, max_len=32, page_size=8),
+        prompts, max_new=3,
+    )
+    for u in dense:
+        assert dense[u] == paged[u], (arch, u, dense[u], paged[u])
+
+
+def test_paged_eos_and_max_len(params):
+    prompt = np.arange(9, dtype=np.int32) % CFG.vocab
+    eng = PagedServeEngine(CFG, params, slots=1, max_len=32, page_size=8)
+    eng.submit(Request(0, prompt, max_new_tokens=10))
+    out = eng.run()[0].output
+    eng2 = PagedServeEngine(CFG, params, slots=1, max_len=32, page_size=8)
+    eng2.submit(Request(1, prompt, max_new_tokens=10, eos_id=out[2]))
+    assert eng2.run()[0].output == out[:3]
+    eng3 = PagedServeEngine(CFG, params, slots=1, max_len=16, page_size=8)
+    eng3.submit(Request(2, prompt, max_new_tokens=100))
+    r3 = eng3.run(max_iters=200)[0]
+    assert len(prompt) + len(r3.output) - 1 <= 16 - 1
+    # finished requests release their pages
+    assert eng3.kv.used_pages == 0
+
+
+def test_paged_overcommitted_pool(params):
+    """Fewer pages than slots×pages_per_slot: admission gates on page
+    reservations and every request still completes."""
+    rng = np.random.RandomState(4)
+    eng = PagedServeEngine(CFG, params, slots=4, max_len=64, page_size=16,
+                           capacity=8)
+    prompts = {u: rng.randint(0, CFG.vocab, size=20).astype(np.int32)
+               for u in range(5)}
+    done = _run_engine(eng, prompts, max_new=8)
+    assert len(done) == 5
+    assert eng.metrics.summary()["kv_occupancy_max"] <= 1.0
+
+
+def test_paged_rejects_oversized_request(params):
+    eng = PagedServeEngine(CFG, params, slots=1, max_len=16)
+    with pytest.raises(AssertionError):
+        eng.submit(Request(0, np.zeros((16,), np.int32)))
+    # a request that can never fit the page pool is rejected AT SUBMIT so
+    # it cannot deadlock admission (or discard finished work) later
+    small = PagedServeEngine(CFG, params, slots=2, max_len=64,
+                             page_size=16, capacity=2)
+    with pytest.raises(ValueError):
+        small.submit(Request(1, np.zeros((40,), np.int32),
+                             max_new_tokens=20))
+
+
+def test_admit_preserves_cache_sharding(params):
+    """The _admit slot write must keep the mesh-committed layout instead
+    of silently replacing it (regression test for the eager tree-map)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eng = ServeEngine(CFG, params, slots=2, max_len=32, mesh=mesh)
+    committed = {k: leaf.sharding for k, leaf in eng.cache.items()}
+    rng = np.random.RandomState(5)
+    prompts = {u: rng.randint(0, CFG.vocab, size=6).astype(np.int32)
+               for u in range(3)}
+    done = _run_engine(eng, prompts, max_new=3)
+    assert len(done) == 3
+    for k, leaf in eng.cache.items():
+        assert leaf.sharding.is_equivalent_to(committed[k], leaf.ndim), k

@@ -65,6 +65,18 @@ def test_batch_specs_replicate_non_divisible():
     assert spec == P(("data",), None)
 
 
+def test_paged_cache_specs():
+    """Page-pool leaves: KV heads over "model", page axis replicated."""
+    from repro.serve.kvcache import PagedKVCache
+
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    kv = PagedKVCache(cfg, slots=2, max_len=32, page_size=16)
+    specs = shd.paged_cache_specs_tree(cfg, kv.pool, MESH)
+    assert specs["k"] == P(None, None, "model", None, None)
+    assert specs["v"] == P(None, None, "model", None, None)
+    assert specs["kv_pos"] == P(None, None, None)
+
+
 def test_zero1_opt_sharding():
     cfg = get_config("tinyllama-1.1b")
     params = _abstract_params(cfg)
