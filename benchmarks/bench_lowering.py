@@ -1,0 +1,113 @@
+"""Lowering fidelity: analytical-vs-measured rank correlation.
+
+The analytical oracle is only useful if it *ranks* schedules the way real
+execution does (the paper's premise: the search needs faithful feedback,
+not absolute microseconds).  This benchmark draws a pool of distinct
+schedules per workload, lowers each to its executable kernel
+(``core/lowering.py``), verifies numerics against ``kernels/ref.py``, and
+reports the Spearman rank correlation between analytical predictions and
+measured (interpret-mode on CPU) wall clocks.
+
+A numerics mismatch is a hard failure — a fast wrong kernel must never
+enter a rank comparison.  Shapes are CI-sized; ``REPRO_BENCH_LOWERING_N``
+scales the schedule pool (>= 16 by default, the EXPERIMENTS.md §Measured
+protocol floor).
+"""
+from __future__ import annotations
+
+import os
+import random
+
+from repro.core.cost_model import HardwareOracle, get_platform
+from repro.core.lowering import LoweringError
+from repro.core.oracle import MeasuredOracle
+from repro.core.schedule import ScheduleError, initial_schedule, random_schedule
+from repro.core.workloads import attention_workload, matmul_workload
+
+from .common import emit
+
+PLATFORM = "tpu-v5e"
+
+
+def _workloads():
+    return [
+        matmul_workload("lowering_gemm", m=64, n=256, k=256, dtype_bytes=4,
+                        epilogue="swiglu"),
+        attention_workload("lowering_attn", heads=2, seq_q=128, seq_kv=128,
+                           head_dim=64, dtype_bytes=4),
+    ]
+
+
+def _ranks(xs):
+    """Average ranks (ties share their mean rank)."""
+    order = sorted(range(len(xs)), key=lambda i: xs[i])
+    ranks = [0.0] * len(xs)
+    i = 0
+    while i < len(order):
+        j = i
+        while j + 1 < len(order) and xs[order[j + 1]] == xs[order[i]]:
+            j += 1
+        mean_rank = (i + j) / 2.0
+        for k in range(i, j + 1):
+            ranks[order[k]] = mean_rank
+        i = j + 1
+    return ranks
+
+
+def spearman(xs, ys) -> float:
+    n = len(xs)
+    if n < 2:
+        return 0.0
+    rx, ry = _ranks(xs), _ranks(ys)
+    mx = sum(rx) / n
+    my = sum(ry) / n
+    cov = sum((a - mx) * (b - my) for a, b in zip(rx, ry))
+    vx = sum((a - mx) ** 2 for a in rx) ** 0.5
+    vy = sum((b - my) ** 2 for b in ry) ** 0.5
+    if vx == 0 or vy == 0:
+        return 0.0
+    return cov / (vx * vy)
+
+
+def run(n_schedules: int = None) -> dict:
+    n = n_schedules or int(os.environ.get("REPRO_BENCH_LOWERING_N", "16"))
+    analytical = HardwareOracle(get_platform(PLATFORM), noise=False)
+    measured = MeasuredOracle(PLATFORM, repeats=3)
+    out: dict = {}
+    for w in _workloads():
+        rng = random.Random(0)
+        s0 = initial_schedule(w)
+        pool = {s0.key(): s0}
+        guard = 0
+        while len(pool) < n and guard < n * 50:
+            guard += 1
+            try:
+                s = random_schedule(rng, s0, rng.randint(1, 6))
+            except ScheduleError:
+                continue
+            pool.setdefault(s.key(), s)
+        xs, ys = [], []
+        kinds: dict[str, int] = {}
+        for s in pool.values():
+            try:
+                t = measured.measure(s)  # verifies vs kernels/ref.py first
+            except LoweringError as e:  # numerics mismatch = hard failure
+                raise AssertionError(f"lowering failed on {w.name}: {e}")
+            xs.append(analytical.measure(s))
+            ys.append(t)
+            k = measured.lower(s).kind
+            kinds[k] = kinds.get(k, 0) + 1
+        rho = spearman(xs, ys)
+        out[w.name] = rho
+        emit(
+            f"lowering/{w.name}/spearman", min(ys) * 1e6,
+            f"rho={rho:.3f};n={len(xs)};timed={measured.timed_kernels};"
+            f"kinds={'+'.join(f'{k}:{v}' for k, v in sorted(kinds.items()))}",
+        )
+    emit("lowering/numerics", 0.0,
+         f"0 mismatches over {measured.measurements} measurements")
+    return out
+
+
+if __name__ == "__main__":
+    run()

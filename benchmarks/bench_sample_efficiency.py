@@ -3,8 +3,15 @@
 Reproduces the paper's central result on the ablation platform: the
 REASONING COMPILER (llm-mcts) reaches high speedups with far fewer samples
 than MCTS and Evolutionary Search, especially in low-budget regimes.
+
+``REPRO_BENCH_ORACLE=measured|hybrid`` swaps the reward backend for real
+timed kernel executions (core/oracle.py) — paper-protocol runs only: the
+paper workload shapes exceed the interpret-mode grid guard on CPU, so the
+measured variants need TPU hardware (EXPERIMENTS.md §Measured).
 """
 from __future__ import annotations
+
+import os
 
 from repro.core.search import repeat_search
 
@@ -18,6 +25,7 @@ from .common import (
 )
 
 METHODS = ["evolutionary", "mcts", "llm-mcts"]
+ORACLE = os.environ.get("REPRO_BENCH_ORACLE", "analytical")
 
 
 def run(budget: int = None, repeats: int = None) -> dict:
@@ -29,7 +37,7 @@ def run(budget: int = None, repeats: int = None) -> dict:
         for method in METHODS:
             curve, results = repeat_search(
                 wname, ABLATION_PLATFORM, method, budget,
-                repeats=repeats, grid=grid,
+                repeats=repeats, grid=grid, oracle=ORACLE,
             )
             table[(wname, method)] = curve
             best_t = min(r.best_latency_s for r in results)

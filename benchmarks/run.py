@@ -15,6 +15,7 @@ from . import (
     bench_end_to_end,
     bench_fallback,
     bench_llm_ablation,
+    bench_lowering,
     bench_platforms,
     bench_sample_efficiency,
     bench_serving,
@@ -33,6 +34,8 @@ TABLES = {
     "table8": bench_fallback.run,            # Table 8
     "roofline": roofline_table.run,          # beyond-paper: dry-run roofline
     "serving": bench_serving.run,            # beyond-paper: engine TTFT/TPOT
+    "lowering": bench_lowering.run,          # beyond-paper: measured-oracle
+                                             # rank fidelity vs analytical
 }
 
 

@@ -16,12 +16,17 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 import os
 from typing import Optional
 
 from .cost_model import HardwareOracle, get_platform
-from .schedule import SPATIAL_LEVELS, Schedule
+# Block extraction lives with the lowering bridge now (core/lowering.py):
+# the same _band_extent/_quantize_block mapping that fills this cache also
+# instantiates the kernels the MeasuredOracle times, so the persisted
+# blocks are the measured blocks by construction.
+from .lowering import LoweringError, _band_extent, _quantize_block
+from .oracle import MeasuredOracle
+from .schedule import Schedule
 from .search import SearchResult, run_search
 from .workloads import (
     Workload,
@@ -32,24 +37,6 @@ from .workloads import (
 DEFAULT_CACHE_PATH = os.path.join(
     os.path.dirname(__file__), "..", "configs", "tuning_cache.json"
 )
-
-
-def _quantize_block(x: int, extent: int, lo: int = 8, hi: int = 1024) -> int:
-    """Clamp a tile extent to a power of two that divides the extent."""
-    x = max(lo, min(hi, x))
-    p = 1 << int(math.log2(max(1, x)))
-    while p > lo and extent % p != 0:
-        p //= 2
-    return max(lo, min(p, extent)) if extent % max(lo, min(p, extent)) == 0 \
-        else min(lo, extent)
-
-
-def _band_extent(s: Schedule, axis: str) -> int:
-    """Product of the VMEM-band tile levels (spatial 2..3 / reduction 1)."""
-    tm = s.tile_map[axis]
-    if len(tm) == SPATIAL_LEVELS:
-        return tm[2] * tm[3]
-    return tm[-1]
 
 
 @dataclasses.dataclass
@@ -129,7 +116,18 @@ def gemm_tuning_workload(m: int, n: int, k: int, name: str = "gemm",
 
 
 class KernelTuner:
-    """LLM-guided-MCTS kernel autotuner with a persistent JSON cache."""
+    """LLM-guided-MCTS kernel autotuner with a persistent JSON cache.
+
+    ``oracle`` picks the search-time objective (``"analytical"`` default,
+    ``"measured"``/``"hybrid"`` per core/oracle.py).  ``measure=True``
+    additionally re-ranks the search's top ``rerank_top`` schedules by a
+    *real* timed kernel execution before persisting — the analytical
+    winner is a prediction; the persisted entry then carries
+    ``measured_latency_s`` plus provenance (oracle backend, interpret vs.
+    compiled, harness settings).  The deploy-time launcher
+    (``launch/tune.py``) turns measurement on by default; unit-scale
+    callers leave it off to keep CI cheap.
+    """
 
     def __init__(
         self,
@@ -138,12 +136,21 @@ class KernelTuner:
         budget: int = 64,
         cache_path: Optional[str] = DEFAULT_CACHE_PATH,
         llm: str = "gpt-4o-mini",
+        oracle: str = "analytical",
+        measure: bool = False,
+        rerank_top: int = 3,
+        measure_repeats: int = 3,
     ):
         self.platform = platform
         self.method = method
         self.budget = budget
         self.llm = llm
         self.cache_path = cache_path
+        self.oracle = oracle
+        self.measure = measure
+        self.rerank_top = rerank_top
+        self.measure_repeats = measure_repeats
+        self._measured_oracle: Optional[MeasuredOracle] = None
         self._cache: dict = {}
         if cache_path and os.path.exists(cache_path):
             with open(cache_path) as f:
@@ -164,8 +171,9 @@ class KernelTuner:
             e = self._cache[key]
             return AttentionBlocks(e["block_q"], e["block_k"])
         res = self._search(w)
-        blocks = AttentionBlocks.from_schedule(res.best_schedule)
-        self._store(key, dataclasses.asdict(blocks), res)
+        winner, measured = self._pick_winner(res)
+        blocks = AttentionBlocks.from_schedule(winner)
+        self._store(key, dataclasses.asdict(blocks), res, measured)
         return blocks
 
     def lookup_attention(
@@ -186,21 +194,75 @@ class KernelTuner:
             e = self._cache[key]
             return GemmBlocks(e["bm"], e["bn"], e["bk"])
         res = self._search(w)
-        blocks = GemmBlocks.from_schedule(res.best_schedule)
-        self._store(key, dataclasses.asdict(blocks), res)
+        winner, measured = self._pick_winner(res)
+        blocks = GemmBlocks.from_schedule(winner)
+        self._store(key, dataclasses.asdict(blocks), res, measured)
         return blocks
 
     def _search(self, w: Workload) -> SearchResult:
         return run_search(
             w, self.platform, self.method, budget=self.budget, seed=0,
-            llm=self.llm,
+            llm=self.llm, oracle=self.oracle,
         )
 
-    def _store(self, key: str, params: dict, res: SearchResult) -> None:
-        self._cache[key] = dict(
+    def _measured(self) -> MeasuredOracle:
+        if self._measured_oracle is None:
+            # hardware floors even under the interpreter: the re-rank must
+            # time the same launch configuration from_schedule persists
+            self._measured_oracle = MeasuredOracle(
+                self.platform, repeats=self.measure_repeats,
+                hardware_floors=True,
+            )
+        return self._measured_oracle
+
+    def _pick_winner(self, res: SearchResult):
+        """Re-rank the search's top schedules by real timed execution.
+
+        The analytical winner is a *prediction*; before an entry is
+        persisted for every model build to read, the top ``rerank_top``
+        candidates are lowered and wall-clock timed, and the measured
+        fastest wins.  Schedules with no measurable realization (or when
+        ``measure=False``) fall back to the analytical ranking.
+        """
+        if not self.measure:
+            return res.best_schedule, None
+        cands = list(res.top_schedules[: self.rerank_top])
+        if res.best_schedule is not None and res.best_schedule not in cands:
+            cands.insert(0, res.best_schedule)
+        mo = self._measured()
+        timed = []
+        for s in cands:
+            try:
+                timed.append((mo.measure(s), s))
+            except LoweringError:
+                continue
+        if not timed:
+            return res.best_schedule, None
+        t, winner = min(timed, key=lambda x: x[0])
+        measured = dict(
+            measured_latency_s=t,
+            provenance=dict(
+                oracle="measured",
+                interpret=mo.interpret,
+                warmup=mo.warmup,
+                repeats=mo.repeats,
+                candidates=len(timed),
+                search_oracle=res.oracle,
+                method=self.method,
+                llm=self.llm,
+            ),
+        )
+        return winner, measured
+
+    def _store(self, key: str, params: dict, res: SearchResult,
+               measured: Optional[dict] = None) -> None:
+        entry = dict(
             params, speedup=round(res.best_speedup, 3),
             samples=res.samples, method=self.method,
         )
+        if measured:
+            entry.update(measured)
+        self._cache[key] = entry
         if self.cache_path:
             os.makedirs(os.path.dirname(self.cache_path), exist_ok=True)
             with open(self.cache_path, "w") as f:

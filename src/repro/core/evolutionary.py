@@ -18,6 +18,7 @@ import random
 from typing import Optional
 
 from .cost_model import HardwareOracle
+from .lowering import LoweringError
 from .mcts import SearchCurve
 from .schedule import (
     Schedule,
@@ -95,8 +96,19 @@ class EvolutionarySearch:
         except ScheduleError:
             return None
 
-    def _evaluate(self, s: Schedule) -> float:
-        t = self.oracle.measure(s)
+    def top_schedules(self, n: int = 3) -> list[Schedule]:
+        """Best n evaluated schedules (population elites + best-so-far)."""
+        pool = {s.key(): (t, s) for t, s in self._pop}
+        pool[self.best[1].key()] = self.best
+        return [s for _, s in sorted(pool.values(), key=lambda x: x[0])[:n]]
+
+    def _evaluate(self, s: Schedule) -> Optional[float]:
+        """One sample; None when a measured backend refuses the program
+        (no realization / grid guard) — no kernel ran, nothing counted."""
+        try:
+            t = self.oracle.measure(s)
+        except LoweringError:
+            return None
         self.samples += 1
         if t < self.best[0]:
             self.best = (t, s)
@@ -106,17 +118,25 @@ class EvolutionarySearch:
     # -- main loop ---------------------------------------------------------------
     def search(self, budget_samples: int) -> SearchCurve:
         cfg = self.cfg
-        # init population
-        while len(self._pop) < cfg.population and self.samples < budget_samples:
+        # init population (guarded: a measured backend can refuse programs
+        # without consuming samples, which must not spin forever)
+        guard = 0
+        while len(self._pop) < cfg.population and self.samples < budget_samples \
+                and guard < cfg.population * 20:
+            guard += 1
             try:
                 s = random_schedule(
                     self.rng, self.s0, self.rng.randint(*cfg.init_steps)
                 )
             except ScheduleError:
                 continue
-            self._pop.append((self._evaluate(s), s))
+            t = self._evaluate(s)
+            if t is not None:
+                self._pop.append((t, s))
 
-        while self.samples < budget_samples:
+        stalled = 0
+        while self._pop and self.samples < budget_samples and stalled < 3:
+            before = self.samples
             self._pop.sort(key=lambda x: x[0])
             elites = self._pop[: cfg.elites]
             nxt = list(elites)
@@ -131,6 +151,12 @@ class EvolutionarySearch:
                     s = self._mutate(self.rng.choice(elites)[1])
                 if s is None:
                     continue
-                nxt.append((self._evaluate(s), s))
+                t = self._evaluate(s)
+                if t is not None:
+                    nxt.append((t, s))
             self._pop = nxt
+            # a generation that evaluated nothing (every candidate refused
+            # by a measured backend) cannot make progress; bail out rather
+            # than loop forever
+            stalled = stalled + 1 if self.samples == before else 0
         return SearchCurve(list(self.curve))

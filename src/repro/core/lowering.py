@@ -1,0 +1,375 @@
+"""Schedule -> executable kernel: the bridge behind the measured oracle.
+
+The paper's objective ``f`` is a *real hardware measurement* of a compiled
+program.  This module closes that loop for the repo: ``lower_schedule``
+maps a ``core.schedule.Schedule`` onto the runnable JAX/Pallas kernels in
+``repro.kernels`` and returns a ``Lowered`` artifact that can be executed,
+numerics-checked against ``kernels/ref.py``, and wall-clock timed
+(``time_lowered``).  ``core/oracle.py`` builds the ``MeasuredOracle`` on
+top of it.
+
+Mapping (extends the ``core/autotuner.py`` block extraction, which now
+imports ``_band_extent`` / ``_quantize_block`` from here):
+
+* **TileSize** — the VMEM-band tile extents (spatial levels 2..3,
+  reduction level 1) become Pallas BlockSpec block shapes, quantized to a
+  power-of-two **divisor** of the axis extent (lane/sublane ``lo`` floors
+  honored only when a legal divisor exists).
+* **ComputeLocation** (fusion depth) — an epilogue fused at any spatial
+  level selects the fused kernel variant (``swiglu_gateup``,
+  ``flash_attention``'s online softmax); a root-materialized epilogue
+  lowers to the plain kernel plus a separate jnp epilogue (extra HBM
+  round trip), or — for attention, where the materialized [h, i, j] score
+  tensor has no Pallas realization — to the ``kernels/ref.py``
+  interpreter fallback.
+* **CacheWrite** — scratch accumulation (the kernels' f32 VMEM
+  accumulator) vs. read-modify-write through the output ref in output
+  dtype (``matmul(..., cache_write=False)``).  Fused-epilogue kernels
+  keep their accumulators regardless: fusion *is* scratch accumulation.
+* **CacheRead** — an operand staged through scratch keeps the fine
+  reduction-banded BlockSpec (re-fetched per reduction step); with no
+  explicit staging the whole reduction strip is made resident at once
+  (``bk = K`` / ``block_k = S_kv``).  This realization applies in the
+  relaxed-floor (interpret / search) mode; under ``hardware_floors`` the
+  reduction block is always the banded ``from_schedule`` quantization so
+  the timed launch equals the persisted one (VMEM-safe on real TPUs).
+
+Workloads with no executable realization at all (unknown loop structure)
+raise ``LoweringError``; callers decide whether to fall back to the
+analytical oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+import time
+import zlib
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref as _ref
+from ..kernels.flash_attention import flash_attention
+from ..kernels.matmul import matmul as _pallas_matmul
+from ..kernels.matmul import swiglu_gateup as _pallas_gateup
+from .schedule import SPATIAL_LEVELS, Schedule
+from .workloads import Workload
+
+
+class LoweringError(ValueError):
+    """The schedule/workload has no executable realization."""
+
+
+# ---------------------------------------------------------------------------
+# block extraction (shared with core/autotuner.py)
+# ---------------------------------------------------------------------------
+
+def _quantize_block(x: int, extent: int, lo: int = 8, hi: int = 1024) -> int:
+    """Map a tile extent to a power-of-two DIVISOR of ``extent``.
+
+    Returns the largest power-of-two divisor of ``extent`` that is
+    <= clamp(x, lo, hi); when every such divisor is below ``lo`` (odd or
+    prime extents, tiny axes) the smallest power-of-two divisor >= ``lo``
+    is preferred if one exists within ``hi``, else the best (possibly
+    sub-``lo``) divisor is returned.  The result always divides
+    ``extent`` — the Pallas ``assert extent % block == 0`` launch
+    invariant — unlike the previous fallback which could return a bare
+    ``lo`` on extents it did not divide.
+    """
+    target = max(lo, min(hi, x))
+    best, p = 1, 1
+    while p <= min(hi, extent):
+        if extent % p == 0 and p <= target:
+            best = p
+        p *= 2
+    if best < lo:
+        p = 1
+        while p <= min(hi, extent):
+            if p >= lo and extent % p == 0:
+                return p
+            p *= 2
+    return best
+
+
+def _band_extent(s: Schedule, axis: str) -> int:
+    """Product of the VMEM-band tile levels (spatial 2..3 / reduction 1)."""
+    tm = s.tile_map[axis]
+    if len(tm) == SPATIAL_LEVELS:
+        return tm[2] * tm[3]
+    return tm[-1]
+
+
+# ---------------------------------------------------------------------------
+# lowered artifact
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Lowered:
+    """An executable realization of one schedule."""
+
+    kind: str                    # "matmul" | "swiglu" | "attention" | "ref"
+    fn: Callable                 # jitted; call as fn(*args)
+    args: tuple                  # device operands (deterministic per workload)
+    ref_fn: Callable             # jnp semantics contract (kernels/ref.py)
+    workload: str
+    fallback: bool = False       # True -> no Pallas realization, ref path
+    blocks: dict = dataclasses.field(default_factory=dict)
+    grid_steps: int = 1
+
+    @property
+    def config_key(self) -> tuple:
+        """Identity of the *compiled* kernel: distinct schedules that
+        quantize to the same launch configuration share timings."""
+        return (
+            self.workload, self.kind, self.fallback,
+            tuple(sorted(self.blocks.items())),
+        )
+
+    def run(self):
+        return self.fn(*self.args)
+
+    def verify(self, tol: Optional[float] = None) -> float:
+        """Normalized max |kernel - ref| error; raises on mismatch.
+
+        Default tolerance is dtype-aware: bf16 output-ref accumulation
+        (``cache_write=False``) rounds each partial sum to bf16, so the
+        bound scales with the number of reduction steps.
+        """
+        out = jax.block_until_ready(self.run())
+        ref = jax.block_until_ready(self.ref_fn(*self.args))
+        if tol is None:
+            tol = 5e-2 if out.dtype == jnp.bfloat16 else 1e-4
+        err = float(
+            jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
+            / (jnp.max(jnp.abs(ref.astype(jnp.float32))) + 1e-6)
+        )
+        if not math.isfinite(err) or err > tol:
+            raise LoweringError(
+                f"numerics mismatch vs kernels/ref.py on {self.workload} "
+                f"({self.kind}, blocks={self.blocks}): err={err:.2e} > {tol}"
+            )
+        return err
+
+
+# ---------------------------------------------------------------------------
+# operand synthesis
+# ---------------------------------------------------------------------------
+
+def _dtype_of(w: Workload):
+    return jnp.bfloat16 if max(o.dtype_bytes for o in w.operands) == 2 \
+        else jnp.float32
+
+
+def operand_arrays(w: Workload, seed: int = 0) -> dict:
+    """Deterministic input operands for a workload (keyed by name)."""
+    dtype = _dtype_of(w)
+    key = jax.random.PRNGKey(zlib.crc32(w.name.encode()) ^ seed)
+    out = {}
+    for o in w.operands:
+        if o.is_output:
+            continue
+        key, sub = jax.random.split(key)
+        out[o.name] = jax.random.normal(
+            sub, o.shape(w.loop_map), jnp.float32
+        ).astype(dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-family lowerings
+# ---------------------------------------------------------------------------
+
+def _epilogue_fn(kind: str) -> Callable:
+    if kind == "swiglu":
+        # The abstract program has ONE GEMM output C with an elementwise
+        # silu-gate epilogue, so both realizations compute silu(C) * C
+        # (the fused kernel is passed w_up == w_gate).
+        return lambda c: jax.nn.silu(c.astype(jnp.float32)).astype(c.dtype) * c
+    if kind == "softmax":
+        return lambda c: jax.nn.softmax(
+            c.astype(jnp.float32), axis=-1
+        ).astype(c.dtype)
+    raise LoweringError(f"unknown epilogue kind {kind!r}")
+
+
+def _lower_matmul(s: Schedule, w: Workload, ops_: dict, interpret: bool,
+                  hardware_floors: bool) -> Lowered:
+    m = w.loop_map["i"].extent
+    n = w.loop_map["j"].extent
+    k = w.loop_map["k"].extent
+    # Compiled TPU launches respect the (8, 128) sublane/lane floors; the
+    # interpreter has no layout constraints, and a uniform low floor keeps
+    # distinct small-shape schedules distinguishable by the measurement
+    # (with hardware floors, every CI-sized schedule quantizes to the same
+    # launch and the measured search cannot discriminate).
+    lo_n, lo_k = (128, 128) if hardware_floors else (8, 8)
+    bm = _quantize_block(_band_extent(s, "i"), m, lo=8, hi=512)
+    bn = _quantize_block(_band_extent(s, "j"), n, lo=lo_n, hi=1024)
+    if hardware_floors:
+        # exactly the launch GemmBlocks.from_schedule persists (the
+        # autotuner re-rank must time what it stores)
+        bk = _quantize_block(_band_extent(s, "k"), k, lo=lo_k, hi=2048)
+    elif any(name in s.cache_reads for name in ("A", "B")):
+        bk = _quantize_block(_band_extent(s, "k"), k, lo=lo_k, hi=2048)
+    else:
+        bk = k  # no explicit staging: whole reduction strip resident
+    a, b = ops_["A"], ops_["B"]
+    fused = bool(s.compute_location >= 0 and w.epilogue_kind)
+    grid_steps = (m // bm) * (n // bn) * (k // bk)
+
+    # blocks doubles as the launch-config identity for timing dedup
+    # (Lowered.config_key): only knobs the executed kernel actually
+    # consumes belong in it.
+    if not w.epilogue_kind:
+        blocks = dict(bm=bm, bn=bn, bk=bk, cache_write=s.cache_write)
+        fn = jax.jit(lambda a, b: _pallas_matmul(
+            a, b, bm=bm, bn=bn, bk=bk, cache_write=s.cache_write,
+            interpret=interpret,
+        ))
+        ref = _ref.matmul_ref
+        kind = "matmul"
+    elif fused:
+        if w.epilogue_kind == "swiglu":
+            # fusion is scratch accumulation; cache_write is moot here
+            blocks = dict(bm=bm, bn=bn, bk=bk, fused=True)
+            fn = jax.jit(lambda a, b: _pallas_gateup(
+                a, b, b, bm=bm, bn=bn, bk=bk, interpret=interpret,
+            ))
+            epi = _epilogue_fn("swiglu")
+            ref = lambda a, b: epi(_ref.matmul_ref(a, b))  # noqa: E731
+            kind = "swiglu"
+        else:
+            # fused softmax-epilogue GEMM has no Pallas kernel here: the
+            # row reduction spans the full n axis — ref interpreter path
+            # (block-independent, so no block params in the identity).
+            epi = _epilogue_fn(w.epilogue_kind)
+            fn = jax.jit(lambda a, b: epi(_ref.matmul_ref(a, b)))
+            ref = fn
+            return Lowered("ref", fn, (a, b), ref, w.name, fallback=True,
+                           blocks=dict(epilogue=w.epilogue_kind),
+                           grid_steps=1)
+    else:
+        # materialized at root: plain kernel + separate jnp epilogue pass
+        blocks = dict(bm=bm, bn=bn, bk=bk, cache_write=s.cache_write,
+                      fused=False)
+        epi = _epilogue_fn(w.epilogue_kind)
+        fn = jax.jit(lambda a, b: epi(_pallas_matmul(
+            a, b, bm=bm, bn=bn, bk=bk, cache_write=s.cache_write,
+            interpret=interpret,
+        )))
+        ref = lambda a, b: epi(_ref.matmul_ref(a, b))  # noqa: E731
+        kind = "matmul"
+    return Lowered(kind, fn, (a, b), ref, w.name, blocks=blocks,
+                   grid_steps=grid_steps)
+
+
+def _lower_attention(s: Schedule, w: Workload, ops_: dict, interpret: bool,
+                     hardware_floors: bool) -> Lowered:
+    h = w.loop_map["h"].extent
+    sq = w.loop_map["i"].extent
+    skv = w.loop_map["j"].extent
+    # operands are [h, s, d]; kernels take [B, H, S, D]
+    q = ops_["Q"][None]
+    kk = ops_["K"][None]
+    v = ops_["V"][None]
+    ref = lambda q, k, v: _ref.attention_ref(q, k, v, causal=False)  # noqa: E731
+    if s.compute_location < 0:
+        # materialized softmax: the [h, i, j] score tensor never fits the
+        # flash structure — kernels/ref.py interpreter fallback.
+        fn = jax.jit(ref)
+        return Lowered("ref", fn, (q, kk, v), ref, w.name, fallback=True,
+                       blocks=dict(materialized=True), grid_steps=1)
+    bq = _quantize_block(_band_extent(s, "i"), sq, lo=8, hi=512)
+    if hardware_floors:
+        # exactly the launch AttentionBlocks.from_schedule persists
+        bk = _quantize_block(_band_extent(s, "j"), skv, lo=128, hi=1024)
+    elif any(name in s.cache_reads for name in ("K", "V")):
+        bk = _quantize_block(_band_extent(s, "j"), skv, lo=8, hi=1024)
+    else:
+        bk = skv
+    blocks = dict(block_q=bq, block_k=bk)
+    grid_steps = h * (sq // bq) * (skv // bk)
+    fn = jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, causal=False, block_q=bq, block_k=bk, interpret=interpret,
+    ))
+    return Lowered("attention", fn, (q, kk, v), ref, w.name, blocks=blocks,
+                   grid_steps=grid_steps)
+
+
+def _lower_conv(s: Schedule, w: Workload, ops_: dict) -> Lowered:
+    # The conv IR is im2col-degenerate (X not indexed by kh/kw): the loop
+    # nest computes Y[n,oh,ow,oc] = sum_{ic,kh,kw} X[n,oh,ow,ic] W[kh,kw,ic,oc].
+    def ref(x, wgt):
+        return jnp.einsum(
+            "nhwi,io->nhwo", x.astype(jnp.float32),
+            wgt.astype(jnp.float32).sum(axis=(0, 1)),
+        ).astype(x.dtype)
+
+    fn = jax.jit(ref)
+    return Lowered("ref", fn, (ops_["X"], ops_["W"]), ref, w.name,
+                   fallback=True, blocks=dict(conv=True), grid_steps=1)
+
+
+def lower_schedule(
+    schedule: Schedule,
+    workload: Optional[Workload] = None,
+    *,
+    interpret: Optional[bool] = None,
+    hardware_floors: Optional[bool] = None,
+    seed: int = 0,
+) -> Lowered:
+    """Lower a schedule to an executable ``Lowered`` artifact.
+
+    ``interpret`` defaults to True off-TPU (the CPU-CI path: same kernel
+    bodies run by the Pallas interpreter).  ``hardware_floors`` applies
+    the compiled-TPU (8, 128) sublane/lane block floors even under the
+    interpreter (default: floors follow ``interpret``) — the autotuner's
+    measured re-rank uses this so the launch it times is the launch it
+    persists.  Raises ``LoweringError`` when the workload's loop
+    structure has no executable realization.
+    """
+    w = workload or schedule.workload
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if hardware_floors is None:
+        hardware_floors = not interpret
+    names = {l.name for l in w.loops}
+    onames = {o.name for o in w.operands}
+    if names == {"i", "j", "k"} and {"A", "B", "C"} <= onames:
+        family = _lower_matmul
+    elif names == {"h", "i", "j", "k"} and {"Q", "K", "V", "O"} <= onames:
+        family = _lower_attention
+    elif {"oh", "ow", "ic", "oc"} <= names:
+        return _lower_conv(schedule, w, operand_arrays(w, seed))
+    else:
+        raise LoweringError(
+            f"workload {w.name!r} (loops {sorted(names)}) has no lowering rule"
+        )
+    return family(schedule, w, operand_arrays(w, seed), interpret,
+                  hardware_floors)
+
+
+# ---------------------------------------------------------------------------
+# timing harness
+# ---------------------------------------------------------------------------
+
+def time_lowered(lowered: Lowered, *, warmup: int = 1,
+                 repeats: int = 3) -> float:
+    """Median wall-clock seconds over ``repeats`` runs.
+
+    Compile-once protocol: the first call (jit trace + compile) is always
+    excluded, then ``warmup`` untimed runs, then ``repeats`` timed runs
+    with ``block_until_ready`` inside the timed region.  Median-of-k
+    rather than mean: scheduler noise on shared CI hosts is one-sided.
+    """
+    jax.block_until_ready(lowered.run())  # compile
+    for _ in range(warmup):
+        jax.block_until_ready(lowered.run())
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(lowered.run())
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)

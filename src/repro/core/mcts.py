@@ -35,6 +35,7 @@ from typing import Callable, Optional, Sequence
 
 from .cost_model import HardwareOracle, SurrogateModel
 from .llm import LLMProposer, Proposal, TraceEntry
+from .lowering import LoweringError
 from .schedule import Schedule, ScheduleError, initial_schedule, random_transform
 
 
@@ -126,6 +127,12 @@ class MCTS:
         self.curve: list = []
 
     # -- public --------------------------------------------------------------
+    def top_schedules(self, n: int = 3) -> list[Schedule]:
+        """The n best evaluated schedules (by oracle latency), best first.
+        Winners the autotuner re-ranks by real measurement come from here."""
+        nodes = sorted(self._seen.values(), key=lambda nd: nd.latency_s)
+        return [nd.schedule for nd in nodes[:n]]
+
     def search(self, budget_samples: int) -> SearchCurve:
         guard = 0
         while self.samples < budget_samples and guard < budget_samples * 20:
@@ -199,7 +206,13 @@ class MCTS:
             self._backprop(twin, twin.W / max(1, twin.N))
             return None
 
-        latency = self.oracle.measure(new_sched)
+        try:
+            latency = self.oracle.measure(new_sched)
+        except LoweringError:
+            # a measured backend refused this program (no realization /
+            # grid guard): no kernel ran, so no sample is consumed and the
+            # node is never added — the search routes around it
+            return None
         self.samples += 1
         speedup = self.baseline_latency / latency
         child = Node(new_sched, node, latency, speedup)
@@ -216,13 +229,23 @@ class MCTS:
         return child
 
     def _rollout(self, node: Node) -> float:
-        """Randomized continuation scored by the surrogate (paper Fig. 2b)."""
+        """Randomized continuation scored by the surrogate (paper Fig. 2b).
+
+        A hybrid oracle (core/oracle.py) exposes ``rollout_measure``: the
+        free analytical model scores the continuation instead of the
+        learned surrogate — measured node rewards, analytical rollouts,
+        the paper's cost split."""
         s = node.schedule
         for _ in range(self.rollout_depth):
             try:
                 s = random_transform(self.rng, s).apply(s)
             except ScheduleError:
                 break
+        rollout_measure = getattr(self.oracle, "rollout_measure", None)
+        if rollout_measure is not None:
+            t = rollout_measure(s)
+            if t is not None:
+                return self._reward_from_latency(t)
         pred = self.surrogate.predict(s)
         if pred is None:
             # surrogate undertrained: fall back to the node's own measurement

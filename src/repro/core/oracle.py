@@ -1,0 +1,209 @@
+"""The oracle layer: one protocol, three backends (paper §3.2's ``f``).
+
+The search stack (``core/mcts.py``, ``core/search.py``,
+``core/autotuner.py``) treats the objective as a black box with one
+method — ``measure(schedule) -> seconds``.  This module is the seam:
+
+* ``AnalyticalOracle`` — the existing deterministic machine model
+  (``cost_model.HardwareOracle``, re-exported API-stable).  Free to
+  query, platform profiles for five CPUs + TPU-v5e.
+* ``MeasuredOracle`` — the paper's actual protocol: lower the schedule
+  to a real Pallas kernel (``core/lowering.py``), execute it, and time
+  the wall clock (compile-once, warmup, median-of-k).  Off-TPU the same
+  kernel bodies run under the Pallas interpreter, so CPU CI exercises
+  the identical lowering path; interpreter timings are dominated by
+  per-grid-step overhead and are meaningful *relatively*, not in
+  absolute microseconds (EXPERIMENTS.md §Measured).
+* ``HybridOracle`` — the paper's cost split exactly: every evaluated
+  tree node (one *sample*) gets a real measurement, while rollout
+  continuations are scored by the free analytical model
+  (``rollout_measure``), never consuming hardware time.
+
+``make_oracle`` resolves the ``oracle="analytical"|"measured"|"hybrid"``
+knob threaded through ``run_search`` / ``KernelTuner`` / ``launch.tune``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+
+from .cost_model import HardwareOracle, Platform, get_platform
+from .lowering import Lowered, LoweringError, lower_schedule, time_lowered
+from .schedule import Schedule, initial_schedule
+
+# The analytical machine model, moved behind the protocol (implementation
+# stays in cost_model.py next to its loop-nest helpers; this is the
+# canonical import site for new code).
+AnalyticalOracle = HardwareOracle
+
+
+@runtime_checkable
+class Oracle(Protocol):
+    """What the search stack requires of an objective ``f``."""
+
+    platform: Platform
+
+    def measure(self, s: Schedule) -> float:
+        """Latency of schedule ``s`` in seconds."""
+        ...
+
+    def speedup(self, s: Schedule, baseline: Optional[Schedule] = None) -> float:
+        ...
+
+
+class MeasuredOracle:
+    """Real ``f``: lower to a Pallas kernel, execute, time the wall clock.
+
+    ``measure`` is cached at two levels: per schedule key, and per
+    *lowered kernel configuration* (``dedup_configs``) — many schedules
+    quantize to the same (blocks, fusion, cache_write) launch, and the
+    hardware cannot distinguish them, so re-timing is pure waste.
+
+    ``check_numerics`` verifies each newly lowered kernel against its
+    ``kernels/ref.py`` contract before trusting its timing (a fast wrong
+    kernel must never win a search).
+
+    ``max_grid_steps`` guards against pathological interpret-mode cost
+    (each grid step is a Python-level interpreter iteration off-TPU);
+    paper-scale workloads should be measured on real hardware or via
+    proportionally shrunk tuning shapes.
+    """
+
+    def __init__(
+        self,
+        platform: str | Platform = "tpu-v5e",
+        *,
+        interpret: Optional[bool] = None,
+        hardware_floors: Optional[bool] = None,
+        warmup: int = 1,
+        repeats: int = 3,
+        check_numerics: bool = True,
+        dedup_configs: bool = True,
+        max_grid_steps: int = 8192,
+        seed: int = 0,
+    ):
+        self.platform = platform if isinstance(platform, Platform) \
+            else get_platform(platform)
+        self.interpret = (jax.default_backend() != "tpu") \
+            if interpret is None else interpret
+        self.hardware_floors = hardware_floors
+        self.warmup = warmup
+        self.repeats = repeats
+        self.check_numerics = check_numerics
+        self.dedup_configs = dedup_configs
+        self.max_grid_steps = max_grid_steps
+        self.seed = seed
+        self._cache: dict[tuple, float] = {}
+        self._config_cache: dict[tuple, float] = {}
+        self.measurements = 0     # measure() resolutions (incl. config hits)
+        self.timed_kernels = 0    # actual compile+time executions
+        self.fallbacks = 0        # schedules with no Pallas realization
+
+    # -- public API ---------------------------------------------------------
+    def lower(self, s: Schedule) -> Lowered:
+        return lower_schedule(
+            s, interpret=self.interpret,
+            hardware_floors=self.hardware_floors, seed=self.seed,
+        )
+
+    def measure(self, s: Schedule) -> float:
+        key = s.key()
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        low = self.lower(s)
+        if self.interpret and low.grid_steps > self.max_grid_steps:
+            # interpreter cost is ~linear in grid steps (Python-level per
+            # step); compiled hardware launches have no such pathology
+            raise LoweringError(
+                f"{s.workload.name}: lowered grid has {low.grid_steps} steps "
+                f"(> max_grid_steps={self.max_grid_steps}) in interpret "
+                f"mode; measure on real hardware or search a smaller "
+                f"tuning shape"
+            )
+        self.measurements += 1
+        if low.fallback:
+            self.fallbacks += 1
+        ckey = low.config_key
+        t = self._config_cache.get(ckey) if self.dedup_configs else None
+        if t is None:
+            if self.check_numerics:
+                low.verify()
+            t = time_lowered(low, warmup=self.warmup, repeats=self.repeats)
+            self.timed_kernels += 1
+            self._config_cache[ckey] = t
+        self._cache[key] = t
+        return t
+
+    def speedup(self, s: Schedule, baseline: Optional[Schedule] = None) -> float:
+        base = baseline or initial_schedule(s.workload)
+        return self.measure(base) / self.measure(s)
+
+
+class HybridOracle:
+    """Measured node rewards + analytical rollout scoring (the paper's
+    split: hardware time only per evaluated sample, free feedback inside
+    rollouts)."""
+
+    def __init__(self, analytical: HardwareOracle, measured: MeasuredOracle):
+        self.analytical = analytical
+        self.measured = measured
+        # measured/analytical baseline ratio per workload: rollout scores
+        # must live on the MEASURED latency scale or the MCTS reward
+        # normalization (su vs best-so-far speedup) mixes units and
+        # saturates — analytical model-seconds and wall-clock seconds can
+        # differ by orders of magnitude (interpret mode especially).
+        self._scales: dict[str, float] = {}
+
+    @property
+    def platform(self) -> Platform:
+        return self.measured.platform
+
+    def measure(self, s: Schedule) -> float:
+        return self.measured.measure(s)
+
+    def rollout_measure(self, s: Schedule) -> Optional[float]:
+        """Free (analytical) latency for rollout continuations, calibrated
+        onto the measured scale via the baseline ratio; the MCTS rollout
+        phase prefers this over the learned surrogate when the oracle
+        provides it."""
+        name = s.workload.name
+        scale = self._scales.get(name)
+        if scale is None:
+            s0 = initial_schedule(s.workload)
+            scale = self.measured.measure(s0) \
+                / max(self.analytical.measure(s0), 1e-30)
+            self._scales[name] = scale
+        return self.analytical.measure(s) * scale
+
+    def speedup(self, s: Schedule, baseline: Optional[Schedule] = None) -> float:
+        return self.measured.speedup(s, baseline)
+
+
+ORACLES = ("analytical", "measured", "hybrid")
+
+
+def make_oracle(
+    spec,
+    platform: str | Platform = "tpu-v5e",
+    **measured_kwargs,
+):
+    """Resolve an oracle knob: an Oracle instance passes through; a name
+    from ``ORACLES`` (or None -> analytical) builds the backend on
+    ``platform``."""
+    if spec is None or spec == "analytical":
+        plat = platform if isinstance(platform, Platform) \
+            else get_platform(platform)
+        return HardwareOracle(plat)
+    if spec == "measured":
+        return MeasuredOracle(platform, **measured_kwargs)
+    if spec == "hybrid":
+        plat = platform if isinstance(platform, Platform) \
+            else get_platform(platform)
+        return HybridOracle(
+            HardwareOracle(plat), MeasuredOracle(plat, **measured_kwargs)
+        )
+    if hasattr(spec, "measure"):
+        return spec
+    raise ValueError(f"unknown oracle {spec!r}; known: {ORACLES}")

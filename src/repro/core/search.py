@@ -19,6 +19,7 @@ from .cost_model import HardwareOracle, Platform, get_platform
 from .evolutionary import EvolutionaryConfig, EvolutionarySearch
 from .llm import FallbackStats, LLMProposer, make_llm
 from .mcts import MCTS, SearchCurve
+from .oracle import HybridOracle, MeasuredOracle, make_oracle
 from .schedule import Schedule
 from .workloads import Workload, get_workload
 
@@ -38,6 +39,20 @@ class SearchResult:
     samples: int
     fallback: Optional[FallbackStats] = None
     llm: Optional[str] = None
+    # which oracle backend produced the rewards + runner-up schedules for
+    # measured re-ranking (core/autotuner.py)
+    oracle: str = "analytical"
+    top_schedules: tuple = ()
+
+
+def _oracle_name(oracle) -> str:
+    if isinstance(oracle, HybridOracle):
+        return "hybrid"
+    if isinstance(oracle, MeasuredOracle):
+        return "measured"
+    if isinstance(oracle, HardwareOracle):
+        return "analytical"
+    return type(oracle).__name__
 
 
 def run_search(
@@ -49,14 +64,22 @@ def run_search(
     llm: str = "gpt-4o-mini",
     trace_depth: int = 2,
     branching: int = 2,
-    oracle: Optional[HardwareOracle] = None,
+    oracle=None,
     **mcts_kwargs,
 ) -> SearchResult:
-    """Run one optimization strategy on one workload for `budget` samples."""
+    """Run one optimization strategy on one workload for `budget` samples.
+
+    ``oracle`` selects the objective backend: ``"analytical"`` (default,
+    the machine model), ``"measured"`` (every node reward is a timed
+    kernel execution via core/lowering.py), ``"hybrid"`` (measured node
+    rewards, analytical rollouts — the paper's cost split), or any
+    ``core.oracle.Oracle`` instance.
+    """
     if isinstance(workload, str):
         workload = get_workload(workload)
     plat = platform if isinstance(platform, Platform) else get_platform(platform)
-    oracle = oracle or HardwareOracle(plat)
+    oracle = make_oracle(oracle, plat)
+    oracle_name = _oracle_name(oracle)
 
     if method == "evolutionary":
         es = EvolutionarySearch(workload, oracle, seed=seed)
@@ -66,6 +89,7 @@ def run_search(
             workload.name, plat.name, method, curve,
             es.baseline_latency / best_t, best_s, es.baseline_latency,
             best_t, es.samples,
+            oracle=oracle_name, top_schedules=tuple(es.top_schedules()),
         )
 
     proposer = None
@@ -86,6 +110,7 @@ def run_search(
         searcher.best.speedup, searcher.best.schedule,
         searcher.baseline_latency, searcher.best.latency_s, searcher.samples,
         fallback=proposer.stats if proposer else None, llm=llm_name,
+        oracle=oracle_name, top_schedules=tuple(searcher.top_schedules()),
     )
 
 

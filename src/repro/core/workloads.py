@@ -62,6 +62,10 @@ class Workload:
     # indexed by the spatial iteration space.
     epilogue_tensor_axes: tuple[str, ...] = ()
     description: str = ""
+    # What the epilogue computes ("softmax" | "swiglu" | ""); the lowering
+    # bridge (core/lowering.py) needs the semantics, not just the flop count,
+    # to build an executable realization of a fusion decision.
+    epilogue_kind: str = ""
 
     @property
     def loop_map(self) -> dict[str, Loop]:
@@ -128,6 +132,7 @@ def matmul_workload(
         epilogue_flops=epi_flops,
         epilogue_tensor_axes=epi_axes,
         description=description,
+        epilogue_kind=epilogue if epi_axes else "",
     )
 
 
@@ -167,6 +172,7 @@ def attention_workload(
         epilogue_flops=5 * heads * seq_q * seq_kv,
         epilogue_tensor_axes=("h", "i", "j"),
         description=description,
+        epilogue_kind="softmax",
     )
 
 

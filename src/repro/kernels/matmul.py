@@ -47,12 +47,33 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_scr):
         o_ref[...] = acc_scr[...].astype(o_ref.dtype)
 
 
+def _matmul_kernel_no_cache_write(a_ref, b_ref, o_ref):
+    """CacheWrite=False realization: the output block is the accumulator.
+
+    The partial sum round-trips through the output ref in the OUTPUT dtype
+    each reduction step — exactly the re-read/rewrite-per-reduction-visit
+    traffic the analytical oracle charges schedules without CacheWrite
+    (cost_model.breakdown), and a real numerics difference in bf16.
+    """
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"),
+    jax.jit, static_argnames=("bm", "bn", "bk", "cache_write", "interpret"),
 )
 def matmul(
     a: jax.Array, b: jax.Array, *,
     bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+    cache_write: bool = True,
     interpret: bool = False,
 ) -> jax.Array:
     m, k = a.shape
@@ -62,7 +83,7 @@ def matmul(
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
-        _matmul_kernel,
+        _matmul_kernel if cache_write else _matmul_kernel_no_cache_write,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
@@ -70,7 +91,9 @@ def matmul(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=(
+            [pltpu.VMEM((bm, bn), jnp.float32)] if cache_write else []
+        ),
         interpret=interpret,
     )(a, b)
 

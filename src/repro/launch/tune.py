@@ -24,10 +24,21 @@ def main():
     ap.add_argument("--method", default="llm-mcts",
                     choices=["llm-mcts", "mcts", "evolutionary"])
     ap.add_argument("--llm", default="gpt-4o-mini")
+    ap.add_argument("--oracle", default="analytical",
+                    choices=["analytical", "measured", "hybrid"],
+                    help="search-time objective backend (core/oracle.py); "
+                         "measured/hybrid time real kernel executions per "
+                         "sample (interpret mode off-TPU)")
+    ap.add_argument("--measure", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="re-rank the search winners by real timed kernel "
+                         "execution before persisting (--no-measure for the "
+                         "pure-analytical legacy behavior)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    tuner = KernelTuner(method=args.method, budget=args.budget, llm=args.llm)
+    tuner = KernelTuner(method=args.method, budget=args.budget, llm=args.llm,
+                        oracle=args.oracle, measure=args.measure)
     if cfg.block not in ("xlstm",):
         hq, hkv = local_attention_dims(cfg, args.tp)
         blocks = tuner.tune_attention(

@@ -141,6 +141,7 @@ def hybrid_block_seq(
     ssm_state: Optional[dict] = None,
     kv_override: Optional[tuple] = None,
     backend: Optional[str] = None,
+    cfg=None,
 ):
     """Parallel attn + SSM; `is_global` (traced per-layer scalar) disables
     the window.  Returns (y, (k, v), new_ssm_state)."""
@@ -152,7 +153,7 @@ def hybrid_block_seq(
         )
     attn_out, kv = attention_block(
         x, p["attn"], dims, positions, causal=True, rope_theta=rope_theta,
-        window=eff_window, kv_override=kv_override, backend=backend,
+        window=eff_window, kv_override=kv_override, backend=backend, cfg=cfg,
     )
     ssm_out, new_state = ssm_path_seq(x, p["ssm"], ssm_state)
     return 0.5 * (attn_out + ssm_out), kv, new_state

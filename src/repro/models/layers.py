@@ -19,6 +19,31 @@ import jax.numpy as jnp
 from ..kernels import ops
 
 # ---------------------------------------------------------------------------
+# active tensor-parallel degree (for tuned-block lookups)
+# ---------------------------------------------------------------------------
+
+# The tuning cache keys attention entries by the POST-SPMD per-device head
+# counts (autotuner.local_attention_dims), so kernel call sites need the
+# active mesh's tp degree at trace time.  Models deliberately hold no mesh;
+# the launcher that owns one (serve engines, launch/train) registers its tp
+# degree here and every traced attention_block picks tp-local tuned blocks
+# automatically (ROADMAP "sharding awareness, step 2").
+_ACTIVE_TP = [1]
+
+
+def set_active_tp(tp: int) -> None:
+    """Register the tp degree of the mesh the next traces will run under
+    (pass ``dist.sharding.tp_degree(mesh)``).  Module-global: launchers
+    driving differently-sharded models concurrently must set it around
+    each trace."""
+    _ACTIVE_TP[0] = max(1, int(tp))
+
+
+def active_tp() -> int:
+    return _ACTIVE_TP[0]
+
+
+# ---------------------------------------------------------------------------
 # norms
 # ---------------------------------------------------------------------------
 
@@ -146,10 +171,15 @@ def attention_block(
     window: Optional[int] = None,
     kv_override: Optional[tuple] = None,
     backend: Optional[str] = None,
+    cfg=None,
 ) -> tuple[jax.Array, tuple]:
     """Full attention sub-layer; returns (output, (k, v)) for cache capture.
 
     ``kv_override`` lets decode substitute the (cache-extended) K/V.
+    ``cfg`` (an ``ArchConfig``, optional) enables the tuned-block lookup:
+    the Pallas launch gets (block_q, block_k) from the Reasoning
+    Compiler's tuning cache under the ``active_tp()``-local head counts
+    instead of the kernel defaults.
     """
     b, s, _ = x.shape
     q, k, v = attention_qkv(x, p, dims, positions, rope_theta)
@@ -157,8 +187,15 @@ def attention_block(
         k_all, v_all = kv_override
     else:
         k_all, v_all = k, v
+    blocks = {}
+    if cfg is not None:
+        bq, bk = ops.tuned_attention_blocks(
+            cfg, q.shape[2], k_all.shape[2], tp=active_tp()
+        )
+        blocks = dict(block_q=bq, block_k=bk)
     o = ops.attention(
-        q, k_all, v_all, causal=causal, window=window, backend=backend
+        q, k_all, v_all, causal=causal, window=window, backend=backend,
+        **blocks,
     )
     o = o.transpose(0, 2, 1, 3).reshape(b, s, dims.heads * dims.hd)
     return o @ p["wo"], (k, v)

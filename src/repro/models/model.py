@@ -203,7 +203,7 @@ def forward(
         h = apply_norm(x, lp["norm1"], cfg.norm)
         a, _ = attention_block(
             h, lp["attn"], dims, positions, causal=cfg.causal,
-            rope_theta=cfg.rope_theta, backend=backend,
+            rope_theta=cfg.rope_theta, backend=backend, cfg=cfg,
         )
         x = x + a
         h = apply_norm(x, lp["norm2"], cfg.norm)
@@ -234,7 +234,7 @@ def forward(
         h = apply_norm(x, lp["norm1"], cfg.norm)
         y, _, _ = hy.hybrid_block_seq(
             h, lp["mix"], dims, positions, rope_theta=cfg.rope_theta,
-            window=cfg.window, is_global=flag, backend=backend,
+            window=cfg.window, is_global=flag, backend=backend, cfg=cfg,
         )
         x = x + y
         h = apply_norm(x, lp["norm2"], cfg.norm)
@@ -450,7 +450,7 @@ def prefill(
             h = apply_norm(carry, lp["norm1"], cfg.norm)
             y, (k, v), sst = hy.hybrid_block_seq(
                 h, lp["mix"], dims, positions, rope_theta=cfg.rope_theta,
-                window=cfg.window, is_global=flag, backend=backend,
+                window=cfg.window, is_global=flag, backend=backend, cfg=cfg,
             )
             x2 = carry + y
             h2 = apply_norm(x2, lp["norm2"], cfg.norm)
@@ -470,7 +470,7 @@ def prefill(
             h = apply_norm(carry, lp["norm1"], cfg.norm)
             a, (k, v) = attention_block(
                 h, lp["attn"], dims, positions, causal=cfg.causal,
-                rope_theta=cfg.rope_theta, backend=backend,
+                rope_theta=cfg.rope_theta, backend=backend, cfg=cfg,
             )
             x2 = carry + a
             h2 = apply_norm(x2, lp["norm2"], cfg.norm)

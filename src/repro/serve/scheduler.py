@@ -95,6 +95,16 @@ class PagedServeEngine:
         # engages on dense blocks
         self.prefill_chunk = prefill_chunk if cfg.block == "dense" else 0
 
+        # tp-local tuned-block lookups at trace time (models/layers.py);
+        # re-registered on every run/step entry because traces are lazy
+        # and other engines may have overwritten the degree since
+        if mesh is not None:
+            from ..dist import sharding as shd
+            self._block_tp = shd.tp_degree(mesh)
+        else:
+            self._block_tp = tp
+        self._set_active_tp()
+
         self.kv = KV.PagedKVCache(
             cfg, slots, max_len, page_size=page_size, capacity=capacity,
             mesh=mesh, tp=tp,
@@ -124,6 +134,10 @@ class PagedServeEngine:
         )
         self._decode_j = self._build_decode()
 
+    def _set_active_tp(self) -> None:
+        from ..models.layers import set_active_tp
+        set_active_tp(self._block_tp)
+
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         assert len(req.prompt) < self.max_len, (
@@ -152,6 +166,7 @@ class PagedServeEngine:
 
     def step(self) -> list[Request]:
         """One engine iteration: admit, advance chunked prefills, decode."""
+        self._set_active_tp()
         self._admit()
         self._advance_prefill()
         return self._decode_iteration()

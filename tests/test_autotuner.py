@@ -21,6 +21,24 @@ def test_quantize_block():
     assert 4096 % _quantize_block(100, 4096) == 0
 
 
+def test_quantize_block_always_divides():
+    """Regression: the old fallback returned a bare ``lo`` on extents with
+    no power-of-two divisor >= lo (prime/odd extents), which failed the
+    Pallas ``extent % block == 0`` launch assert."""
+    for extent in (7, 11, 12, 24, 48, 96, 100, 384, 1000, 4097):
+        for x in (1, 3, 8, 100, 5000):
+            for lo in (8, 128):
+                b = _quantize_block(x, extent, lo=lo)
+                assert extent % b == 0, (x, extent, lo, b)
+                assert b >= 1
+    # divisors >= lo are preferred when they exist...
+    assert _quantize_block(3, 48, lo=8) == 8
+    assert _quantize_block(2, 384, lo=128) == 128
+    # ...else the largest legal power-of-two divisor wins
+    assert _quantize_block(100, 12, lo=8) == 4
+    assert _quantize_block(8, 7, lo=8) == 1
+
+
 def test_blocks_from_schedule():
     w = attention_tuning_workload(8, 1024, 1024, 128)
     s = S.initial_schedule(w)
@@ -65,6 +83,71 @@ def test_kv_heads_in_cache_key(tmp_path):
     # read-only probe hits without searching; a miss returns None
     assert t.lookup_attention(8, 256, 256, 64, kv_heads=2) is not None
     assert t.lookup_attention(8, 999, 999, 64) is None
+
+
+def test_tuner_measured_rerank_provenance(tmp_path):
+    """measure=True re-ranks winners by real timed execution and persists
+    measured_latency_s + provenance alongside the block params."""
+    t = KernelTuner(budget=8, measure=True, rerank_top=2,
+                    cache_path=os.path.join(tmp_path, "c.json"))
+    b = t.tune_gemm(64, 128, 128)
+    assert 64 % b.bm == 0 and 128 % b.bn == 0 and 128 % b.bk == 0
+    (entry,) = t._cache.values()
+    assert entry["measured_latency_s"] > 0
+    prov = entry["provenance"]
+    assert prov["oracle"] == "measured"
+    assert prov["interpret"] is True          # CPU CI path
+    assert prov["repeats"] >= 1 and prov["candidates"] >= 1
+    assert prov["search_oracle"] == "analytical"
+
+
+def test_tuner_measured_search_oracle(tmp_path):
+    """oracle="measured" makes every search sample a timed execution."""
+    t = KernelTuner(budget=6, oracle="measured", method="mcts",
+                    cache_path=os.path.join(tmp_path, "c.json"))
+    t.tune_gemm(32, 64, 64)
+    (entry,) = t._cache.values()
+    assert entry["samples"] >= 1
+
+
+def test_attention_block_uses_tp_local_tuned_blocks(tmp_path, monkeypatch):
+    """models/layers.attention_block must launch with the blocks tuned for
+    the ACTIVE tp degree's local head counts (ROADMAP step 2)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.autotuner import local_attention_dims
+    from repro.kernels import ops
+    from repro.models import layers as L
+
+    cfg = get_config("tinyllama-1.1b")          # 32q / 4kv
+    tp = 4
+    hq, hkv = local_attention_dims(cfg, tp)     # (8, 1)
+    cache = os.path.join(tmp_path, "tc.json")
+    tuner = KernelTuner(budget=12, cache_path=cache)
+    tuned = tuner.tune_attention(hq, 128, 128, cfg.hd, kv_heads=hkv)
+    monkeypatch.setattr(ops, "_TUNER", KernelTuner(cache_path=cache))
+
+    seen = {}
+    real_attention = ops.attention
+
+    def spy(q, k, v, **kw):
+        seen.update(kw)
+        return real_attention(q, k, v, **kw)
+
+    monkeypatch.setattr(ops, "attention", spy)
+    dims = L.AttnDims(heads=hq, kv_heads=hkv, hd=cfg.hd, d_model=128)
+    p = L.init_attention(jax.random.PRNGKey(0), dims, jnp.float32)
+    x = jnp.zeros((1, 128, 128), jnp.float32)
+    pos = jnp.arange(128)[None]
+    L.set_active_tp(tp)
+    try:
+        L.attention_block(x, p, dims, pos, cfg=cfg, backend="jax")
+    finally:
+        L.set_active_tp(1)
+    assert (seen["block_q"], seen["block_k"]) == \
+        (tuned.block_q, tuned.block_k)
 
 
 def test_local_attention_dims_match_sharding_rules():

@@ -1,0 +1,234 @@
+"""Lowering bridge + measured oracle: every lowerable schedule variant must
+match kernels/ref.py (interpret mode, CPU CI), and the oracle backends must
+honor the protocol the search stack assumes."""
+import itertools
+import random
+
+import pytest
+
+from repro.core import schedule as S
+from repro.core.lowering import (
+    LoweringError,
+    _quantize_block,
+    lower_schedule,
+    time_lowered,
+)
+from repro.core.oracle import (
+    AnalyticalOracle,
+    HybridOracle,
+    MeasuredOracle,
+    make_oracle,
+)
+from repro.core.cost_model import HardwareOracle, get_platform
+from repro.core.schedule import initial_schedule, random_schedule
+from repro.core.search import run_search
+from repro.core.workloads import (
+    attention_workload,
+    conv2d_workload,
+    matmul_workload,
+)
+
+
+def _gemm(epilogue="none"):
+    return matmul_workload("t_gemm" + epilogue, m=32, n=128, k=64,
+                           dtype_bytes=4, epilogue=epilogue)
+
+
+def _attn():
+    return attention_workload("t_attn", heads=2, seq_q=64, seq_kv=64,
+                              head_dim=32, dtype_bytes=4)
+
+
+# ---------------------------------------------------------------------------
+# correctness sweep: tiles x fusion x cache_write vs kernels/ref.py
+# ---------------------------------------------------------------------------
+
+def test_matmul_variants_match_ref():
+    w = _gemm()
+    s0 = initial_schedule(w)
+    tilings = [
+        None,                                   # trivial tiles
+        {"i": (2, 1, 2, 8), "j": (1, 1, 1, 128), "k": (2, 32)},
+        {"i": (1, 1, 32, 1), "j": (2, 1, 2, 32), "k": (4, 16)},
+    ]
+    for tiles, cw, staged in itertools.product(
+        tilings, (False, True), ((), ("A",), ("A", "B"))
+    ):
+        s = s0
+        if tiles:
+            for axis, dec in tiles.items():
+                s = S.TileSize(axis, dec).apply(s)
+        s = S.CacheWrite(cw).apply(s)
+        for op in staged:
+            s = S.CacheRead(op).apply(s)
+        low = lower_schedule(s, interpret=True)
+        assert not low.fallback, (tiles, cw, staged)
+        assert low.kind == "matmul"
+        assert low.blocks["cache_write"] == cw
+        # unstaged operands keep the whole reduction strip resident
+        assert (low.blocks["bk"] == 64) == (not staged)
+        low.verify()  # raises on mismatch
+
+
+def test_swiglu_fusion_depths_match_ref():
+    w = _gemm("swiglu")
+    s0 = initial_schedule(w)
+    kinds = set()
+    for loc in (-1, 0, 2):
+        s = S.ComputeLocation(loc).apply(s0) if loc >= 0 else s0
+        low = lower_schedule(s, interpret=True)
+        low.verify()
+        kinds.add(low.kind)
+        assert not low.fallback
+    # fused (ComputeLocation >= 0) selects the gate-up kernel; materialized
+    # lowers to plain matmul + jnp epilogue
+    assert kinds == {"matmul", "swiglu"}
+
+
+def test_attention_fused_vs_materialized():
+    w = _attn()
+    s0 = initial_schedule(w)
+    mat = lower_schedule(s0, interpret=True)           # softmax at root
+    assert mat.fallback and mat.kind == "ref"
+    mat.verify()
+    fused = lower_schedule(S.ComputeLocation(1).apply(s0), interpret=True)
+    assert not fused.fallback and fused.kind == "attention"
+    fused.verify()
+    assert w.loop_map["i"].extent % fused.blocks["block_q"] == 0
+    assert w.loop_map["j"].extent % fused.blocks["block_k"] == 0
+
+
+def test_attention_cache_read_staging():
+    w = _attn()
+    s = S.ComputeLocation(1).apply(initial_schedule(w))
+    s = S.TileSize("j", (4, 1, 1, 16)).apply(s)
+    unstaged = lower_schedule(s, interpret=True)
+    assert unstaged.blocks["block_k"] == 64      # whole KV strip resident
+    staged = lower_schedule(S.CacheRead("K").apply(s), interpret=True)
+    assert staged.blocks["block_k"] == 16        # banded re-fetch per step
+    staged.verify()
+
+
+def test_random_schedules_all_verify():
+    rng = random.Random(7)
+    for w in (_gemm(), _gemm("swiglu"), _attn()):
+        s0 = initial_schedule(w)
+        for _ in range(8):
+            s = random_schedule(rng, s0, rng.randint(1, 5))
+            lower_schedule(s, interpret=True).verify()
+
+
+def test_conv_falls_back_to_ref():
+    w = conv2d_workload("t_conv", n=1, h=8, w=8, c_in=16, c_out=16,
+                        kh=3, kw=3)
+    low = lower_schedule(initial_schedule(w), interpret=True)
+    assert low.fallback and low.kind == "ref"
+    low.verify()
+
+
+def test_unknown_workload_raises():
+    import dataclasses
+
+    w = _gemm()
+    bad = dataclasses.replace(
+        w, loops=tuple(dataclasses.replace(l, name="z" + l.name)
+                       for l in w.loops),
+    )
+    with pytest.raises(LoweringError):
+        lower_schedule(initial_schedule(bad), interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# the timing harness + oracle backends
+# ---------------------------------------------------------------------------
+
+def test_time_lowered_positive_and_finite():
+    low = lower_schedule(initial_schedule(_gemm()), interpret=True)
+    t = time_lowered(low, warmup=1, repeats=3)
+    assert 0 < t < 60
+
+
+def test_measured_oracle_caches_and_dedups():
+    w = _gemm()
+    mo = MeasuredOracle("tpu-v5e", repeats=2)
+    s0 = initial_schedule(w)
+    t1 = mo.measure(s0)
+    assert mo.measurements == 1 and mo.timed_kernels == 1
+    assert mo.measure(s0) == t1                     # schedule-key cache
+    assert mo.measurements == 1
+    # a different schedule quantizing to the same launch reuses the timing
+    s2 = S.Parallel(2).apply(s0)
+    assert mo.measure(s2) == t1
+    assert mo.measurements == 2 and mo.timed_kernels == 1
+    assert mo.speedup(s0) == pytest.approx(1.0)
+
+
+def test_measured_oracle_grid_guard():
+    big = matmul_workload("t_big", m=4096, n=4096, k=4096, dtype_bytes=4)
+    s = initial_schedule(big)
+    s = S.TileSize("i", (512, 1, 1, 8)).apply(s)
+    s = S.CacheRead("A").apply(s)
+    s = S.TileSize("k", (32, 128)).apply(s)
+    mo = MeasuredOracle("tpu-v5e", max_grid_steps=64)
+    with pytest.raises(LoweringError):
+        mo.measure(s)
+
+
+def test_hybrid_oracle_split():
+    plat = get_platform("tpu-v5e")
+    hy = HybridOracle(HardwareOracle(plat, noise=False),
+                      MeasuredOracle(plat, repeats=2))
+    w = _gemm()
+    s0 = initial_schedule(w)
+    assert hy.measure(s0) == hy.measured.measure(s0)
+    # rollout scores are analytical but CALIBRATED onto the measured
+    # latency scale (baseline ratio), so MCTS reward normalization does
+    # not mix units: at the baseline the two backends agree exactly
+    assert hy.rollout_measure(s0) == pytest.approx(hy.measure(s0))
+    s1 = S.TileSize("i", (4, 1, 1, 8)).apply(s0)
+    ratio = hy.rollout_measure(s1) / hy.rollout_measure(s0)
+    assert ratio == pytest.approx(
+        hy.analytical.measure(s1) / hy.analytical.measure(s0)
+    )
+    assert hy.platform.name == "tpu-v5e"
+
+
+def test_make_oracle_specs():
+    assert isinstance(make_oracle(None, "core-i9"), AnalyticalOracle)
+    assert isinstance(make_oracle("analytical", "core-i9"), HardwareOracle)
+    assert isinstance(make_oracle("measured"), MeasuredOracle)
+    assert isinstance(make_oracle("hybrid"), HybridOracle)
+    mo = MeasuredOracle()
+    assert make_oracle(mo) is mo
+    with pytest.raises(ValueError):
+        make_oracle("quantum")
+
+
+# ---------------------------------------------------------------------------
+# measured search end-to-end (the acceptance run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_measured_llm_mcts_20_samples():
+    """>= 20-sample llm-mcts on a matmul workload, interpret mode, every
+    node reward from an actually-timed kernel execution."""
+    w = matmul_workload("t_measured_search", m=64, n=128, k=128,
+                        dtype_bytes=4)
+    mo = MeasuredOracle("tpu-v5e", repeats=2)
+    r = run_search(w, "tpu-v5e", "llm-mcts", budget=20, seed=0, oracle=mo)
+    assert r.samples >= 20
+    assert r.oracle == "measured"
+    # every sample (tree node) + the baseline resolved through the oracle,
+    # each backed by a timed execution of its lowered kernel config
+    assert mo.measurements >= r.samples + 1
+    assert mo.timed_kernels >= 1
+    assert all(t > 0 for t in mo._config_cache.values())
+    assert r.best_speedup > 0
+
+
+def test_run_search_accepts_oracle_strings():
+    w = matmul_workload("t_oracle_knob", m=32, n=128, k=64, dtype_bytes=4)
+    for spec in ("analytical", "measured", "hybrid"):
+        r = run_search(w, "tpu-v5e", "mcts", budget=4, seed=0, oracle=spec)
+        assert r.samples >= 4 and r.oracle == spec
+        assert len(r.top_schedules) >= 1
