@@ -12,15 +12,20 @@ A numerics mismatch is a hard failure — a fast wrong kernel must never
 enter a rank comparison.  Shapes are CI-sized; ``REPRO_BENCH_LOWERING_N``
 scales the schedule pool (>= 16 by default, the EXPERIMENTS.md §Measured
 protocol floor).
+
+Runs through the session API: one ``CompilerSession`` owns the measured
+oracle (and its schedule/launch-config caches) for the whole pool, so the
+timed-kernel count reported at the end reflects the dedup a deployment
+would see.
 """
 from __future__ import annotations
 
 import os
 import random
 
+from repro.compiler import CompilerSession
 from repro.core.cost_model import HardwareOracle, get_platform
 from repro.core.lowering import LoweringError
-from repro.core.oracle import MeasuredOracle
 from repro.core.schedule import ScheduleError, initial_schedule, random_schedule
 from repro.core.workloads import attention_workload, matmul_workload
 
@@ -72,7 +77,9 @@ def spearman(xs, ys) -> float:
 def run(n_schedules: int = None) -> dict:
     n = n_schedules or int(os.environ.get("REPRO_BENCH_LOWERING_N", "16"))
     analytical = HardwareOracle(get_platform(PLATFORM), noise=False)
-    measured = MeasuredOracle(PLATFORM, repeats=3)
+    session = CompilerSession(target=PLATFORM, oracle="measured",
+                              method="mcts", shared_context=False)
+    measured = session.oracle
     out: dict = {}
     for w in _workloads():
         rng = random.Random(0)

@@ -1,0 +1,82 @@
+"""Session-API smoke: the compiler front door, end to end, CI-sized.
+
+Compiles two sibling attention shapes for a real arch through one
+``CompilerSession`` with shared context on the deterministic heuristic
+LLM, then asserts the deploy-side contract:
+
+* >= 1 record persisted in the JSONL store (with schema + provenance),
+* the sibling search was seeded from the donor's winning trace,
+* an ``ArtifactSet`` (what engines bind onto ``cfg``) resolves the SAME
+  attention blocks the record persisted — i.e. tune-time keys and
+  deploy-time keys agree by construction.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from repro.compiler import (
+    ArtifactSet,
+    BudgetPolicy,
+    CompilerSession,
+    TuningRecords,
+    attention_task,
+    local_attention_dims,
+)
+from repro.configs import get_config
+
+from .common import emit
+
+ARCH = os.environ.get("REPRO_SESSION_ARCH", "tinyllama-1.1b")
+BUDGET = int(os.environ.get("REPRO_SESSION_BUDGET", "12"))
+TP = int(os.environ.get("REPRO_SESSION_TP", "1"))
+
+
+def run() -> dict:
+    cfg = get_config(ARCH)
+    hq, hkv = local_attention_dims(cfg, TP)
+    tasks = [
+        attention_task(hq, 256, 256, cfg.hd, kv_heads=hkv, priority=10,
+                       label=f"{cfg.name} seq=256"),
+        attention_task(hq, 128, 128, cfg.hd, kv_heads=hkv,
+                       label=f"{cfg.name} seq=128"),
+    ]
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "records.jsonl")
+        session = CompilerSession(
+            target="tpu-v5e", oracle="analytical", proposer="gpt-4o-mini",
+            budget_policy=BudgetPolicy(per_task=BUDGET),
+            records=path, shared_context=True,
+        )
+        arts = session.compile(tasks)
+
+        store = TuningRecords(path)  # fresh load: what another process sees
+        assert len(store) >= 1, "no records persisted"
+        for art in arts:
+            rec = store.get(art.record.key)
+            assert rec is not None, f"record missing for {art.record.key}"
+            assert rec.schema >= 1 and rec.provenance, "provenance missing"
+        sib = arts[1].record
+        assert sib.provenance.get("seeded_from"), \
+            "sibling search was not seeded from the donor trace"
+
+        # deploy-side resolution: the ArtifactSet an engine binds onto cfg
+        # must return exactly the blocks the records persisted
+        artset = ArtifactSet(store, tp=TP)
+        for art, seq in zip(arts, (256, 128)):
+            bq, bk = artset.attention_blocks(cfg, seq, seq)
+            assert (bq, bk) == (art.blocks.block_q, art.blocks.block_k), \
+                f"artifact-resolved blocks {(bq, bk)} != record " \
+                f"{(art.blocks.block_q, art.blocks.block_k)} at seq={seq}"
+
+        emit(
+            "session/smoke", 0.0,
+            f"records={len(store)};samples={session.samples_spent};"
+            f"seeds={session.seeds_played};"
+            f"blocks@256={arts[0].blocks.block_q}x{arts[0].blocks.block_k}",
+        )
+        return {"records": len(store), "samples": session.samples_spent}
+
+
+if __name__ == "__main__":
+    run()

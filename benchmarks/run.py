@@ -19,6 +19,7 @@ from . import (
     bench_platforms,
     bench_sample_efficiency,
     bench_serving,
+    bench_session,
     bench_trace_depth,
     roofline_table,
 )
@@ -36,6 +37,8 @@ TABLES = {
     "serving": bench_serving.run,            # beyond-paper: engine TTFT/TPOT
     "lowering": bench_lowering.run,          # beyond-paper: measured-oracle
                                              # rank fidelity vs analytical
+    "session": bench_session.run,            # beyond-paper: CompilerSession
+                                             # shared-context + artifact smoke
 }
 
 

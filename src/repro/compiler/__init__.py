@@ -1,0 +1,81 @@
+"""``repro.compiler`` — the Reasoning Compiler's public session API.
+
+One front door for search, tuning records, and deploy-time artifacts:
+
+    from repro.compiler import CompilerSession, tasks_for_config
+
+    session = CompilerSession(target="tpu-v5e", oracle="analytical",
+                              proposer="gpt-4o-mini", budget_policy=64)
+    artifacts = session.compile(tasks_for_config(cfg, seq=4096, tp=8))
+
+The session owns one LLM, one oracle (with its caches), and one
+``TuningRecords`` database for its lifetime, and compiles related shapes
+through a shared search context (cross-task trace seeding + budget
+reallocation).  Deploy-time consumers resolve an ``ArtifactSet`` at engine
+construction (``artifacts_for_config``) and thread it through ``cfg``
+instead of module globals.
+
+Legacy entry points (``core.search.run_search``,
+``core.autotuner.KernelTuner``) are deprecation shims over this package.
+"""
+from .artifacts import (
+    ArtifactSet,
+    AttentionBlocks,
+    CompiledArtifact,
+    GemmBlocks,
+    artifacts_for_config,
+    bind_artifacts,
+    blocks_from_record,
+    default_records,
+)
+from .context import SeededProposer, SharedContext, TaskOutcome, adapt_history
+from .records import (
+    DEFAULT_RECORDS_PATH,
+    LEGACY_JSON_PATH,
+    SCHEMA_VERSION,
+    TuningRecord,
+    TuningRecords,
+    migrate_json_cache,
+    record_key,
+)
+from .session import BudgetPolicy, CompilerSession
+from .tasks import (
+    Task,
+    attention_task,
+    attention_tuning_workload,
+    gemm_task,
+    gemm_tuning_workload,
+    local_attention_dims,
+    tasks_for_config,
+)
+
+__all__ = [
+    "ArtifactSet",
+    "AttentionBlocks",
+    "BudgetPolicy",
+    "CompiledArtifact",
+    "CompilerSession",
+    "DEFAULT_RECORDS_PATH",
+    "GemmBlocks",
+    "LEGACY_JSON_PATH",
+    "SCHEMA_VERSION",
+    "SeededProposer",
+    "SharedContext",
+    "Task",
+    "TaskOutcome",
+    "TuningRecord",
+    "TuningRecords",
+    "adapt_history",
+    "artifacts_for_config",
+    "attention_task",
+    "bind_artifacts",
+    "attention_tuning_workload",
+    "blocks_from_record",
+    "default_records",
+    "gemm_task",
+    "gemm_tuning_workload",
+    "local_attention_dims",
+    "migrate_json_cache",
+    "record_key",
+    "tasks_for_config",
+]

@@ -1,0 +1,230 @@
+"""Deploy-time artifacts: what the rest of the stack consumes.
+
+``CompiledArtifact`` is what ``CompilerSession.compile`` returns per task:
+the extracted kernel block parameters, the persisted provenance record,
+and (on request) the lowered Pallas kernel itself.
+
+``ArtifactSet`` is the *resolution* object that replaces the old
+module-global plumbing (``models.layers.set_active_tp`` + a raw JSON
+dict): an engine resolves one at construction against its mesh's TP
+degree and threads it through ``cfg`` (``ArchConfig.with_artifacts``), so
+every traced attention launch reads its tuned blocks from an explicit,
+engine-owned object instead of whatever another engine last wrote into a
+global.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..core.lowering import _band_extent, _quantize_block
+from ..core.schedule import Schedule, initial_schedule
+from .context import adapt_history
+from .records import (
+    DEFAULT_RECORDS_PATH,
+    LEGACY_JSON_PATH,
+    TuningRecord,
+    TuningRecords,
+    record_key,
+)
+from .tasks import (
+    Task,
+    attention_tuning_workload,
+    gemm_tuning_workload,
+    local_attention_dims,
+)
+
+# ---------------------------------------------------------------------------
+# block parameter extraction (DESIGN.md §3 mapping; moved from
+# core/autotuner.py, which re-exports for compatibility)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AttentionBlocks:
+    block_q: int = 128
+    block_k: int = 128
+
+    @classmethod
+    def from_schedule(cls, s: Schedule) -> "AttentionBlocks":
+        w = s.workload
+        sq = w.loop_map["i"].extent
+        skv = w.loop_map["j"].extent
+        bq = _quantize_block(_band_extent(s, "i"), sq, lo=8, hi=512)
+        bk = _quantize_block(_band_extent(s, "j"), skv, lo=128, hi=1024)
+        return cls(block_q=bq, block_k=bk)
+
+    @classmethod
+    def from_params(cls, params: dict) -> "AttentionBlocks":
+        return cls(params["block_q"], params["block_k"])
+
+
+@dataclasses.dataclass
+class GemmBlocks:
+    bm: int = 128
+    bn: int = 128
+    bk: int = 512
+
+    @classmethod
+    def from_schedule(cls, s: Schedule) -> "GemmBlocks":
+        w = s.workload
+        m = w.loop_map["i"].extent
+        n = w.loop_map["j"].extent
+        k = w.loop_map["k"].extent
+        return cls(
+            bm=_quantize_block(_band_extent(s, "i"), m, lo=8, hi=512),
+            bn=_quantize_block(_band_extent(s, "j"), n, lo=128, hi=1024),
+            bk=_quantize_block(_band_extent(s, "k"), k, lo=128, hi=2048),
+        )
+
+    @classmethod
+    def from_params(cls, params: dict) -> "GemmBlocks":
+        return cls(params["bm"], params["bn"], params["bk"])
+
+
+def blocks_from_record(rec: TuningRecord):
+    if rec.kind == "attention":
+        return AttentionBlocks.from_params(rec.params)
+    return GemmBlocks.from_params(rec.params)
+
+
+# ---------------------------------------------------------------------------
+# CompiledArtifact
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompiledArtifact:
+    """One compiled task: blocks + provenance (+ optional lowered kernel)."""
+
+    task: Task
+    record: TuningRecord
+    blocks: object                    # AttentionBlocks | GemmBlocks
+    lowered: Optional[object] = None  # core.lowering.Lowered, on request
+    cache_hit: bool = False           # True: resolved from records, 0 samples
+    # The in-session SearchResult (curve, fallback stats); None on cache
+    # hits.  Not persisted — benchmarks/tests read convergence from here.
+    result: Optional[object] = None
+
+    @property
+    def key(self) -> str:
+        return self.record.key
+
+    @property
+    def provenance(self) -> dict:
+        return self.record.provenance
+
+    def schedule(self) -> Schedule:
+        """Reconstruct the winning schedule by replaying the record's
+        transform trace on the task's initial program."""
+        s = initial_schedule(self.task.workload)
+        for t in adapt_history(self.record.history, self.task.workload):
+            s = t.apply(s)
+        return s
+
+    def lower(self, *, interpret: Optional[bool] = None):
+        """Lower the winning schedule to its executable Pallas realization
+        (cached on the artifact)."""
+        if self.lowered is None:
+            from ..core.lowering import lower_schedule
+
+            self.lowered = lower_schedule(
+                self.schedule(), interpret=interpret, hardware_floors=True,
+            )
+        return self.lowered
+
+
+# ---------------------------------------------------------------------------
+# deploy-time resolution
+# ---------------------------------------------------------------------------
+
+_DEFAULT_RECORDS: Optional[TuningRecords] = None
+
+
+def default_records() -> TuningRecords:
+    """Process-wide read/write handle on the default record store (the
+    sessions' equivalent of the old singleton JSON cache), with the v0
+    JSON cache folded in when present."""
+    global _DEFAULT_RECORDS
+    if _DEFAULT_RECORDS is None:
+        _DEFAULT_RECORDS = TuningRecords(
+            DEFAULT_RECORDS_PATH, legacy_json=LEGACY_JSON_PATH
+        )
+    return _DEFAULT_RECORDS
+
+
+class ArtifactSet:
+    """Tuned-block resolver bound to (record store, platform, tp degree).
+
+    Read-only: a miss returns kernel defaults, never launches a search.
+    Engines hold one per constructed model (``cfg.with_artifacts``), so
+    two engines serving differently-sharded models in one process resolve
+    against their *own* TP degree — the race the old ``set_active_tp``
+    module global could not express.
+    """
+
+    def __init__(self, records: Optional[TuningRecords] = None, *,
+                 tp: int = 1, platform: str = "tpu-v5e"):
+        self.records = records if records is not None else default_records()
+        self.tp = max(1, int(tp))
+        self.platform = platform
+
+    def __repr__(self):
+        return (f"ArtifactSet(platform={self.platform!r}, tp={self.tp}, "
+                f"records={len(self.records)})")
+
+    # -- resolution ---------------------------------------------------------
+    def attention_record(self, cfg, seq_q: int, seq_kv: int) \
+            -> Optional[TuningRecord]:
+        heads, kv_heads = local_attention_dims(cfg, self.tp)
+        w = attention_tuning_workload(
+            heads, seq_q, seq_kv, cfg.hd, kv_heads=kv_heads
+        )
+        return self.records.get(record_key(self.platform, w))
+
+    def attention_blocks(self, cfg, seq_q: int, seq_kv: int) \
+            -> tuple[int, int]:
+        """(block_q, block_k) for an ``ArchConfig`` attention launch under
+        this set's TP degree; kernel defaults on a miss."""
+        rec = self.attention_record(cfg, seq_q, seq_kv)
+        b = AttentionBlocks.from_params(rec.params) if rec \
+            else AttentionBlocks()
+        return b.block_q, b.block_k
+
+    def gemm_blocks(self, m: int, n: int, k: int,
+                    epilogue: str = "none") -> tuple[int, int, int]:
+        w = gemm_tuning_workload(m, n, k, epilogue=epilogue)
+        rec = self.records.get(record_key(self.platform, w))
+        b = GemmBlocks.from_params(rec.params) if rec else GemmBlocks()
+        return b.bm, b.bn, b.bk
+
+
+def artifacts_for_config(
+    cfg, *, tp: int = 1, records: Optional[TuningRecords] = None,
+    platform: str = "tpu-v5e",
+) -> ArtifactSet:
+    """The engine-construction front door: resolve the artifact set an
+    engine threads through ``cfg`` (``cfg.with_artifacts(...)``)."""
+    return ArtifactSet(records, tp=tp, platform=platform)
+
+
+def bind_artifacts(
+    cfg, *, mesh=None, tp: int = 1,
+    records: Optional[TuningRecords] = None, platform: str = "tpu-v5e",
+) -> tuple:
+    """Engine-side binding: ``(bound_cfg, block_tp)``.
+
+    The tp degree comes from the mesh when one is given (matching
+    ``dist.sharding``'s axis contract), else from ``tp``; an already-bound
+    cfg passes through untouched, so callers constructing engines with a
+    pre-resolved artifact set keep it."""
+    if mesh is not None:
+        from ..dist import sharding as shd
+
+        tp = shd.tp_degree(mesh)
+    if getattr(cfg, "artifacts", None) is None:
+        cfg = cfg.with_artifacts(
+            artifacts_for_config(cfg, tp=tp, records=records,
+                                 platform=platform)
+        )
+    return cfg, tp

@@ -1,0 +1,328 @@
+"""Cross-task shared search context (LiteCoOp-style trace seeding).
+
+The paper frames optimization as a sequential, context-aware decision
+process; a serving stack compiles *families* of related shapes (the same
+attention operator at several context lengths, the same GEMM at several
+token tiles), and searching each from scratch throws the accumulated
+context away.  This module keeps it:
+
+* ``SharedContext`` records, per task family, the winning transform trace,
+  the runner-up traces, and plateau statistics (which transform families
+  helped / hurt) of every compiled task.
+* ``adapt_history`` replays a donor trace onto a *sibling* workload,
+  rescaling tile decisions to the sibling's loop extents and dropping
+  whatever stays illegal — the schedule-space analog of transferring a
+  reasoning tree between related workloads.
+* ``SeededProposer`` wraps the session's ``LLMProposer``: the first
+  expansions of a sibling search replay the adapted donor traces (so the
+  tree starts from a known-good region instead of ``p_0``), and every
+  later prompt carries a "Cross-task context" section plus a structured
+  prefer/avoid bias distilled from the donor's plateau statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from collections import deque
+from typing import Optional, Sequence
+
+from ..core.llm import (
+    LLMProposer,
+    Proposal,
+    TraceEntry,
+    _CALL_RE,
+    _FAMILIES,
+    _materialize,
+    _parse_args,
+)
+from ..core.schedule import (
+    Schedule,
+    ScheduleError,
+    Transform,
+    initial_schedule,
+)
+from .tasks import Task
+
+# ---------------------------------------------------------------------------
+# donor records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ContextHint:
+    """Structured cross-task bias handed to the proposal engine."""
+
+    prefer: frozenset = frozenset()    # transform families that improved
+    avoid: frozenset = frozenset()     # transform families that regressed
+    note: str = ""                     # prose for the prompt text
+
+    def render(self) -> str:
+        parts = ["Cross-task context (from an already-compiled sibling "
+                 "workload):"]
+        if self.note:
+            parts.append(self.note)
+        if self.prefer:
+            parts.append(
+                f"Transformation families that improved the sibling: "
+                f"{', '.join(sorted(self.prefer))}."
+            )
+        if self.avoid:
+            parts.append(
+                f"Families that regressed it: {', '.join(sorted(self.avoid))}."
+            )
+        return "\n".join(parts) + "\n"
+
+
+@dataclasses.dataclass
+class TaskOutcome:
+    """What one compiled task contributes to its family's shared context."""
+
+    family: str
+    workload_name: str
+    dims: dict
+    best_speedup: float
+    samples: int
+    samples_to_best: int
+    history: tuple                      # winning transform trace
+    top_histories: tuple = ()           # runner-up traces, best first
+    prefer: frozenset = frozenset()
+    avoid: frozenset = frozenset()
+
+    def hint(self) -> ContextHint:
+        """The prompt-ready distillation of this outcome (what a sibling
+        search's proposer weaves into every prompt)."""
+        dims = ",".join(f"{a}={v}" for a, v in self.dims.items())
+        return ContextHint(
+            prefer=self.prefer, avoid=self.avoid,
+            note=(f"A sibling shape {self.workload_name}[{dims}] reached "
+                  f"{self.best_speedup:.2f}x in {self.samples_to_best} "
+                  f"samples via: "
+                  f"{'; '.join(self.history) or 'the unoptimized program'}."),
+        )
+
+
+def _family_deltas(
+    history: Sequence[str], family_stats: Optional[dict]
+) -> tuple[set, set]:
+    """Distill a finished task's plateau statistics into prefer/avoid.
+
+    Prefer: families in the winning trace, plus any family whose summed
+    per-edge improvement over the whole search tree was positive
+    (``SearchResult.family_stats``).  Avoid: families that net-regressed
+    across the tree and did not make the winner — the moves the sibling
+    search should not waste samples re-discovering are bad here.
+    """
+    prefer = {desc.split("(")[0] for desc in history}
+    avoid: set = set()
+    for fam, delta in (family_stats or {}).items():
+        if delta > 0:
+            prefer.add(fam)
+        elif delta < 0 and fam not in prefer:
+            avoid.add(fam)
+    return prefer, avoid
+
+
+class SharedContext:
+    """Per-family donor registry a session accumulates while compiling."""
+
+    def __init__(self):
+        self.outcomes: dict[str, TaskOutcome] = {}
+
+    def observe(self, task: Task, result) -> None:
+        """Record a finished task (``result`` is a ``SearchResult``)."""
+        if result.best_schedule is None:
+            return
+        history = tuple(result.best_schedule.history)
+        prefer, avoid = _family_deltas(
+            history, getattr(result, "family_stats", None)
+        )
+        tops = tuple(
+            tuple(s.history) for s in result.top_schedules[:3]
+            if s.history and tuple(s.history) != history
+        )
+        samples_to_best = result.curve.samples_to_reach(
+            result.best_speedup * 0.999
+        ) or result.samples
+        out = TaskOutcome(
+            family=task.family_key,
+            workload_name=task.workload.name,
+            dims={l.name: l.extent for l in task.workload.loops},
+            best_speedup=result.best_speedup,
+            samples=result.samples,
+            samples_to_best=samples_to_best,
+            history=history,
+            top_histories=tops,
+            prefer=frozenset(prefer),
+            avoid=frozenset(avoid),
+        )
+        cur = self.outcomes.get(out.family)
+        # keep the strongest donor per family
+        if cur is None or out.best_speedup > cur.best_speedup:
+            self.outcomes[out.family] = out
+
+    def observe_record(self, task: Task, rec) -> None:
+        """Seed the context from a persisted record (a cache-hit task whose
+        winning trace lives in the record store, possibly from an earlier
+        session — the queryable-corpus payoff)."""
+        prefer = frozenset(d.split("(")[0] for d in rec.history)
+        out = TaskOutcome(
+            family=task.family_key,
+            workload_name=task.workload.name,
+            dims={l.name: l.extent for l in task.workload.loops},
+            best_speedup=rec.speedup,
+            samples=rec.samples,
+            samples_to_best=rec.samples,
+            history=tuple(rec.history),
+            prefer=prefer,
+        )
+        cur = self.outcomes.get(out.family)
+        if cur is None or out.best_speedup > cur.best_speedup:
+            self.outcomes[out.family] = out
+
+    def donor(self, task: Task) -> Optional[TaskOutcome]:
+        d = self.outcomes.get(task.family_key)
+        if d is not None and d.workload_name == task.workload.name \
+                and d.dims == {l.name: l.extent
+                               for l in task.workload.loops}:
+            return None  # same shape: a record-store hit, not a sibling
+        return d
+
+
+# ---------------------------------------------------------------------------
+# trace adaptation
+# ---------------------------------------------------------------------------
+
+
+def _rescale_decision(decision: list, extent: int) -> Optional[list]:
+    """Rescale a donor tile split to a sibling extent, preserving the inner
+    (VMEM-band) levels — those are what the lowering bridge turns into
+    block shapes — and absorbing the extent change at the outermost level.
+    """
+    if not decision or any(not isinstance(x, int) or x < 1
+                           for x in decision):
+        return None
+    if math.prod(decision) == extent:
+        return list(decision)
+    inner = list(decision[1:])
+    for drop in range(len(inner) + 1):
+        keep = inner if drop == 0 else inner[:-drop] + [1] * drop
+        rest = math.prod(keep)
+        if rest <= extent and extent % rest == 0:
+            return [extent // rest] + keep
+    return None
+
+
+def adapt_transform(
+    desc: str, s: Schedule, rng: random.Random
+) -> Optional[Transform]:
+    """One donor-trace entry -> a legal Transform on schedule ``s``."""
+    m = _CALL_RE.match(desc.strip())
+    if not m:
+        return None
+    fam = _FAMILIES.get(m.group(1).strip().lower())
+    if fam is None:
+        return None
+    args, kwargs = _parse_args(m.group(3) or "")
+    if fam == "TileSize":
+        axis = kwargs.get("axis", args[0] if args else None)
+        decision = kwargs.get("decision",
+                              args[1] if len(args) > 1 else None)
+        if isinstance(axis, str) and axis in s.workload.loop_map \
+                and isinstance(decision, list):
+            scaled = _rescale_decision(
+                decision, s.workload.loop_map[axis].extent
+            )
+            if scaled is None:
+                return None
+            args, kwargs = [], {"axis": axis, "decision": scaled}
+    return _materialize(fam, args, kwargs, s, rng)
+
+
+def adapt_history(
+    history: Sequence[str], workload, rng: Optional[random.Random] = None,
+) -> list[Transform]:
+    """Replay a donor trace onto a sibling workload's initial schedule,
+    returning the legal (possibly rescaled) transform list."""
+    rng = rng or random.Random(0)
+    s = initial_schedule(workload)
+    out: list[Transform] = []
+    for desc in history:
+        t = adapt_transform(desc, s, rng)
+        if t is None:
+            continue
+        try:
+            s = t.apply(s)
+        except ScheduleError:
+            continue
+        out.append(t)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the seeded proposer
+# ---------------------------------------------------------------------------
+
+
+class SeededProposer(LLMProposer):
+    """``LLMProposer`` primed by a sibling task's outcome.
+
+    The first expansions replay the donor's winning (and runner-up) traces
+    adapted to this workload, then control passes to the LLM with the
+    cross-task hint woven into every prompt.  Fallback statistics only
+    count genuine LLM expansions, so Table-8 numbers stay comparable.
+    """
+
+    def __init__(self, llm, platform, trace_depth: int = 2,
+                 donor: Optional[TaskOutcome] = None,
+                 workload=None, max_seeds: int = 3):
+        super().__init__(llm, platform, trace_depth=trace_depth)
+        self.hint: Optional[ContextHint] = None
+        self._seeds: deque[tuple[list[Transform], str]] = deque()
+        self.seeds_played = 0
+        if donor is not None and workload is not None:
+            self.hint = donor.hint()
+            seen: set[tuple] = set()
+            for hist in (donor.history, *donor.top_histories)[:max_seeds]:
+                ts = adapt_history(hist, workload)
+                key = tuple(t.describe() for t in ts)
+                if ts and key not in seen:
+                    seen.add(key)
+                    self._seeds.append((
+                        ts,
+                        f"cross-task seed: replay the sibling "
+                        f"{donor.workload_name} trace "
+                        f"({donor.best_speedup:.2f}x) adapted to this shape",
+                    ))
+
+    def propose(
+        self, trace: Sequence[TraceEntry], rng: random.Random
+    ) -> Proposal:
+        # seeds only make sense from the root (depth 0): they are full
+        # traces from p_0, not continuations — off-root expansions leave
+        # the queue intact so runner-up traces still play when selection
+        # returns to the not-yet-fully-expanded root
+        while self._seeds and not trace[0].schedule.history:
+            transforms, why = self._seeds.popleft()
+            s = trace[0].schedule
+            try:
+                for t in transforms:
+                    s = t.apply(s)
+            except ScheduleError:
+                continue
+            self.seeds_played += 1
+            return Proposal(
+                transforms=list(transforms), reasoning=why,
+                raw_text=f"Reasoning: {why}.\nTransformations to apply: "
+                         + ", ".join(t.describe() for t in transforms) + ".",
+                n_proposed=len(transforms), n_invalid=0,
+            )
+        return super().propose(trace, rng)
+
+    # weave the hint into the prompt (LLMProposer.propose builds prompts
+    # through this seam; see core/llm.build_prompt)
+    def _build_prompt(self, trace):
+        from ..core.llm import build_prompt
+
+        return build_prompt(trace, self.platform, self.trace_depth,
+                            hint=self.hint)

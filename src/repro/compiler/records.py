@@ -1,0 +1,416 @@
+"""Schema-versioned tuning-record store: the compiler's persistent corpus.
+
+The LLM-compiler line of work (Cummins et al., "Large Language Models for
+Compiler Optimization") argues tuning results should live in a persistent,
+queryable database rather than a write-only cache — every record here
+carries full provenance (which oracle produced it, measured vs. analytical,
+harness settings, a version stamp of the cost model) and the *winning
+transform trace*, so later sessions can query, merge, and cross-seed from
+it (``compiler/context.py``).
+
+On disk the store is append-only JSONL (one record per line, each line a
+self-describing ``schema``-versioned object).  Append-only is what makes
+two processes writing the same db path safe: each ``add`` is a single
+O_APPEND write, and ``reload`` merges whatever both processes wrote
+(dedup-on-load, newest record per key wins).  The legacy v0 format — one
+JSON dict mapping key -> block params (``core/autotuner.py`` before the
+session API) — is migrated in place on first load and can be produced for
+old readers via ``export_json``.
+
+Corrupt input never crashes a session: unparseable JSONL lines and
+truncated/corrupt legacy JSON files are quarantined next to the store
+(``<path>.quarantined``) with a warning, and tuning proceeds fresh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import subprocess
+import time
+import warnings
+from typing import Iterable, Optional
+
+SCHEMA_VERSION = 1
+
+# Default on-disk store, next to the arch configs like the v0 JSON cache.
+DEFAULT_RECORDS_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "configs", "tuning_records.jsonl"
+)
+# The v0 cache the migration path (`--migrate-cache`) consumes.
+LEGACY_JSON_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "configs", "tuning_cache.json"
+)
+
+_ATTENTION_PARAMS = ("block_q", "block_k")
+_GEMM_PARAMS = ("bm", "bn", "bk")
+
+
+def _cost_model_version() -> str:
+    """Version stamp of the analytical cost model backing a record.
+
+    ``git describe`` of the repo when available (records produced by a
+    checkout are traceable to a commit), else a content hash of
+    ``core/cost_model.py`` — either way two records disagree on this field
+    iff they were produced by different cost models.
+    """
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    try:
+        out = subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            cwd=root, capture_output=True, text=True, timeout=5,
+        )
+        if out.returncode == 0 and out.stdout.strip():
+            return f"git:{out.stdout.strip()}"
+    except (OSError, subprocess.SubprocessError):
+        pass
+    cm = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "core", "cost_model.py")
+    try:
+        with open(cm, "rb") as f:
+            return f"sha:{hashlib.sha256(f.read()).hexdigest()[:12]}"
+    except OSError:
+        return "unknown"
+
+
+_COST_MODEL_VERSION: Optional[str] = None
+
+
+def cost_model_version() -> str:
+    global _COST_MODEL_VERSION
+    if _COST_MODEL_VERSION is None:
+        _COST_MODEL_VERSION = _cost_model_version()
+    return _COST_MODEL_VERSION
+
+
+@dataclasses.dataclass
+class TuningRecord:
+    """One tuned (workload x platform) result with full provenance."""
+
+    key: str                 # "platform:workload[axis=extent,...]" (v0-compat)
+    kind: str                # "attention" | "gemm" | ...
+    params: dict             # {block_q, block_k} | {bm, bn, bk}
+    speedup: float
+    samples: int
+    method: str
+    platform: str = "tpu-v5e"
+    workload: str = ""
+    dims: dict = dataclasses.field(default_factory=dict)
+    llm: Optional[str] = None
+    oracle: str = "analytical"        # search-time objective backend
+    measured: bool = False            # True iff a real timed execution ranked it
+    measured_latency_s: Optional[float] = None
+    history: tuple = ()               # winning transform trace (cross-seeding)
+    provenance: dict = dataclasses.field(default_factory=dict)
+    created_at: float = 0.0
+    schema: int = SCHEMA_VERSION
+
+    def __post_init__(self):
+        self.history = tuple(self.history)
+        if not self.created_at:
+            self.created_at = time.time()
+        self.provenance.setdefault("cost_model", cost_model_version())
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["history"] = list(self.history)
+        return json.dumps(d, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuningRecord":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def legacy_entry(self) -> dict:
+        """The v0 JSON-cache entry shape (`KernelTuner._cache` values)."""
+        entry = dict(self.params, speedup=round(self.speedup, 3),
+                     samples=self.samples, method=self.method)
+        if self.measured_latency_s is not None:
+            entry["measured_latency_s"] = self.measured_latency_s
+        if self.provenance.get("oracle"):
+            entry["provenance"] = {
+                k: v for k, v in self.provenance.items() if k != "cost_model"
+            }
+        return entry
+
+
+def record_key(platform: str, workload) -> str:
+    """The v0 cache-key format, kept so migration is identity on keys."""
+    dims = ",".join(f"{l.name}={l.extent}" for l in workload.loops)
+    return f"{platform}:{workload.name}[{dims}]"
+
+
+def _kind_of(params: dict) -> str:
+    if all(k in params for k in _ATTENTION_PARAMS):
+        return "attention"
+    if all(k in params for k in _GEMM_PARAMS):
+        return "gemm"
+    return "unknown"
+
+
+def _split_key(key: str) -> tuple[str, str, dict]:
+    """'plat:name[i=1,j=2]' -> (plat, name, {i:1, j:2}); best effort."""
+    platform, _, rest = key.partition(":")
+    name, _, dimstr = rest.partition("[")
+    dims = {}
+    for tok in dimstr.rstrip("]").split(","):
+        if "=" in tok:
+            a, _, v = tok.partition("=")
+            try:
+                dims[a] = int(v)
+            except ValueError:
+                pass
+    return platform, name, dims
+
+
+class TuningRecords:
+    """Append-only, schema-versioned JSONL record database.
+
+    ``path=None`` keeps the store in memory (unit tests, throwaway
+    sessions).  With a path, every ``add`` appends one line; concurrent
+    writers interleave lines instead of clobbering each other, and
+    ``reload`` folds in records another process appended since we last
+    read (newest per key wins).
+    """
+
+    def __init__(self, path: Optional[str] = None,
+                 legacy_json: Optional[str] = None):
+        self.path = path
+        self.legacy_json = legacy_json
+        self._records: dict[str, TuningRecord] = {}
+        self.quarantined = 0
+        self.load()
+
+    # -- loading -------------------------------------------------------------
+    def load(self) -> None:
+        self._records = {}
+        if self.legacy_json and os.path.exists(self.legacy_json):
+            self._load_legacy(self.legacy_json)
+        if self.path and os.path.exists(self.path):
+            self._load_jsonl(self.path)
+
+    def reload(self) -> None:
+        """Re-merge the on-disk store (cross-process visibility)."""
+        mine = dict(self._records)
+        self.load()
+        for key, rec in mine.items():
+            cur = self._records.get(key)
+            if cur is None or cur.created_at <= rec.created_at:
+                self._records[key] = rec
+
+    def _quarantine(self, path: str, why: str) -> None:
+        qpath = path + ".quarantined"
+        n = 1
+        while os.path.exists(qpath):
+            qpath = f"{path}.quarantined.{n}"
+            n += 1
+        try:
+            os.replace(path, qpath)
+        except OSError:
+            qpath = "<unmovable>"
+        self.quarantined += 1
+        warnings.warn(
+            f"tuning store {path!r} is corrupt ({why}); quarantined to "
+            f"{qpath!r} and starting fresh", RuntimeWarning, stacklevel=3,
+        )
+
+    def _load_legacy(self, path: str) -> None:
+        try:
+            with open(path) as f:
+                cache = json.load(f)
+            if not isinstance(cache, dict):
+                raise ValueError(f"expected a JSON object, got {type(cache)}")
+        except (json.JSONDecodeError, ValueError, OSError) as e:
+            self._quarantine(path, str(e))
+            return
+        try:
+            stamp = os.path.getmtime(path)
+        except OSError:
+            stamp = time.time()
+        for key, entry in cache.items():
+            rec = legacy_entry_to_record(key, entry, created_at=stamp)
+            if rec is not None:
+                self._records[rec.key] = rec
+
+    def _load_jsonl(self, path: str) -> None:
+        bad: list[str] = []
+        try:
+            with open(path) as f:
+                lines = f.readlines()
+        except OSError as e:
+            self._quarantine(path, str(e))
+            return
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+                if not isinstance(d, dict) or "key" not in d:
+                    raise ValueError("not a record object")
+                rec = TuningRecord.from_dict(d)
+            except (json.JSONDecodeError, ValueError, TypeError):
+                bad.append(line)
+                continue
+            # dedup-on-load: later lines (newer appends) win
+            self._records[rec.key] = rec
+        if bad:
+            # The store file is NEVER rewritten (append-only is the
+            # cross-process safety contract: a "corrupt" tail line may be
+            # another process's in-flight append).  Corrupt lines are
+            # copied to the quarantine file and skipped; lines already
+            # quarantined by an earlier load stay silent, so each unique
+            # corrupt line warns exactly once.
+            qpath = path + ".quarantined"
+            known: set[str] = set()
+            if os.path.exists(qpath):
+                try:
+                    with open(qpath) as f:
+                        known = {l.strip() for l in f}
+                except OSError:
+                    pass
+            new_bad = [l for l in bad if l not in known]
+            self.quarantined += len(new_bad)
+            if new_bad:
+                with open(qpath, "a") as f:
+                    f.write("\n".join(new_bad) + "\n")
+                warnings.warn(
+                    f"tuning store {path!r}: skipped {len(new_bad)} corrupt/"
+                    f"truncated line(s), quarantined to {qpath!r}",
+                    RuntimeWarning, stacklevel=3,
+                )
+
+    # -- mutation ------------------------------------------------------------
+    def add(self, rec: TuningRecord) -> TuningRecord:
+        self._records[rec.key] = rec
+        if self.path:
+            os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                        exist_ok=True)
+            with open(self.path, "a") as f:
+                f.write(rec.to_json() + "\n")
+        return rec
+
+    def merge(self, other: "TuningRecords") -> int:
+        """Adopt records from another store (newest per key wins);
+        returns the number of records that changed."""
+        changed = 0
+        for key, rec in other._records.items():
+            cur = self._records.get(key)
+            if cur is None or cur.created_at < rec.created_at:
+                self.add(rec)
+                changed += 1
+        return changed
+
+    # -- queries -------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._records
+
+    def get(self, key: str) -> Optional[TuningRecord]:
+        return self._records.get(key)
+
+    def keys(self) -> list[str]:
+        return sorted(self._records)
+
+    def all(self) -> list[TuningRecord]:
+        return [self._records[k] for k in self.keys()]
+
+    def query(
+        self,
+        *,
+        platform: Optional[str] = None,
+        kind: Optional[str] = None,
+        workload: Optional[str] = None,
+        measured: Optional[bool] = None,
+    ) -> list[TuningRecord]:
+        out = []
+        for rec in self.all():
+            if platform is not None and rec.platform != platform:
+                continue
+            if kind is not None and rec.kind != kind:
+                continue
+            if workload is not None and workload not in rec.workload:
+                continue
+            if measured is not None and rec.measured != measured:
+                continue
+            out.append(rec)
+        return out
+
+    # -- legacy interop ------------------------------------------------------
+    def legacy_view(self) -> dict:
+        """The whole store in the v0 ``{key: entry}`` JSON-cache shape."""
+        return {k: r.legacy_entry() for k, r in sorted(self._records.items())}
+
+    def export_json(self, path: str) -> None:
+        """Write the v0 JSON-cache format for old readers."""
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.legacy_view(), f, indent=1, sort_keys=True)
+
+
+def legacy_entry_to_record(
+    key: str, entry: dict, created_at: float = 0.0
+) -> Optional[TuningRecord]:
+    """One v0 JSON-cache entry -> a versioned record (None if malformed).
+
+    ``created_at`` should be the source file's mtime: migrated records
+    then sort as old as the cache they came from, so re-migrating the
+    same file is a no-op and freshly-searched records always win merges.
+    """
+    if not isinstance(entry, dict):
+        return None
+    kind = _kind_of(entry)
+    if kind == "unknown":
+        return None
+    params = {k: entry[k] for k in
+              (_ATTENTION_PARAMS if kind == "attention" else _GEMM_PARAMS)}
+    platform, workload, dims = _split_key(key)
+    prov = dict(entry.get("provenance") or {})
+    prov.setdefault("migrated_from", "v0-json")
+    return TuningRecord(
+        created_at=created_at,
+        key=key, kind=kind, params=params,
+        speedup=float(entry.get("speedup", 1.0)),
+        samples=int(entry.get("samples", 0)),
+        method=str(entry.get("method", "unknown")),
+        platform=platform, workload=workload, dims=dims,
+        measured="measured_latency_s" in entry,
+        measured_latency_s=entry.get("measured_latency_s"),
+        provenance=prov,
+    )
+
+
+def migrate_json_cache(
+    json_path: str, records: TuningRecords
+) -> int:
+    """One-shot v0 JSON cache -> versioned JSONL store migration; returns
+    the number of migrated records (existing newer records are kept).
+
+    Migration means *persisted in the JSONL file*: the comparison runs
+    against what is actually on disk, not the target's in-memory view —
+    a store that merely folded the same legacy JSON in at load time
+    (``legacy_json=``) still gets its records written out.
+
+    A v0 entry is a *lossy projection* (no winning trace, no llm/oracle
+    provenance), so it never replaces an existing searched record for the
+    same key — even when the JSON file is newer (it usually is: the
+    legacy mirror ``export_json`` writes is derived FROM those records).
+    It only beats an older record that is itself a legacy import.
+    """
+    if not os.path.exists(json_path):
+        return 0
+    src = TuningRecords(path=None, legacy_json=json_path)
+    on_disk = TuningRecords(records.path) if records.path else records
+    migrated = 0
+    for rec in src.all():
+        cur = on_disk.get(rec.key)
+        if cur is None or (cur.created_at < rec.created_at
+                           and cur.provenance.get("migrated_from")):
+            records.add(rec)
+            migrated += 1
+    return migrated

@@ -1,0 +1,446 @@
+"""``CompilerSession``: the single front door of the Reasoning Compiler.
+
+The paper frames optimization as a *sequential, context-aware decision
+process*; this module gives that process a first-class owner.  One session
+holds, for its lifetime:
+
+* one LLM (``core/llm.make_llm`` — the expensive, stateful resource),
+* one oracle with its schedule/launch-config caches (``core/oracle.py``),
+* one ``TuningRecords`` database (``compiler/records.py``), and
+* one ``SharedContext`` accumulating winning traces + plateau statistics
+  across the tasks it compiles (``compiler/context.py``).
+
+``session.compile(tasks)`` runs a list of ``Task``s through that shared
+context: higher-priority tasks compile first and become seed donors for
+their siblings (LiteCoOp-style), converged tasks donate their unused
+sample budget to stragglers, and every result is persisted as a
+provenance-carrying record plus returned as a ``CompiledArtifact`` the
+deploy side consumes.
+
+``session.search(workload, ...)`` is the single-search primitive; the
+legacy entry points (``core.search.run_search``, ``core.autotuner
+.KernelTuner``) are thin deprecation shims over these two methods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+from ..core.cost_model import Platform, get_platform
+from ..core.evolutionary import EvolutionarySearch
+from ..core.llm import LLMBase, LLMProposer, make_llm
+from ..core.lowering import LoweringError
+from ..core.mcts import MCTS, SearchCurve
+from ..core.oracle import MeasuredOracle, make_oracle
+from ..core.workloads import Workload, get_workload
+from .artifacts import (
+    AttentionBlocks,
+    CompiledArtifact,
+    GemmBlocks,
+    blocks_from_record,
+)
+from .context import SeededProposer, SharedContext, TaskOutcome
+from .records import TuningRecord, TuningRecords, record_key
+from .tasks import Task
+
+METHODS = ("evolutionary", "mcts", "llm-mcts")
+
+
+def _family_stats(searcher: MCTS) -> dict:
+    """Plateau statistics of one finished tree search: per transform
+    family, the summed relative latency improvement over every evaluated
+    (parent, child) edge.  Positive = the family net-helped on this
+    workload; negative = it net-regressed.  Cross-task context distills
+    these into the prefer/avoid hint for sibling searches."""
+    stats: dict[str, float] = {}
+    for node in searcher._seen.values():
+        parent = node.parent
+        if parent is None:
+            continue
+        new = node.schedule.history[len(parent.schedule.history):]
+        delta = (parent.latency_s - node.latency_s) \
+            / max(parent.latency_s, 1e-30)
+        for desc in new:
+            fam = desc.split("(")[0]
+            stats[fam] = stats.get(fam, 0.0) + delta
+    return stats
+
+
+@dataclasses.dataclass
+class BudgetPolicy:
+    """How a session spreads its sample budget across tasks.
+
+    ``total`` is a HARD ceiling on the whole ``compile`` call (a task's
+    ``min_samples`` floor yields to it: once the pool is spent, remaining
+    tasks get a 0-sample record of the unoptimized program rather than
+    overrunning — with a measured oracle every sample is real hardware
+    time).  When None, each task gets ``per_task``.  With ``early_stop``,
+    a task that has not improved for ``patience`` consecutive samples is
+    declared converged and stops; with ``reallocate``, whatever it did
+    not spend flows to the remaining (straggler) tasks' grants.
+
+    ``early_stop``/``patience`` (and seeding) apply to the tree searches
+    (``mcts``/``llm-mcts``); ``evolutionary`` runs monolithically and
+    always consumes its full grant.
+    """
+
+    total: Optional[int] = None
+    per_task: int = 64
+    patience: int = 12
+    early_stop: bool = True
+    reallocate: bool = True
+
+    def pool(self, n_tasks: int) -> int:
+        return self.total if self.total is not None \
+            else self.per_task * n_tasks
+
+
+class CompilerSession:
+    """One LLM + one oracle + one record database, shared across tasks.
+
+    Parameters
+    ----------
+    target:        platform name or ``Platform`` ("tpu-v5e", "core-i9", ...)
+    oracle:        "analytical" | "measured" | "hybrid" | Oracle instance —
+                   built once, caches live for the session
+    proposer:      LLM name (``core/llm.MODEL_TIERS`` / "random" /
+                   "api:<model>") or an ``LLMBase`` instance
+    budget_policy: ``BudgetPolicy`` or an int (shorthand for
+                   ``BudgetPolicy(per_task=...)``)
+    records:       ``TuningRecords``, a path to a JSONL store, or None
+                   (in-memory)
+    shared_context: cross-task trace seeding + prompt hints (the ablation
+                   knob ``REPRO_BENCH_SHARED`` flips in benchmarks)
+    measure:       re-rank each task's winners by real timed execution
+                   before persisting (deploy-time default in launch/tune)
+    """
+
+    def __init__(
+        self,
+        target: Union[str, Platform] = "tpu-v5e",
+        *,
+        oracle="analytical",
+        proposer: Union[str, LLMBase] = "gpt-4o-mini",
+        method: str = "llm-mcts",
+        budget_policy: Union[BudgetPolicy, int, None] = None,
+        records: Union[TuningRecords, str, None] = None,
+        shared_context: bool = True,
+        trace_depth: int = 2,
+        branching: int = 2,
+        measure: bool = False,
+        rerank_top: int = 3,
+        measure_repeats: int = 3,
+        seed: int = 0,
+    ):
+        self.platform = target if isinstance(target, Platform) \
+            else get_platform(target)
+        self.oracle = make_oracle(oracle, self.platform)
+        self._proposer_spec = proposer
+        if isinstance(proposer, LLMBase):
+            self.llm: Optional[LLMBase] = proposer
+        elif method == "llm-mcts":
+            self.llm = make_llm(proposer)
+        else:
+            self.llm = None  # built on first llm-mcts search (_ensure_llm)
+        self.llm_name = self.llm.name if self.llm is not None else None
+        if method not in METHODS:
+            raise ValueError(f"unknown method {method!r}; known: {METHODS}")
+        self.method = method
+        if budget_policy is None:
+            budget_policy = BudgetPolicy()
+        elif isinstance(budget_policy, int):
+            budget_policy = BudgetPolicy(per_task=budget_policy)
+        self.budget_policy = budget_policy
+        if isinstance(records, TuningRecords):
+            self.records = records
+        else:
+            self.records = TuningRecords(records)
+        self.shared_context = shared_context
+        self.context = SharedContext()
+        self.trace_depth = trace_depth
+        self.branching = branching
+        self.measure = measure
+        self.rerank_top = rerank_top
+        self.measure_repeats = measure_repeats
+        self.seed = seed
+        self._measured_oracle: Optional[MeasuredOracle] = None
+        # session telemetry
+        self.samples_spent = 0
+        self.tasks_compiled = 0
+        self.cache_hits = 0
+        self.seeds_played = 0
+
+    # ------------------------------------------------------------------
+    # the single-search primitive (run_search-compatible)
+    # ------------------------------------------------------------------
+    def search(
+        self,
+        workload: Union[str, Workload],
+        budget: int = 200,
+        seed: int = 0,
+        *,
+        method: Optional[str] = None,
+        trace_depth: Optional[int] = None,
+        branching: Optional[int] = None,
+        donor: Optional[TaskOutcome] = None,
+        patience: Optional[int] = None,
+        min_samples: int = 0,
+        **mcts_kwargs,
+    ):
+        """Run one optimization strategy on one workload for ``budget``
+        samples, through the session's LLM and oracle.
+
+        Without ``donor``/``patience`` this reproduces the legacy
+        ``core.search.run_search`` exactly (the shim delegates here); a
+        donor seeds the first expansions with the sibling's adapted
+        traces, and ``patience`` enables converged-early termination.
+        """
+        from ..core.search import SearchResult, _oracle_name
+
+        if isinstance(workload, str):
+            workload = get_workload(workload)
+        method = method or self.method
+        oracle_name = _oracle_name(self.oracle)
+
+        if method == "evolutionary":
+            es = EvolutionarySearch(workload, self.oracle, seed=seed)
+            curve = es.search(budget)
+            best_t, best_s = es.best
+            return SearchResult(
+                workload.name, self.platform.name, method, curve,
+                es.baseline_latency / best_t, best_s, es.baseline_latency,
+                best_t, es.samples,
+                oracle=oracle_name, top_schedules=tuple(es.top_schedules()),
+            )
+        if method not in ("mcts", "llm-mcts"):
+            raise ValueError(f"unknown method {method!r}; known: {METHODS}")
+
+        proposer: Optional[LLMProposer] = None
+        if method == "llm-mcts":
+            llm = self._ensure_llm()
+            td = self.trace_depth if trace_depth is None else trace_depth
+            if donor is not None:
+                proposer = SeededProposer(
+                    llm, self.platform, trace_depth=td,
+                    donor=donor, workload=workload,
+                )
+            else:
+                proposer = LLMProposer(llm, self.platform, trace_depth=td)
+
+        searcher = MCTS(
+            workload, self.oracle, proposer=proposer,
+            branching=self.branching if branching is None else branching,
+            seed=seed, **mcts_kwargs,
+        )
+        curve = self._drive(searcher, budget, patience=patience,
+                            min_samples=min_samples)
+        if isinstance(proposer, SeededProposer):
+            self.seeds_played += proposer.seeds_played
+        return SearchResult(
+            workload.name, self.platform.name, method, curve,
+            searcher.best.speedup, searcher.best.schedule,
+            searcher.baseline_latency, searcher.best.latency_s,
+            searcher.samples,
+            fallback=proposer.stats if proposer else None,
+            llm=self.llm_name if proposer else None,
+            oracle=oracle_name,
+            top_schedules=tuple(searcher.top_schedules()),
+            family_stats=_family_stats(searcher),
+        )
+
+    def _ensure_llm(self) -> LLMBase:
+        """The session's single LLM, built lazily from the constructor's
+        proposer spec when the session method itself is not llm-mcts but a
+        per-call ``method="llm-mcts"`` override needs one."""
+        if self.llm is None:
+            spec = self._proposer_spec
+            self.llm = spec if isinstance(spec, LLMBase) else make_llm(spec)
+            self.llm_name = self.llm.name
+        return self.llm
+
+    @staticmethod
+    def _drive(searcher: MCTS, budget: int, *,
+               patience: Optional[int] = None,
+               min_samples: int = 0) -> SearchCurve:
+        """The ``MCTS.search`` loop, with optional convergence detection:
+        stop once ``patience`` consecutive samples brought no improvement
+        (the unspent budget flows back to the compile pool)."""
+        guard = 0
+        best = searcher.best.speedup
+        last_improved_at = 0
+        while searcher.samples < budget and guard < budget * 20:
+            guard += 1
+            searcher.step()
+            if searcher.best.speedup > best * (1 + 1e-9):
+                best = searcher.best.speedup
+                last_improved_at = searcher.samples
+            if patience is not None \
+                    and searcher.samples >= max(min_samples, 1) \
+                    and searcher.samples - last_improved_at >= patience:
+                break
+        return SearchCurve(list(searcher.curve))
+
+    # ------------------------------------------------------------------
+    # the multi-task front door
+    # ------------------------------------------------------------------
+    def compile(
+        self,
+        tasks: Sequence[Task],
+        *,
+        force: bool = False,
+        lower: bool = False,
+    ) -> list[CompiledArtifact]:
+        """Compile tasks through the shared search context.
+
+        Order of work is priority-descending (ties: declaration order);
+        the returned list matches the *input* order.  A task whose record
+        already exists in the session's database resolves as a
+        ``cache_hit`` artifact without consuming budget (``force=True``
+        re-searches); its persisted trace still primes siblings.
+        """
+        tasks = list(tasks)
+        policy = self.budget_policy
+        order = sorted(range(len(tasks)), key=lambda i: -tasks[i].priority)
+        pool = policy.pool(len(tasks))
+        even_share = pool // max(1, len(tasks))  # non-reallocating grant
+        out: dict[int, CompiledArtifact] = {}
+        pending = len(tasks)
+        for idx in order:
+            task = tasks[idx]
+            key = record_key(self.platform.name, task.workload)
+            rec = self.records.get(key)
+            if rec is not None and not force:
+                art = CompiledArtifact(
+                    task, rec, blocks_from_record(rec), cache_hit=True
+                )
+                self.cache_hits += 1
+                if self.shared_context and rec.history:
+                    self.context.observe_record(task, rec)
+                out[idx] = art
+                pending -= 1
+                continue
+            if policy.reallocate:
+                # converged predecessors spent less than their share, so
+                # the remaining pool splits over fewer pending tasks
+                grant = max(task.min_samples, pool // max(1, pending))
+            else:
+                grant = max(task.min_samples, even_share)
+            if task.max_samples is not None:
+                grant = min(grant, task.max_samples)
+            if policy.total is not None:
+                grant = min(grant, pool)  # the explicit total is HARD
+            # trace seeding requires the LLM-guided expansion policy; for
+            # mcts/evolutionary no donor is used (and none is recorded)
+            donor = self.context.donor(task) \
+                if self.shared_context and self.method == "llm-mcts" else None
+            res = self.search(
+                task.workload, budget=grant, seed=self.seed,
+                donor=donor,
+                patience=policy.patience if policy.early_stop else None,
+                min_samples=task.min_samples,
+            )
+            pool = max(0, pool - res.samples)
+            self.samples_spent += res.samples
+            self.tasks_compiled += 1
+            pending -= 1
+            if self.shared_context:
+                self.context.observe(task, res)
+            rec = self._store(task, res, grant, donor)
+            art = CompiledArtifact(task, rec, blocks_from_record(rec),
+                                   result=res)
+            if lower:
+                try:
+                    art.lower()
+                except LoweringError:
+                    pass  # no Pallas realization; blocks remain usable
+            out[idx] = art
+        return [out[i] for i in range(len(tasks))]
+
+    # ------------------------------------------------------------------
+    # winner selection + persistence
+    # ------------------------------------------------------------------
+    def _measured(self) -> MeasuredOracle:
+        if self._measured_oracle is None:
+            # hardware floors even under the interpreter: the re-rank must
+            # time the same launch configuration the record persists
+            self._measured_oracle = MeasuredOracle(
+                self.platform, repeats=self.measure_repeats,
+                hardware_floors=True,
+            )
+        return self._measured_oracle
+
+    def _pick_winner(self, res):
+        """Re-rank the search's top schedules by real timed execution.
+
+        The analytical winner is a *prediction*; before a record is
+        persisted for every model build to read, the top ``rerank_top``
+        candidates are lowered and wall-clock timed, and the measured
+        fastest wins.  Schedules with no measurable realization (or when
+        ``measure=False``) fall back to the analytical ranking.
+        """
+        if not self.measure:
+            return res.best_schedule, None
+        cands = list(res.top_schedules[: self.rerank_top])
+        if res.best_schedule is not None and res.best_schedule not in cands:
+            cands.insert(0, res.best_schedule)
+        mo = self._measured()
+        timed = []
+        for s in cands:
+            try:
+                timed.append((mo.measure(s), s))
+            except LoweringError:
+                continue
+        if not timed:
+            return res.best_schedule, None
+        t, winner = min(timed, key=lambda x: x[0])
+        measured = dict(
+            measured_latency_s=t,
+            provenance=dict(
+                oracle="measured",
+                interpret=mo.interpret,
+                warmup=mo.warmup,
+                repeats=mo.repeats,
+                candidates=len(timed),
+                search_oracle=res.oracle,
+                method=self.method,
+                llm=self.llm_name,
+            ),
+        )
+        return winner, measured
+
+    def _store(self, task: Task, res, grant: int,
+               donor: Optional[TaskOutcome]) -> TuningRecord:
+        winner, measured = self._pick_winner(res)
+        if task.kind == "attention":
+            blocks = AttentionBlocks.from_schedule(winner)
+        else:
+            blocks = GemmBlocks.from_schedule(winner)
+        prov: dict = dict(
+            oracle=res.oracle,
+            budget_granted=grant,
+            shared_context=self.shared_context,
+        )
+        if donor is not None:
+            prov["seeded_from"] = donor.workload_name
+            prov["donor_speedup"] = round(donor.best_speedup, 3)
+        if measured:
+            prov.update(measured["provenance"])
+        rec = TuningRecord(
+            key=record_key(self.platform.name, task.workload),
+            kind=task.kind,
+            params=dataclasses.asdict(blocks),
+            speedup=res.best_speedup,
+            samples=res.samples,
+            method=res.method,
+            platform=self.platform.name,
+            workload=task.workload.name,
+            dims={l.name: l.extent for l in task.workload.loops},
+            llm=res.llm,
+            oracle=res.oracle,
+            measured=measured is not None,
+            measured_latency_s=measured["measured_latency_s"]
+            if measured else None,
+            history=tuple(winner.history) if winner is not None else (),
+            provenance=prov,
+        )
+        return self.records.add(rec)

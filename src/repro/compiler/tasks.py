@@ -1,0 +1,165 @@
+"""Compilation tasks: what a ``CompilerSession`` is asked to optimize.
+
+A ``Task`` is one (workload, constraints, priority) unit of search work.
+``tasks_for_config`` enumerates the hot attention/GEMM shapes of an
+``ArchConfig`` at a serving context length and TP degree — the whole-arch
+tuning set ``python -m repro.launch.tune --all-kernels`` compiles in one
+shared-context session.
+
+Tasks in the same ``family`` (same operator with sequence-dependent dims
+varying) are the cross-seeding unit: the winning transform trace of an
+already-compiled family member primes the search of its siblings
+(``compiler/context.py``, LiteCoOp-style shared-tree reasoning).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..core.workloads import Workload, attention_workload, matmul_workload
+
+# ---------------------------------------------------------------------------
+# tuning workloads + tp-local shape helpers (moved here from core/autotuner,
+# which re-exports them for compatibility)
+# ---------------------------------------------------------------------------
+
+
+def local_attention_dims(cfg, tp: int = 1) -> tuple[int, int]:
+    """Post-SPMD per-device (query_heads, kv_heads) for an ArchConfig.
+
+    Mirrors ``dist.rules`` exactly: an axis shards over "model" only when
+    the padded head count divides the TP degree, otherwise it stays
+    replicated (e.g. KV heads when ``kv_heads < tp``).  Tuning against
+    these LOCAL extents is what makes the cached block specs legal for the
+    per-device Pallas launch after GSPMD partitioning — the global shapes
+    can suggest tiles larger than a device's actual slice.
+    """
+    def local(padded: int) -> int:
+        return padded // tp if tp > 0 and padded % tp == 0 else padded
+
+    return local(cfg.padded_heads(tp)), local(cfg.padded_kv_heads(tp))
+
+
+def attention_tuning_workload(
+    heads: int, seq_q: int, seq_kv: int, head_dim: int,
+    kv_heads: Optional[int] = None, name: str = "attn",
+) -> Workload:
+    """Attention workload keyed by the GQA shape.
+
+    ``kv_heads`` (default: MHA, == heads) is folded into the workload name
+    — and therefore the tuning-record key — because the K/V streaming
+    volume per query tile depends on the KV head count: a block_k tuned
+    for 32 local KV heads is not the right tile for 1 replicated head.
+    """
+    kv_heads = heads if kv_heads is None else kv_heads
+    if kv_heads != heads:
+        name = f"{name}.kv{kv_heads}"
+    return attention_workload(
+        name, heads=heads, seq_q=seq_q, seq_kv=seq_kv, head_dim=head_dim,
+        dtype_bytes=2,
+    )
+
+
+def gemm_tuning_workload(m: int, n: int, k: int, name: str = "gemm",
+                         epilogue: str = "none") -> Workload:
+    return matmul_workload(name, m=m, n=n, k=k, dtype_bytes=2,
+                           epilogue=epilogue)
+
+
+# ---------------------------------------------------------------------------
+# Task
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One unit of compilation work for a session.
+
+    ``priority``: higher compiles first (and therefore becomes the seed
+    donor for lower-priority siblings).  ``min_samples``/``max_samples``
+    are per-task constraints on the session's budget allocation; ``None``
+    max means "whatever the budget policy grants".
+    """
+
+    workload: Workload
+    kind: str                       # "attention" | "gemm"
+    priority: int = 0
+    min_samples: int = 4
+    max_samples: Optional[int] = None
+    family: str = ""                # cross-seeding group; "" -> derived
+    label: str = ""                 # human-readable provenance tag
+
+    @property
+    def family_key(self) -> str:
+        if self.family:
+            return self.family
+        # same operator, same non-sequence dims -> siblings.  Sequence axes
+        # (attention i/j, GEMM m) are what varies across serving shapes.
+        w = self.workload
+        dims = {l.name: l.extent for l in w.loops}
+        if self.kind == "attention":
+            return f"attention/h{dims.get('h')}/d{dims.get('k')}/" \
+                   f"{w.name.split('.')[-1] if '.kv' in w.name else 'mha'}"
+        return f"gemm/{w.epilogue_kind or 'none'}/" \
+               f"n{dims.get('j')}/k{dims.get('k')}"
+
+    def describe(self) -> str:
+        dims = ",".join(f"{l.name}={l.extent}" for l in self.workload.loops)
+        return f"{self.kind}:{self.workload.name}[{dims}]" \
+               + (f" ({self.label})" if self.label else "")
+
+
+def attention_task(
+    heads: int, seq_q: int, seq_kv: int, head_dim: int,
+    kv_heads: Optional[int] = None, priority: int = 0, label: str = "",
+    **kw,
+) -> Task:
+    w = attention_tuning_workload(heads, seq_q, seq_kv, head_dim,
+                                  kv_heads=kv_heads)
+    return Task(w, "attention", priority=priority, label=label, **kw)
+
+
+def gemm_task(
+    m: int, n: int, k: int, epilogue: str = "none", priority: int = 0,
+    label: str = "", **kw,
+) -> Task:
+    w = gemm_tuning_workload(m, n, k, epilogue=epilogue)
+    return Task(w, "gemm", priority=priority, label=label, **kw)
+
+
+def tasks_for_config(cfg, seq: int, tp: int = 1) -> list[Task]:
+    """All hot attention/GEMM shapes of one arch at (seq, tp).
+
+    Priorities follow flop share (attention and the MLP gate-up dominate a
+    decoder layer), so the budget policy spends first — and seeds from —
+    where the serving time goes.
+    """
+    tasks: list[Task] = []
+    if cfg.block not in ("xlstm",):
+        hq, hkv = local_attention_dims(cfg, tp)
+        tasks.append(attention_task(
+            hq, seq, seq, cfg.hd, kv_heads=hkv, priority=100,
+            label=f"{cfg.name} attention tp={tp}",
+        ))
+        qkv_n = (cfg.heads + 2 * cfg.kv_heads) * cfg.hd
+        tasks.append(gemm_task(
+            seq, qkv_n, cfg.d_model, priority=60,
+            label=f"{cfg.name} qkv-proj",
+        ))
+        tasks.append(gemm_task(
+            seq, cfg.d_model, cfg.heads * cfg.hd, priority=50,
+            label=f"{cfg.name} o-proj",
+        ))
+    if cfg.d_ff:
+        tasks.append(gemm_task(
+            seq, cfg.d_ff, cfg.d_model, epilogue="swiglu", priority=90,
+            label=f"{cfg.name} mlp gate-up",
+        ))
+        if cfg.block == "moe" and cfg.n_experts:
+            # per-expert token tile under uniform routing
+            m = max(8, (seq * max(1, cfg.top_k)) // cfg.n_experts)
+            tasks.append(gemm_task(
+                m, cfg.d_ff, cfg.d_model, priority=40,
+                label=f"{cfg.name} moe expert",
+            ))
+    return tasks

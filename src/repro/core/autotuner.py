@@ -1,132 +1,90 @@
-"""Ties the Reasoning Compiler's schedule search to runnable kernel configs.
+"""Deprecated kernel-tuning entry point — shim over ``repro.compiler``.
 
-This is what makes the paper's technique a *first-class feature* of the
-serving/training framework rather than a side experiment: per (workload x
-target) the tuner runs LLM-guided MCTS on the TPU platform profile, extracts
-the Pallas block parameters from the winning schedule, and persists them in
-a JSON tuning cache that ``repro.kernels.ops`` consumers look up at model
-build time.
+This module used to own the whole deploy-time tuning flow (LLM-guided MCTS
+per workload + a raw JSON cache).  That flow now lives behind the session
+API: ``repro.compiler.CompilerSession`` owns the LLM/oracle/record-store
+for its lifetime, compiles related shapes through a shared search context,
+and persists schema-versioned, provenance-carrying records
+(``repro/compiler/records.py``).
 
-Mapping (DESIGN.md §3): the VMEM-band tile extents (spatial levels 2..3) of
-a tuned schedule are the Pallas BlockSpec block shape; the reduction inner
-tile is ``bk``; a fused epilogue (ComputeLocation >= 0) selects the fused
-kernel variant (flash attention / fused gate-up).
+Everything importable from here keeps working:
+
+* ``AttentionBlocks`` / ``GemmBlocks`` / ``local_attention_dims`` /
+  ``attention_tuning_workload`` / ``gemm_tuning_workload`` are re-exported
+  from ``repro.compiler``.
+* ``KernelTuner`` is a thin wrapper that builds a single-task
+  ``CompilerSession`` per call, configured to reproduce the historical
+  behavior exactly (no shared context, no early stop, seed 0).  Its
+  ``cache_path`` JSON file is maintained as a *mirror* of the JSONL record
+  store for old readers; a corrupt/truncated cache file is quarantined
+  with a warning instead of crashing the constructor.
+
+New code should use ``CompilerSession`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import json
 import os
 from typing import Optional
 
-from .cost_model import HardwareOracle, get_platform
-# Block extraction lives with the lowering bridge now (core/lowering.py):
-# the same _band_extent/_quantize_block mapping that fills this cache also
-# instantiates the kernels the MeasuredOracle times, so the persisted
-# blocks are the measured blocks by construction.
-from .lowering import LoweringError, _band_extent, _quantize_block
-from .oracle import MeasuredOracle
-from .schedule import Schedule
-from .search import SearchResult, run_search
-from .workloads import (
+# Block extraction lives with the artifact layer now (compiler/artifacts
+# .py); the lowering helpers stay importable here for old tests.
+from ..compiler.artifacts import AttentionBlocks, GemmBlocks
+from ..compiler.records import (
+    LEGACY_JSON_PATH,
+    TuningRecords,
+    record_key,
+)
+from ..compiler.session import BudgetPolicy, CompilerSession
+from ..compiler.tasks import (
+    attention_task,
+    attention_tuning_workload,
+    gemm_task,
+    gemm_tuning_workload,
+    local_attention_dims,
+)
+from .cost_model import HardwareOracle, get_platform  # noqa: F401 (compat)
+from .lowering import LoweringError, _band_extent, _quantize_block  # noqa: F401
+from .schedule import Schedule  # noqa: F401 (compat)
+from .search import SearchResult, run_search  # noqa: F401 (compat)
+from .workloads import (  # noqa: F401 (compat)
     Workload,
     attention_workload,
     matmul_workload,
 )
 
-DEFAULT_CACHE_PATH = os.path.join(
-    os.path.dirname(__file__), "..", "configs", "tuning_cache.json"
-)
+DEFAULT_CACHE_PATH = LEGACY_JSON_PATH
 
 
-@dataclasses.dataclass
-class AttentionBlocks:
-    block_q: int = 128
-    block_k: int = 128
+def _records_for(cache_path: Optional[str]) -> TuningRecords:
+    """Map a legacy ``cache_path`` onto a JSONL record store.
 
-    @classmethod
-    def from_schedule(cls, s: Schedule) -> "AttentionBlocks":
-        w = s.workload
-        sq = w.loop_map["i"].extent
-        skv = w.loop_map["j"].extent
-        bq = _quantize_block(_band_extent(s, "i"), sq, lo=8, hi=512)
-        bk = _quantize_block(_band_extent(s, "j"), skv, lo=128, hi=1024)
-        return cls(block_q=bq, block_k=bk)
-
-
-@dataclasses.dataclass
-class GemmBlocks:
-    bm: int = 128
-    bn: int = 128
-    bk: int = 512
-
-    @classmethod
-    def from_schedule(cls, s: Schedule) -> "GemmBlocks":
-        w = s.workload
-        m = w.loop_map["i"].extent
-        n = w.loop_map["j"].extent
-        k = w.loop_map["k"].extent
-        return cls(
-            bm=_quantize_block(_band_extent(s, "i"), m, lo=8, hi=512),
-            bn=_quantize_block(_band_extent(s, "j"), n, lo=128, hi=1024),
-            bk=_quantize_block(_band_extent(s, "k"), k, lo=128, hi=2048),
-        )
-
-
-def local_attention_dims(cfg, tp: int = 1) -> tuple[int, int]:
-    """Post-SPMD per-device (query_heads, kv_heads) for an ArchConfig.
-
-    Mirrors ``dist.rules`` exactly: an axis shards over "model" only when
-    the padded head count divides the TP degree, otherwise it stays
-    replicated (e.g. KV heads when ``kv_heads < tp``).  Tuning against
-    these LOCAL extents is what makes the cached block specs legal for the
-    per-device Pallas launch after GSPMD partitioning — the global shapes
-    can suggest tiles larger than a device's actual slice.
+    ``<stem>.json`` stores records in ``<stem>.jsonl`` next to it and
+    treats the JSON file as the v0 input to migrate (quarantining it with
+    a warning when corrupt).  The module-default path resolves to the
+    process-wide default store so engines and ``kernels.ops`` lookups see
+    what a default-constructed tuner persists.
     """
-    def local(padded: int) -> int:
-        return padded // tp if tp > 0 and padded % tp == 0 else padded
+    if cache_path is None:
+        return TuningRecords(None)
+    if os.path.abspath(cache_path) == os.path.abspath(DEFAULT_CACHE_PATH):
+        from ..compiler.artifacts import default_records
 
-    return local(cfg.padded_heads(tp)), local(cfg.padded_kv_heads(tp))
-
-
-def attention_tuning_workload(
-    heads: int, seq_q: int, seq_kv: int, head_dim: int,
-    kv_heads: Optional[int] = None, name: str = "attn",
-) -> Workload:
-    """Attention workload keyed by the GQA shape.
-
-    ``kv_heads`` (default: MHA, == heads) is folded into the workload name
-    — and therefore the tuning-cache key — because the K/V streaming
-    volume per query tile depends on the KV head count: a block_k tuned
-    for 32 local KV heads is not the right tile for 1 replicated head.
-    """
-    kv_heads = heads if kv_heads is None else kv_heads
-    if kv_heads != heads:
-        name = f"{name}.kv{kv_heads}"
-    return attention_workload(
-        name, heads=heads, seq_q=seq_q, seq_kv=seq_kv, head_dim=head_dim,
-        dtype_bytes=2,
-    )
-
-
-def gemm_tuning_workload(m: int, n: int, k: int, name: str = "gemm",
-                         epilogue: str = "none") -> Workload:
-    return matmul_workload(name, m=m, n=n, k=k, dtype_bytes=2,
-                           epilogue=epilogue)
+        return default_records()
+    if cache_path.endswith(".json"):
+        return TuningRecords(cache_path[:-5] + ".jsonl",
+                             legacy_json=cache_path)
+    return TuningRecords(cache_path)
 
 
 class KernelTuner:
-    """LLM-guided-MCTS kernel autotuner with a persistent JSON cache.
+    """Deprecated: thin shim over ``repro.compiler.CompilerSession``.
 
-    ``oracle`` picks the search-time objective (``"analytical"`` default,
-    ``"measured"``/``"hybrid"`` per core/oracle.py).  ``measure=True``
-    additionally re-ranks the search's top ``rerank_top`` schedules by a
-    *real* timed kernel execution before persisting — the analytical
-    winner is a prediction; the persisted entry then carries
-    ``measured_latency_s`` plus provenance (oracle backend, interpret vs.
-    compiled, harness settings).  The deploy-time launcher
-    (``launch/tune.py``) turns measurement on by default; unit-scale
-    callers leave it off to keep CI cheap.
+    One tuner = one session with the historical single-task semantics
+    (per-task ``budget``, no shared context, no budget reallocation).
+    ``measure=True`` still re-ranks winners by real timed execution before
+    persisting; the persisted entries now carry schema-versioned
+    provenance in the JSONL store, with ``cache_path`` maintained as a
+    legacy JSON mirror.
     """
 
     def __init__(
@@ -150,31 +108,43 @@ class KernelTuner:
         self.measure = measure
         self.rerank_top = rerank_top
         self.measure_repeats = measure_repeats
-        self._measured_oracle: Optional[MeasuredOracle] = None
-        self._cache: dict = {}
-        if cache_path and os.path.exists(cache_path):
-            with open(cache_path) as f:
-                self._cache = json.load(f)
+        self.session = CompilerSession(
+            target=platform,
+            oracle=oracle,
+            proposer=llm,
+            method=method,
+            budget_policy=BudgetPolicy(
+                per_task=budget, early_stop=False, reallocate=False,
+            ),
+            records=_records_for(cache_path),
+            shared_context=False,
+            measure=measure,
+            rerank_top=rerank_top,
+            measure_repeats=measure_repeats,
+            seed=0,
+        )
+
+    @property
+    def _cache(self) -> dict:
+        """Legacy ``{key: entry}`` view of the record store."""
+        return self.session.records.legacy_view()
 
     def _key(self, w: Workload) -> str:
-        dims = ",".join(f"{l.name}={l.extent}" for l in w.loops)
-        return f"{self.platform}:{w.name}[{dims}]"
+        return record_key(self.platform, w)
+
+    def _mirror(self) -> None:
+        if self.cache_path and self.cache_path.endswith(".json"):
+            self.session.records.export_json(self.cache_path)
 
     def tune_attention(
         self, heads, seq_q, seq_kv, head_dim, kv_heads=None
     ) -> AttentionBlocks:
-        w = attention_tuning_workload(
-            heads, seq_q, seq_kv, head_dim, kv_heads=kv_heads
-        )
-        key = self._key(w)
-        if key in self._cache:
-            e = self._cache[key]
-            return AttentionBlocks(e["block_q"], e["block_k"])
-        res = self._search(w)
-        winner, measured = self._pick_winner(res)
-        blocks = AttentionBlocks.from_schedule(winner)
-        self._store(key, dataclasses.asdict(blocks), res, measured)
-        return blocks
+        (art,) = self.session.compile([
+            attention_task(heads, seq_q, seq_kv, head_dim, kv_heads=kv_heads)
+        ])
+        if not art.cache_hit:
+            self._mirror()
+        return art.blocks
 
     def lookup_attention(
         self, heads, seq_q, seq_kv, head_dim, kv_heads=None
@@ -184,86 +154,13 @@ class KernelTuner:
         w = attention_tuning_workload(
             heads, seq_q, seq_kv, head_dim, kv_heads=kv_heads
         )
-        e = self._cache.get(self._key(w))
-        return AttentionBlocks(e["block_q"], e["block_k"]) if e else None
+        rec = self.session.records.get(self._key(w))
+        return AttentionBlocks.from_params(rec.params) if rec else None
 
     def tune_gemm(self, m, n, k, epilogue="none") -> GemmBlocks:
-        w = gemm_tuning_workload(m, n, k, epilogue=epilogue)
-        key = self._key(w)
-        if key in self._cache:
-            e = self._cache[key]
-            return GemmBlocks(e["bm"], e["bn"], e["bk"])
-        res = self._search(w)
-        winner, measured = self._pick_winner(res)
-        blocks = GemmBlocks.from_schedule(winner)
-        self._store(key, dataclasses.asdict(blocks), res, measured)
-        return blocks
-
-    def _search(self, w: Workload) -> SearchResult:
-        return run_search(
-            w, self.platform, self.method, budget=self.budget, seed=0,
-            llm=self.llm, oracle=self.oracle,
-        )
-
-    def _measured(self) -> MeasuredOracle:
-        if self._measured_oracle is None:
-            # hardware floors even under the interpreter: the re-rank must
-            # time the same launch configuration from_schedule persists
-            self._measured_oracle = MeasuredOracle(
-                self.platform, repeats=self.measure_repeats,
-                hardware_floors=True,
-            )
-        return self._measured_oracle
-
-    def _pick_winner(self, res: SearchResult):
-        """Re-rank the search's top schedules by real timed execution.
-
-        The analytical winner is a *prediction*; before an entry is
-        persisted for every model build to read, the top ``rerank_top``
-        candidates are lowered and wall-clock timed, and the measured
-        fastest wins.  Schedules with no measurable realization (or when
-        ``measure=False``) fall back to the analytical ranking.
-        """
-        if not self.measure:
-            return res.best_schedule, None
-        cands = list(res.top_schedules[: self.rerank_top])
-        if res.best_schedule is not None and res.best_schedule not in cands:
-            cands.insert(0, res.best_schedule)
-        mo = self._measured()
-        timed = []
-        for s in cands:
-            try:
-                timed.append((mo.measure(s), s))
-            except LoweringError:
-                continue
-        if not timed:
-            return res.best_schedule, None
-        t, winner = min(timed, key=lambda x: x[0])
-        measured = dict(
-            measured_latency_s=t,
-            provenance=dict(
-                oracle="measured",
-                interpret=mo.interpret,
-                warmup=mo.warmup,
-                repeats=mo.repeats,
-                candidates=len(timed),
-                search_oracle=res.oracle,
-                method=self.method,
-                llm=self.llm,
-            ),
-        )
-        return winner, measured
-
-    def _store(self, key: str, params: dict, res: SearchResult,
-               measured: Optional[dict] = None) -> None:
-        entry = dict(
-            params, speedup=round(res.best_speedup, 3),
-            samples=res.samples, method=self.method,
-        )
-        if measured:
-            entry.update(measured)
-        self._cache[key] = entry
-        if self.cache_path:
-            os.makedirs(os.path.dirname(self.cache_path), exist_ok=True)
-            with open(self.cache_path, "w") as f:
-                json.dump(self._cache, f, indent=1, sort_keys=True)
+        (art,) = self.session.compile([
+            gemm_task(m, n, k, epilogue=epilogue)
+        ])
+        if not art.cache_hit:
+            self._mirror()
+        return art.blocks

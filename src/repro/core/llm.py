@@ -78,6 +78,9 @@ class Prompt:
     trace: tuple[TraceEntry, ...]  # [current, parent, grandparent, ...]
     available: tuple[str, ...]
     platform: Platform
+    # Cross-task context (compiler/context.ContextHint, duck-typed: has
+    # .prefer / .avoid family sets and .render()); None outside sessions.
+    hint: Optional[object] = None
 
 
 PROMPT_HEADER = (
@@ -104,11 +107,14 @@ def build_prompt(
     trace: Sequence[TraceEntry],
     platform: Platform,
     trace_depth: int = 2,
+    hint: Optional[object] = None,
 ) -> Prompt:
     """Serialize the hierarchical context into the Appendix-A prompt.
 
     ``trace_depth=2`` is the paper's default (parent + grandparent);
     ``trace_depth=3`` adds the great-grandparent (Table 5 ablation).
+    ``hint`` (a session's cross-task ContextHint) adds a "Cross-task
+    context" section distilled from an already-compiled sibling workload.
     """
     visible = tuple(trace[: trace_depth + 1])
     names = ["Current", "Parent", "Grandparent", "Great-Grandparent"]
@@ -133,12 +139,15 @@ def build_prompt(
         )
     avail = available_transforms(visible[0].schedule)
     parts.append(f"Available transformations:\n{', '.join(avail)}\n")
+    if hint is not None:
+        parts.append(hint.render())
     parts.append(PROMPT_TASK)
     return Prompt(
         text="\n".join(parts),
         trace=visible,
         available=tuple(avail),
         platform=platform,
+        hint=hint,
     )
 
 
@@ -430,6 +439,13 @@ class HeuristicReasonerLLM(LLMBase):
         inner_vec = s.tile_map[vec_axis][-1]
 
         avoid, prefer = self._credit_assignment(trace)
+        if prompt.hint is not None:
+            # cross-task context: a sibling's plateau statistics bias the
+            # same prefer/avoid mechanism credit assignment feeds —
+            # ancestor evidence (this search) still overrides donor
+            # evidence (the sibling's search)
+            prefer = prefer | (frozenset(prompt.hint.prefer) - avoid)
+            avoid = avoid | (frozenset(prompt.hint.avoid) - prefer)
 
         # Bottleneck triage (napkin math over the prompt's hardware summary):
         # compute ceiling vs. the compulsory-traffic memory floor decides
@@ -882,10 +898,15 @@ class LLMProposer:
         self.trace_depth = trace_depth
         self.stats = FallbackStats()
 
+    def _build_prompt(self, trace: Sequence[TraceEntry]) -> Prompt:
+        """Prompt-construction seam; a session's SeededProposer overrides
+        this to weave cross-task context into every prompt."""
+        return build_prompt(trace, self.platform, self.trace_depth)
+
     def propose(
         self, trace: Sequence[TraceEntry], rng: random.Random
     ) -> Proposal:
-        prompt = build_prompt(trace, self.platform, self.trace_depth)
+        prompt = self._build_prompt(trace)
         text = self.llm.complete(prompt, rng)
         prop = parse_response(text, trace[0].schedule, rng)
         self.stats.expansions += 1

@@ -15,13 +15,11 @@ import math
 import statistics
 from typing import Optional, Sequence
 
-from .cost_model import HardwareOracle, Platform, get_platform
-from .evolutionary import EvolutionaryConfig, EvolutionarySearch
-from .llm import FallbackStats, LLMProposer, make_llm
-from .mcts import MCTS, SearchCurve
-from .oracle import HybridOracle, MeasuredOracle, make_oracle
+from .cost_model import HardwareOracle, Platform
+from .llm import FallbackStats
+from .mcts import SearchCurve
+from .oracle import HybridOracle, MeasuredOracle
 from .schedule import Schedule
-from .workloads import Workload, get_workload
 
 METHODS = ("evolutionary", "mcts", "llm-mcts")
 
@@ -43,6 +41,11 @@ class SearchResult:
     # measured re-ranking (core/autotuner.py)
     oracle: str = "analytical"
     top_schedules: tuple = ()
+    # Per-transform-family net relative latency improvement summed over
+    # every evaluated (parent, child) edge of the search tree — the
+    # plateau statistics cross-task context distills into prefer/avoid
+    # hints (repro.compiler.context).  None for tree-less methods.
+    family_stats: Optional[dict] = None
 
 
 def _oracle_name(oracle) -> str:
@@ -69,49 +72,26 @@ def run_search(
 ) -> SearchResult:
     """Run one optimization strategy on one workload for `budget` samples.
 
+    .. deprecated:: thin shim over ``repro.compiler.CompilerSession`` —
+       each call builds a one-shot session (fresh LLM, fresh oracle, no
+       shared context), which reproduces the historical behavior exactly.
+       New callers should hold a ``CompilerSession`` and use
+       ``session.search`` / ``session.compile`` so oracle caches and
+       cross-task context persist across searches.
+
     ``oracle`` selects the objective backend: ``"analytical"`` (default,
     the machine model), ``"measured"`` (every node reward is a timed
     kernel execution via core/lowering.py), ``"hybrid"`` (measured node
     rewards, analytical rollouts — the paper's cost split), or any
     ``core.oracle.Oracle`` instance.
     """
-    if isinstance(workload, str):
-        workload = get_workload(workload)
-    plat = platform if isinstance(platform, Platform) else get_platform(platform)
-    oracle = make_oracle(oracle, plat)
-    oracle_name = _oracle_name(oracle)
+    from ..compiler.session import CompilerSession
 
-    if method == "evolutionary":
-        es = EvolutionarySearch(workload, oracle, seed=seed)
-        curve = es.search(budget)
-        best_t, best_s = es.best
-        return SearchResult(
-            workload.name, plat.name, method, curve,
-            es.baseline_latency / best_t, best_s, es.baseline_latency,
-            best_t, es.samples,
-            oracle=oracle_name, top_schedules=tuple(es.top_schedules()),
-        )
-
-    proposer = None
-    llm_name = None
-    if method == "llm-mcts":
-        proposer = LLMProposer(make_llm(llm), plat, trace_depth=trace_depth)
-        llm_name = llm
-    elif method != "mcts":
-        raise ValueError(f"unknown method {method!r}; known: {METHODS}")
-
-    searcher = MCTS(
-        workload, oracle, proposer=proposer, branching=branching,
-        seed=seed, **mcts_kwargs,
+    session = CompilerSession(
+        target=platform, oracle=oracle, proposer=llm, method=method,
+        shared_context=False, trace_depth=trace_depth, branching=branching,
     )
-    curve = searcher.search(budget)
-    return SearchResult(
-        workload.name, plat.name, method, curve,
-        searcher.best.speedup, searcher.best.schedule,
-        searcher.baseline_latency, searcher.best.latency_s, searcher.samples,
-        fallback=proposer.stats if proposer else None, llm=llm_name,
-        oracle=oracle_name, top_schedules=tuple(searcher.top_schedules()),
-    )
+    return session.search(workload, budget=budget, seed=seed, **mcts_kwargs)
 
 
 def mean_curve(curves: Sequence[SearchCurve], grid: Sequence[int]) -> list:

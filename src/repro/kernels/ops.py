@@ -13,7 +13,10 @@ Pallas directly.  Backends:
                     not lower on the CPU host platform (DESIGN.md §4).
 
 Block parameters default to kernel defaults but are overridden by the
-Reasoning Compiler's tuning cache (core/autotuner.py) when present.
+Reasoning Compiler's tuning records (repro.compiler) when present —
+either through the artifact set an engine binds onto ``cfg``
+(models/layers.py) or, for bare callers, the read-only record-store
+probe below.
 """
 from __future__ import annotations
 
@@ -45,7 +48,7 @@ def set_default_backend(name: str) -> None:
     _DEFAULT_BACKEND = name
 
 
-_TUNER = None  # lazy singleton over the persistent JSON tuning cache
+_TUNER = None  # lazy read handle on the default tuning-record store
 
 
 def tuned_attention_blocks(

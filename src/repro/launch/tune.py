@@ -1,26 +1,89 @@
 """Kernel autotuning launcher: the Reasoning Compiler as a deploy-time tool.
 
 ``python -m repro.launch.tune --arch tinyllama-1.1b --seq 4096 --budget 64``
-searches schedules for the arch's hot kernels on the TPU-v5e profile and
-persists the winning Pallas block parameters in the tuning cache that
-``repro.kernels.ops`` consumers read.
+opens one ``CompilerSession`` (one LLM, one oracle, one record database),
+compiles the arch's hot kernels through a shared search context, and
+persists provenance-carrying records in the versioned JSONL store that
+``repro.kernels.ops`` / engine artifact sets read.
+
+Extras over the v0 launcher:
+
+* ``--seqs 1024,4096,16384`` sweeps context lengths (one record per shape;
+  siblings seed each other's searches when ``--shared`` is on, default).
+* ``--all-kernels`` tunes the whole per-arch task set
+  (``compiler.tasks_for_config``: attention + qkv/o-proj/MLP GEMMs, MoE
+  expert GEMM) instead of the historical attention+MLP pair.
+* ``--migrate-cache`` one-shot migrates a v0 JSON tuning cache into the
+  versioned store and exits.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
+from ..compiler import (
+    BudgetPolicy,
+    CompilerSession,
+    TuningRecords,
+    attention_task,
+    default_records,
+    gemm_task,
+    local_attention_dims,
+    migrate_json_cache,
+    tasks_for_config,
+)
+from ..compiler.records import DEFAULT_RECORDS_PATH, LEGACY_JSON_PATH
 from ..configs.base import get_config
-from ..core.autotuner import KernelTuner, local_attention_dims
 
 
-def main():
+def _parse_seqs(args) -> list[int]:
+    if args.seqs:
+        seqs = [int(s) for s in args.seqs.replace(" ", "").split(",") if s]
+        if not seqs:
+            raise SystemExit("--seqs given but no lengths parsed")
+        return seqs
+    return [args.seq]
+
+
+def _tasks(cfg, seqs: list[int], tp: int, all_kernels: bool):
+    tasks = []
+    for i, seq in enumerate(sorted(seqs, reverse=True)):
+        # longest context first: it is the hardest search, and its winning
+        # trace seeds the shorter siblings
+        prio = 10 * (len(seqs) - i)
+        if all_kernels:
+            for t in tasks_for_config(cfg, seq, tp=tp):
+                tasks.append(dataclasses.replace(t, priority=t.priority + prio))
+        else:
+            # historical default: attention + MLP gate-up
+            if cfg.block not in ("xlstm",):
+                hq, hkv = local_attention_dims(cfg, tp)
+                tasks.append(attention_task(
+                    hq, seq, seq, cfg.hd, kv_heads=hkv, priority=100 + prio,
+                    label=f"{cfg.name} attention tp={tp} seq={seq}",
+                ))
+            if cfg.d_ff:
+                tasks.append(gemm_task(
+                    seq, cfg.d_ff, cfg.d_model, epilogue="swiglu",
+                    priority=90 + prio,
+                    label=f"{cfg.name} mlp gate-up seq={seq}",
+                ))
+    return tasks
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--seqs", default=None,
+                    help="comma-separated context-length sweep "
+                         "(e.g. 1024,4096,16384); one record per shape")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree: tune against the "
                          "post-SPMD per-device head counts")
-    ap.add_argument("--budget", type=int, default=64)
+    ap.add_argument("--budget", type=int, default=64,
+                    help="sample budget PER TASK (the session reallocates "
+                         "from converged tasks to stragglers)")
     ap.add_argument("--method", default="llm-mcts",
                     choices=["llm-mcts", "mcts", "evolutionary"])
     ap.add_argument("--llm", default="gpt-4o-mini")
@@ -34,23 +97,64 @@ def main():
                     help="re-rank the search winners by real timed kernel "
                          "execution before persisting (--no-measure for the "
                          "pure-analytical legacy behavior)")
-    args = ap.parse_args()
+    ap.add_argument("--all-kernels", action="store_true",
+                    help="tune the whole per-arch task set "
+                         "(attention + qkv/o-proj/MLP/MoE GEMMs)")
+    ap.add_argument("--shared", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="cross-task shared search context (trace seeding "
+                         "+ budget reallocation; --no-shared isolates "
+                         "every task)")
+    ap.add_argument("--records", default=None,
+                    help=f"record-store path (default "
+                         f"{DEFAULT_RECORDS_PATH})")
+    ap.add_argument("--migrate-cache", nargs="?", const=LEGACY_JSON_PATH,
+                    default=None, metavar="JSON_PATH",
+                    help="one-shot migration of a v0 JSON tuning cache "
+                         "into the versioned JSONL store, then exit")
+    args = ap.parse_args(argv)
 
+    records = TuningRecords(args.records) if args.records \
+        else default_records()
+
+    if args.migrate_cache is not None:
+        n = migrate_json_cache(args.migrate_cache, records)
+        print(f"migrated {n} record(s) from {args.migrate_cache} "
+              f"into {records.path}")
+        return 0
+
+    if not args.arch:
+        ap.error("--arch is required (unless --migrate-cache)")
     cfg = get_config(args.arch)
-    tuner = KernelTuner(method=args.method, budget=args.budget, llm=args.llm,
-                        oracle=args.oracle, measure=args.measure)
-    if cfg.block not in ("xlstm",):
-        hq, hkv = local_attention_dims(cfg, args.tp)
-        blocks = tuner.tune_attention(
-            hq, args.seq, args.seq, cfg.hd, kv_heads=hkv
-        )
-        print(f"{cfg.name} attention (tp={args.tp}, local {hq}q/{hkv}kv): "
-              f"block_q={blocks.block_q} block_k={blocks.block_k}")
-    if cfg.d_ff:
-        g = tuner.tune_gemm(args.seq, cfg.d_ff, cfg.d_model,
-                            epilogue="swiglu")
-        print(f"{cfg.name} mlp gate-up: bm={g.bm} bn={g.bn} bk={g.bk}")
-    print(f"tuning cache: {tuner.cache_path}")
+    seqs = _parse_seqs(args)
+    tasks = _tasks(cfg, seqs, args.tp, args.all_kernels)
+
+    session = CompilerSession(
+        target="tpu-v5e",
+        oracle=args.oracle,
+        proposer=args.llm,
+        method=args.method,
+        budget_policy=BudgetPolicy(per_task=args.budget,
+                                   reallocate=args.shared),
+        records=records,
+        shared_context=args.shared,
+        measure=args.measure,
+    )
+    artifacts = session.compile(tasks)
+    for art in artifacts:
+        rec = art.record
+        how = "cache-hit" if art.cache_hit else \
+            f"{rec.samples} samples, {rec.speedup:.2f}x"
+        seeded = rec.provenance.get("seeded_from")
+        if seeded:
+            how += f", seeded from {seeded}"
+        print(f"{art.task.describe()}: {art.blocks} ({how})")
+    print(f"session: {session.tasks_compiled} searched, "
+          f"{session.cache_hits} cache-hits, "
+          f"{session.samples_spent} samples, "
+          f"{session.seeds_played} cross-task seeds")
+    print(f"records: {records.path} ({len(records)} entries)")
+    return 0
 
 
 if __name__ == "__main__":

@@ -19,23 +19,24 @@ import jax.numpy as jnp
 from ..kernels import ops
 
 # ---------------------------------------------------------------------------
-# active tensor-parallel degree (for tuned-block lookups)
+# active tensor-parallel degree — DEPRECATED shim
 # ---------------------------------------------------------------------------
 
-# The tuning cache keys attention entries by the POST-SPMD per-device head
-# counts (autotuner.local_attention_dims), so kernel call sites need the
-# active mesh's tp degree at trace time.  Models deliberately hold no mesh;
-# the launcher that owns one (serve engines, launch/train) registers its tp
-# degree here and every traced attention_block picks tp-local tuned blocks
-# automatically (ROADMAP "sharding awareness, step 2").
+# Tuned-block resolution is artifact-based now: engines resolve a
+# ``repro.compiler.ArtifactSet`` at construction (bound to their mesh's tp
+# degree) and thread it through ``cfg`` (``ArchConfig.with_artifacts``),
+# so concurrent engines with different sharding no longer race on a
+# module global.  This shim remains only for legacy callers that trace a
+# bare model without an engine; ``attention_block`` consults it solely
+# when ``cfg`` carries no artifact set.
 _ACTIVE_TP = [1]
 
 
 def set_active_tp(tp: int) -> None:
-    """Register the tp degree of the mesh the next traces will run under
-    (pass ``dist.sharding.tp_degree(mesh)``).  Module-global: launchers
-    driving differently-sharded models concurrently must set it around
-    each trace."""
+    """DEPRECATED: register a process-global tp degree for tuned-block
+    lookups.  Superseded by ``cfg.with_artifacts(artifacts_for_config(
+    cfg, tp=...))`` — an explicit, engine-owned resolver.  Only consulted
+    when the traced ``cfg`` has no artifact set bound."""
     _ACTIVE_TP[0] = max(1, int(tp))
 
 
@@ -177,9 +178,11 @@ def attention_block(
 
     ``kv_override`` lets decode substitute the (cache-extended) K/V.
     ``cfg`` (an ``ArchConfig``, optional) enables the tuned-block lookup:
-    the Pallas launch gets (block_q, block_k) from the Reasoning
-    Compiler's tuning cache under the ``active_tp()``-local head counts
-    instead of the kernel defaults.
+    the Pallas launch gets (block_q, block_k) from the artifact set the
+    owning engine bound onto ``cfg`` (``repro.compiler.ArtifactSet``,
+    resolved against that engine's tp degree), or — for legacy callers
+    tracing without an engine — from the record store under the
+    deprecated ``active_tp()`` module global.
     """
     b, s, _ = x.shape
     q, k, v = attention_qkv(x, p, dims, positions, rope_theta)
@@ -189,9 +192,13 @@ def attention_block(
         k_all, v_all = k, v
     blocks = {}
     if cfg is not None:
-        bq, bk = ops.tuned_attention_blocks(
-            cfg, q.shape[2], k_all.shape[2], tp=active_tp()
-        )
+        art = getattr(cfg, "artifacts", None)
+        if art is not None:
+            bq, bk = art.attention_blocks(cfg, q.shape[2], k_all.shape[2])
+        else:
+            bq, bk = ops.tuned_attention_blocks(
+                cfg, q.shape[2], k_all.shape[2], tp=active_tp()
+            )
         blocks = dict(block_q=bq, block_k=bk)
     o = ops.attention(
         q, k_all, v_all, causal=causal, window=window, backend=backend,

@@ -72,6 +72,13 @@ class ServeEngine:
         (``init_params(cfg, key, tp)``) so the cache's padded KV-head
         axis lines up with the weights."""
         assert cfg.has_decode, f"{cfg.name} is encoder-only"
+        # Tuned-kernel resolution: bind an artifact set for this engine's
+        # tp degree onto cfg (repro.compiler).  Every trace below reads
+        # blocks from this engine-owned resolver — no module global, so
+        # differently-sharded engines in one process cannot race.
+        from ..compiler import bind_artifacts
+
+        cfg, self._block_tp = bind_artifacts(cfg, mesh=mesh, tp=tp)
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -82,14 +89,6 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}       # slot -> request
         self.positions = np.zeros((slots,), np.int32)
-
-        # The tp degree traced attention launches look up tuned blocks
-        # under (tp-LOCAL head counts, models/layers.py).  Registered
-        # again at every run/step entry: jit traces happen lazily (new
-        # prompt-length buckets), and another engine in the same process
-        # may have registered a different degree in between.
-        self._block_tp = shd.tp_degree(mesh) if mesh is not None else tp
-        self._set_active_tp()
 
         self.cache = M.init_cache(cfg, slots, max_len, tp)
         if mesh is not None:
@@ -137,10 +136,6 @@ class ServeEngine:
             batched_decode_fn(cfg, backend), donate_argnums=(2,)
         )
 
-    def _set_active_tp(self) -> None:
-        from ..models.layers import set_active_tp
-        set_active_tp(self._block_tp)
-
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -148,7 +143,6 @@ class ServeEngine:
 
     def run(self, max_iters: int = 10_000) -> list[Request]:
         """Drive until queue + active drain; returns completed requests."""
-        self._set_active_tp()
         finished: list[Request] = []
         for _ in range(max_iters):
             if not self.queue and not self.active:

@@ -85,6 +85,13 @@ class PagedServeEngine:
         (``init_params(cfg, key, tp)``) so the pool's padded KV-head axis
         lines up with the weights — and can shard over "model"."""
         assert cfg.has_decode, f"{cfg.name} is encoder-only"
+        # Tuned-kernel resolution: bind an artifact set for this engine's
+        # tp degree onto cfg (repro.compiler) — every lazy trace below
+        # resolves blocks from this engine-owned object, so concurrent
+        # engines with different sharding cannot race on a global.
+        from ..compiler import bind_artifacts
+
+        cfg, self._block_tp = bind_artifacts(cfg, mesh=mesh, tp=tp)
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -94,16 +101,6 @@ class PagedServeEngine:
         # dispatch (MoE capacity dropping is count-dependent), so it only
         # engages on dense blocks
         self.prefill_chunk = prefill_chunk if cfg.block == "dense" else 0
-
-        # tp-local tuned-block lookups at trace time (models/layers.py);
-        # re-registered on every run/step entry because traces are lazy
-        # and other engines may have overwritten the degree since
-        if mesh is not None:
-            from ..dist import sharding as shd
-            self._block_tp = shd.tp_degree(mesh)
-        else:
-            self._block_tp = tp
-        self._set_active_tp()
 
         self.kv = KV.PagedKVCache(
             cfg, slots, max_len, page_size=page_size, capacity=capacity,
@@ -134,10 +131,6 @@ class PagedServeEngine:
         )
         self._decode_j = self._build_decode()
 
-    def _set_active_tp(self) -> None:
-        from ..models.layers import set_active_tp
-        set_active_tp(self._block_tp)
-
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         assert len(req.prompt) < self.max_len, (
@@ -166,7 +159,6 @@ class PagedServeEngine:
 
     def step(self) -> list[Request]:
         """One engine iteration: admit, advance chunked prefills, decode."""
-        self._set_active_tp()
         self._admit()
         self._advance_prefill()
         return self._decode_iteration()
