@@ -1,19 +1,36 @@
-"""Serving benchmark: dense vs paged engine on one ragged workload.
+"""Serving benchmark: dense vs paged vs prefix-cached engines on one
+shared-prompt workload.
 
 The serving-side perf number EXPERIMENTS.md §Serve defines: identical
-request streams (seeded ragged prompt lengths, greedy decode) are pushed
-through the dense ``ServeEngine`` baseline, the ``PagedServeEngine``
-(batched bucketed prefill), and the paged engine with chunked prefill;
-each emits one CSV row of its ``EngineMetrics`` summary.  The batching win
-is directly visible as prefill_calls (jitted admission calls) dropping at
-equal-or-better tokens/sec, and paging shows up as mean page occupancy
-below the dense cache's 100% slot provisioning.
+request streams (seeded, a configurable fraction sharing one long system
+prompt, greedy decode) are pushed through
+
+  * the dense ``ServeEngine`` baseline,
+  * the ``PagedServeEngine`` (batched bucketed prefill),
+  * the paged engine with chunked prefill (batched lanes),
+  * the paged engine with the prompt-prefix cache on, and
+  * prefix + TTFT-SLO-aware admission,
+
+and each emits one CSV row of its ``EngineMetrics`` summary.  The batching
+win is directly visible as prefill_calls (jitted admission calls) dropping
+at equal-or-better tokens/sec; prefix caching as *strictly fewer prefill
+tokens computed* at a nonzero hit rate; paging as mean page occupancy
+below the dense cache's 100% slot provisioning.  Every variant is required
+to decode token-identically to dense (asserted below — the benchmark
+doubles as an end-to-end exactness check).
 
 CI runs a tiny smoke (env knobs below); paper-scale runs raise them:
 
   REPRO_SERVE_ARCH      (tinyllama-1.1b)  REPRO_SERVE_REQUESTS (8)
   REPRO_SERVE_SLOTS     (4)               REPRO_SERVE_MAX_NEW  (8)
   REPRO_SERVE_MAX_LEN   (128)             REPRO_SERVE_PAGE     (16)
+  REPRO_SERVE_SHARED_LEN (37: shared-prefix tokens, deliberately NOT
+  page-aligned so boundary pages exercise copy-on-write)
+  REPRO_SERVE_SHARED_FRAC (0.75)          REPRO_SERVE_TTFT_SLO (2.0 s)
+
+With REPRO_BENCH_JSON set, the deterministic counters land in
+``BENCH_serving.json`` for the CI regression gate
+(benchmarks/check_regression.py).
 """
 from __future__ import annotations
 
@@ -21,25 +38,34 @@ import os
 
 import numpy as np
 
-from .common import emit
+from .common import emit, emit_json
 
 
 def _env(name: str, default: int) -> int:
     return int(os.environ.get(name, str(default)))
 
 
-def _requests(cfg, n, max_new):
+def _requests(cfg, n, max_new, shared_len, shared_frac, page):
+    """Seeded stream: ``shared_frac`` of requests start with one common
+    ``shared_len``-token system prompt followed by a unique ragged tail;
+    the first request's tail spans one extra page so its last
+    shared-boundary page is full (later matches hit it partially → the
+    copy-on-write path runs)."""
     from repro.serve import Request
 
     rng = np.random.RandomState(0)
-    out = []
+    shared = rng.randint(0, cfg.vocab, size=shared_len).astype(np.int32)
+    out, n_shared = [], 0
     for uid in range(n):
-        plen = int(rng.randint(4, 48))
-        out.append(Request(
-            uid, rng.randint(0, cfg.vocab, size=plen).astype(np.int32),
-            max_new_tokens=max_new,
-        ))
-    return out
+        tail_len = int(rng.randint(4, 16)) if uid else page
+        tail = rng.randint(0, cfg.vocab, size=tail_len).astype(np.int32)
+        if rng.rand() < shared_frac or uid == 0:
+            prompt = np.concatenate([shared, tail])
+            n_shared += 1
+        else:
+            prompt = tail
+        out.append(Request(uid, prompt, max_new_tokens=max_new))
+    return out, n_shared
 
 
 def run() -> None:
@@ -56,6 +82,9 @@ def run() -> None:
     max_new = _env("REPRO_SERVE_MAX_NEW", 8)
     max_len = _env("REPRO_SERVE_MAX_LEN", 128)
     page = _env("REPRO_SERVE_PAGE", 16)
+    shared_len = _env("REPRO_SERVE_SHARED_LEN", 37)
+    shared_frac = float(os.environ.get("REPRO_SERVE_SHARED_FRAC", "0.75"))
+    ttft_slo = float(os.environ.get("REPRO_SERVE_TTFT_SLO", "2.0"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
     engines = {
@@ -66,40 +95,103 @@ def run() -> None:
         "paged_chunked": lambda: PagedServeEngine(
             cfg, params, slots=slots, max_len=max_len, page_size=page,
             prefill_chunk=32),
+        "paged_prefix": lambda: PagedServeEngine(
+            cfg, params, slots=slots, max_len=max_len, page_size=page,
+            prefix_cache=True),
+        "paged_prefix_slo": lambda: PagedServeEngine(
+            cfg, params, slots=slots, max_len=max_len, page_size=page,
+            prefix_cache=True, admission="slo", ttft_slo_s=ttft_slo),
     }
     outputs = {}
     summaries = {}
+    cow = {}
     for name, build in engines.items():
         eng = build()
-        for req in _requests(cfg, n_req, max_new):
+        reqs, n_shared = _requests(cfg, n_req, max_new, shared_len,
+                                   shared_frac, page)
+        for req in reqs:
             eng.submit(req)
         done = eng.run()
         outputs[name] = {r.uid: r.output for r in done}
         s = summaries[name] = eng.metrics.summary()
+        cow[name] = getattr(getattr(eng, "kv", None), "cow_copies", 0)
         emit(
             f"serving/{name}",
             s["tpot_mean_s"] * 1e6,
             f"tok_s={s['throughput_tok_s']:.2f}"
             f";ttft_ms={s['ttft_mean_s'] * 1e3:.1f}"
+            f";ttft_p99_ms={s['ttft_p99_s'] * 1e3:.1f}"
+            f";under_slo={s['ttft_under_slo']:.2f}"
             f";requests={s['requests']}"
             f";prefill_calls={s['prefill_calls']}"
             f";chunk_calls={s['prefill_chunk_calls']}"
+            f";prefill_tokens={s['prefill_tokens']}"
+            f";hit_rate={s['prefix_hit_rate']:.2f}"
+            f";cached_tokens={s['prefix_cached_tokens']}"
             f";decode_steps={s['decode_steps']}"
             f";occ={s['kv_occupancy_mean']:.2f}",
         )
-    # equivalence + batching-win guardrails: the benchmark doubles as an
-    # end-to-end check that every engine variant is exact and the paged
-    # path admits the same stream in fewer jitted prefill calls
-    for name in ("paged", "paged_chunked"):
+    # equivalence + batching + prefix guardrails: the benchmark doubles as
+    # an end-to-end check that every engine variant is exact, the paged
+    # path admits the same stream in fewer jitted prefill calls, and the
+    # prefix cache computes strictly fewer prefill tokens at a real hit
+    # rate — admission order (SLO policy) must never change tokens either
+    for name in engines:
+        if name == "dense":
+            continue
         assert outputs[name] == outputs["dense"], f"{name} != dense tokens"
     d, p = summaries["dense"], summaries["paged"]
+    px = summaries["paged_prefix"]
     assert p["prefill_calls"] <= d["prefill_calls"]
+    # a hit requires a donor indexed in an EARLIER admission round: with
+    # more shared requests than slots, at least one shared prompt admits
+    # after its donor finished prefilling (a lone shared prompt, or slots
+    # covering the whole stream in round one, legitimately never hits)
+    if n_shared > slots:
+        assert px["prefill_tokens"] < p["prefill_tokens"], \
+            "prefix cache did not skip any prefill compute"
+        assert px["prefix_hit_rate"] > 0 and px["prefix_cached_tokens"] > 0
     emit(
         "serving/batching_win",
         0.0,
         f"prefill_calls {d['prefill_calls']}->{p['prefill_calls']}"
         f";tok_s {d['throughput_tok_s']:.2f}->{p['throughput_tok_s']:.2f}",
     )
+    emit(
+        "serving/prefix_win",
+        0.0,
+        f"prefill_tokens {p['prefill_tokens']}->{px['prefill_tokens']}"
+        f";hit_rate={px['prefix_hit_rate']:.2f}"
+        f";cached={px['prefix_cached_tokens']}"
+        f";cow_copies={cow['paged_prefix']}",
+    )
+    emit_json("serving", {
+        "workload": {
+            "requests": n_req, "slots": slots, "max_new": max_new,
+            "max_len": max_len, "page_size": page,
+            "shared_len": shared_len, "shared_frac": shared_frac,
+        },
+        "token_equivalent": True,   # a mismatch asserted above (no emit)
+        "engines": {
+            name: {
+                "requests": s["requests"],
+                "prefill_calls": s["prefill_calls"],
+                "prefill_chunk_calls": s["prefill_chunk_calls"],
+                "prefill_tokens": s["prefill_tokens"],
+                "prefix_hit_rate": round(s["prefix_hit_rate"], 4),
+                "prefix_cached_tokens": s["prefix_cached_tokens"],
+                "decode_steps": s["decode_steps"],
+                "cow_copies": cow[name],
+                # timing columns ride along for humans; the regression
+                # gate only pins the deterministic counters above
+                "throughput_tok_s": round(s["throughput_tok_s"], 3),
+                "ttft_p50_s": round(s["ttft_p50_s"], 4),
+                "ttft_p99_s": round(s["ttft_p99_s"], 4),
+                "ttft_under_slo": round(s["ttft_under_slo"], 4),
+            }
+            for name, s in summaries.items()
+        },
+    })
 
 
 if __name__ == "__main__":

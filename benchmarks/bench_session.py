@@ -25,7 +25,7 @@ from repro.compiler import (
 )
 from repro.configs import get_config
 
-from .common import emit
+from .common import emit, emit_json
 
 ARCH = os.environ.get("REPRO_SESSION_ARCH", "tinyllama-1.1b")
 BUDGET = int(os.environ.get("REPRO_SESSION_BUDGET", "12"))
@@ -75,6 +75,12 @@ def run() -> dict:
             f"seeds={session.seeds_played};"
             f"blocks@256={arts[0].blocks.block_q}x{arts[0].blocks.block_k}",
         )
+        emit_json("session", {
+            "records": len(store),
+            "samples": session.samples_spent,
+            "seeds_played": session.seeds_played,
+            "artifacts_resolve": True,   # a mismatch asserted above
+        })
         return {"records": len(store), "samples": session.samples_spent}
 
 

@@ -1,0 +1,133 @@
+"""Bench-regression gate: diff smoke-emitted BENCH_*.json against
+checked-in baselines.
+
+CI's bench-smoke job runs the lowering/serving/session smokes with
+``REPRO_BENCH_JSON=<dir>`` so each drops a machine-readable
+``BENCH_<table>.json``; this gate then compares every baseline under
+``benchmarks/baselines/`` against the freshly emitted file and fails the
+job on regression.
+
+Baselines are self-describing: each holds the expected ``metrics`` tree
+plus a ``rules`` map from dotted metric path to a tolerance-banded
+comparison —
+
+  * ``eq`` — exact equality (token-equivalence flags, request counts),
+  * ``le`` — current must be <= expected (+tol): lower-is-better counters
+    like jitted prefill calls and computed prefill tokens may improve but
+    never regress,
+  * ``ge`` — current must be >= expected (−tol): higher-is-better numbers
+    like the prefix hit rate.
+
+Only deterministic counters carry rules; wall-clock columns ride along in
+the artifacts for humans but are never gated (CI machines are noisy).
+
+Usage:
+
+  python -m benchmarks.check_regression --out bench-out
+  python -m benchmarks.check_regression --out bench-out --update
+
+``--update`` rewrites each baseline's ``metrics`` from the current run
+(rules are preserved) — commit the result when a change legitimately
+moves a gated number.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+
+def _lookup(tree: dict, path: str):
+    cur = tree
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _check(path: str, rule: dict, got, want) -> str | None:
+    """None = pass; otherwise a human-readable failure line."""
+    if got is None:
+        return f"{path}: missing from current run"
+    if want is None:
+        return f"{path}: missing from baseline metrics"
+    cmp_ = rule.get("cmp", "eq")
+    tol = float(rule.get("tol", 0.0))
+    if cmp_ == "eq":
+        ok = got == want
+        detail = f"expected exactly {want!r}"
+    elif cmp_ == "le":
+        ok = got <= want + tol
+        detail = f"must be <= {want}{f' (+{tol})' if tol else ''}"
+    elif cmp_ == "ge":
+        ok = got >= want - tol
+        detail = f"must be >= {want}{f' (-{tol})' if tol else ''}"
+    else:
+        return f"{path}: unknown cmp {cmp_!r} in baseline rule"
+    return None if ok else f"{path}: got {got!r}, {detail}"
+
+
+def check(out_dir: str, baseline_dir: str = BASELINE_DIR,
+          update: bool = False) -> list[str]:
+    """Returns the list of failures (empty = green)."""
+    failures: list[str] = []
+    names = sorted(
+        f for f in os.listdir(baseline_dir)
+        if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not names:
+        return [f"no baselines found under {baseline_dir}"]
+    for name in names:
+        base_path = os.path.join(baseline_dir, name)
+        cur_path = os.path.join(out_dir, name)
+        with open(base_path) as f:
+            base = json.load(f)
+        if not os.path.exists(cur_path):
+            failures.append(f"{name}: not emitted by the smoke run "
+                            f"(expected {cur_path})")
+            continue
+        with open(cur_path) as f:
+            cur = json.load(f)
+        if update:
+            base["metrics"] = cur
+            with open(base_path, "w") as f:
+                json.dump(base, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"updated {base_path}")
+            continue
+        table_fail = []
+        for path, rule in sorted(base.get("rules", {}).items()):
+            err = _check(path, rule, _lookup(cur, path),
+                         _lookup(base.get("metrics", {}), path))
+            if err:
+                table_fail.append(f"  {name}: {err}")
+        if table_fail:
+            failures.extend(table_fail)
+        else:
+            print(f"{name}: {len(base.get('rules', {}))} gated metrics OK")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True,
+                    help="directory the smokes emitted BENCH_*.json into "
+                         "(REPRO_BENCH_JSON)")
+    ap.add_argument("--baselines", default=BASELINE_DIR)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baseline metrics from the current run")
+    args = ap.parse_args()
+    failures = check(args.out, args.baselines, update=args.update)
+    if failures:
+        print("BENCH REGRESSION:", file=sys.stderr)
+        for line in failures:
+            print(line, file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

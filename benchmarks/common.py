@@ -5,9 +5,16 @@ Every benchmark emits CSV rows ``name,us_per_call,derived`` where
 and ``derived`` packs the table's headline metrics.  Repeats/budget default
 low enough for CI; set REPRO_BENCH_REPEATS / REPRO_BENCH_BUDGET to approach
 the paper's 20-repeat protocol.
+
+When ``REPRO_BENCH_JSON`` names a directory, benchmarks additionally drop
+one machine-readable ``BENCH_<table>.json`` there via ``emit_json`` —
+that is what CI uploads as artifacts and what
+``benchmarks/check_regression.py`` diffs against the checked-in baselines
+under ``benchmarks/baselines/``.
 """
 from __future__ import annotations
 
+import json
 import os
 import statistics
 import sys
@@ -30,6 +37,20 @@ SAMPLE_GRID = [18, 36, 72, 150, 200, 600, 900, 1632, 3000]
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
     sys.stdout.flush()
+
+
+def emit_json(table: str, payload: dict) -> str | None:
+    """Write ``BENCH_<table>.json`` into $REPRO_BENCH_JSON (no-op when the
+    env knob is unset).  Returns the written path."""
+    out_dir = os.environ.get("REPRO_BENCH_JSON", "")
+    if not out_dir:
+        return None
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{table}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def geomean(xs) -> float:

@@ -34,10 +34,21 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunk long prompts (dense blocks): prompts over "
                          "this many tokens prefill incrementally, "
-                         "interleaved with decode")
+                         "interleaved with decode (lanes batch across "
+                         "slots)")
     ap.add_argument("--kv-pages", type=int, default=0,
                     help="page-pool capacity (0 = fully provisioned); "
                          "smaller overcommits and gates admission")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV pages across requests "
+                         "(radix index + copy-on-write; dense blocks)")
+    ap.add_argument("--admission", default="fcfs",
+                    choices=["fcfs", "spf", "slo"],
+                    help="admission policy: arrival order, shortest "
+                         "prefill first, or TTFT-SLO least laxity")
+    ap.add_argument("--ttft-slo", type=float, default=0.5,
+                    help="TTFT deadline (seconds) for --admission slo "
+                         "and the under-SLO report column")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -47,6 +58,8 @@ def main():
             cfg, params, slots=args.slots, max_len=args.max_len,
             page_size=args.page_size, prefill_chunk=args.prefill_chunk,
             capacity=args.kv_pages or None,
+            prefix_cache=args.prefix_cache, admission=args.admission,
+            ttft_slo_s=args.ttft_slo,
         )
     else:
         engine = ServeEngine(
@@ -64,13 +77,19 @@ def main():
     print(f"served {s['requests']}/{len(done)} requests, "
           f"{s['generated_tokens']} tokens in {s['wall_s']:.2f}s "
           f"({s['throughput_tok_s']:.1f} tok/s)")
-    print(f"  ttft mean {s['ttft_mean_s'] * 1e3:.1f}ms  "
+    print(f"  ttft mean {s['ttft_mean_s'] * 1e3:.1f}ms "
+          f"(p99 {s['ttft_p99_s'] * 1e3:.1f}ms, "
+          f"under-slo {s['ttft_under_slo']:.2f})  "
           f"tpot mean {s['tpot_mean_s'] * 1e3:.1f}ms  "
           f"prefill calls {s['prefill_calls']} "
           f"(+{s['prefill_chunk_calls']} chunks)  "
           f"decode steps {s['decode_steps']}  "
           f"kv occupancy {s['kv_occupancy_mean']:.2f} "
           f"(max {s['kv_occupancy_max']:.2f})")
+    if s["prefix_lookups"]:
+        print(f"  prefix cache: hit rate {s['prefix_hit_rate']:.2f}  "
+              f"cached tokens {s['prefix_cached_tokens']}  "
+              f"cow copies {engine.kv.cow_copies}")
 
 
 if __name__ == "__main__":

@@ -502,7 +502,9 @@ def prefill_chunk(
     params: dict,
     tokens: jax.Array,  # [B, C]: the next C prompt tokens of every row
     cache,
-    start,              # scalar int32: absolute position of tokens[:, 0]
+    start,              # int32: absolute position of tokens[:, 0] — a
+                        # scalar shared by all rows, or a [B] vector for
+                        # ragged multi-slot lanes (per-row progress)
     *,
     backend: Optional[str] = None,
 ):
@@ -513,6 +515,13 @@ def prefill_chunk(
     itself, and writes the chunk's K/V at those cache positions.  Returns
     (last-chunk-token logits, cache) — the logits only matter on the final
     chunk of a prompt.
+
+    A [B]-shaped ``start`` gives every batch row its own chunk offset, so
+    the serving scheduler can advance several mid-prefill slots — each at
+    a different point in its own prompt — in ONE jitted call (the batched
+    chunked-prefill lane).  Rows are fully independent (per-row positions,
+    per-row cache updates), so batching is bit-identical to B separate
+    calls.
 
     Only stateless (attention-cache) blocks are supported: recurrent-state
     blocks would need their scan state carried between chunks, and MoE
@@ -526,9 +535,25 @@ def prefill_chunk(
     x = _embed(cfg, params, {"tokens": tokens})
     b, c_len, _ = x.shape
     start = jnp.asarray(start, jnp.int32)
-    qpos = start + jnp.arange(c_len, dtype=jnp.int32)
-    positions = qpos[None].repeat(b, axis=0)
+    per_row = start.ndim == 1
+    if per_row:
+        positions = start[:, None] + jnp.arange(c_len, dtype=jnp.int32)[None]
+        qpos = positions                               # [B, C]
+    else:
+        qpos = start + jnp.arange(c_len, dtype=jnp.int32)   # [C]
+        positions = qpos[None].repeat(b, axis=0)
     dims = _dims_from_params(cfg, params)
+
+    def upd(leaf, vals, axis):
+        if not per_row:
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, vals, start, axis=axis
+            )
+        return jax.vmap(
+            lambda row, val, s: jax.lax.dynamic_update_slice_in_dim(
+                row, val, s, axis=axis - 1
+            )
+        )(leaf, vals, start)
 
     def body(carry, xs):
         lp, c = xs
@@ -536,11 +561,9 @@ def prefill_chunk(
         q, k_new, v_new = attention_qkv(
             h, lp["attn"], dims, positions, cfg.rope_theta
         )
-        k = jax.lax.dynamic_update_slice_in_dim(c["k"], k_new, start, axis=2)
-        v = jax.lax.dynamic_update_slice_in_dim(c["v"], v_new, start, axis=2)
-        kv_pos = jax.lax.dynamic_update_slice_in_dim(
-            c["kv_pos"], positions, start, axis=1
-        )
+        k = upd(c["k"], k_new, axis=2)
+        v = upd(c["v"], v_new, axis=2)
+        kv_pos = upd(c["kv_pos"], positions, axis=1)
         window = jnp.int32(cfg.window) if cfg.window else None
         o = _cached_attention(q, k, v, kv_pos, qpos, window)
         o = o.transpose(0, 2, 1, 3).reshape(b, c_len, dims.heads * dims.hd)
@@ -664,8 +687,10 @@ def _cached_attention(q, k, v, kv_pos, qpos, window):
 
     ``q`` is [B, Hq, C, hd] (C = 1 for single-token decode, > 1 for a
     prefill chunk); ``qpos`` the absolute position(s) of the C query
-    tokens — a scalar or a [C] vector.  Cache entries are valid when
-    ``0 <= kv_pos <= qpos`` (per query), i.e. causal within the chunk.
+    tokens — a scalar, a [C] vector shared by all rows, or a [B, C]
+    matrix (ragged chunk lanes: every row at its own offset).  Cache
+    entries are valid when ``0 <= kv_pos <= qpos`` (per query), i.e.
+    causal within the chunk.
     """
     b, hq, c, d = q.shape
     hkv = k.shape[1]
@@ -673,12 +698,13 @@ def _cached_attention(q, k, v, kv_pos, qpos, window):
     qpos = jnp.asarray(qpos, jnp.int32)
     if qpos.ndim == 0:
         qpos = qpos[None]
+    qp = qpos[:, :, None] if qpos.ndim == 2 else qpos[None, :, None]
     qg = q.reshape(b, hkv, group, c, d).astype(jnp.float32) / math.sqrt(d)
     s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
     kp = kv_pos[:, None, :]                       # [B, 1, r]
-    valid = (kp >= 0) & (kp <= qpos[None, :, None])   # [B, C, r]
+    valid = (kp >= 0) & (kp <= qp)                # [B, C, r]
     if window is not None:
-        valid &= kp > qpos[None, :, None] - window
+        valid &= kp > qp - window
     s = jnp.where(valid[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))

@@ -1,24 +1,42 @@
-"""Serving subsystem: batching, paged KV caching, and telemetry.
+"""Serving subsystem: batching, paged KV caching, prefix reuse, telemetry.
 
   * ``engine``    — dense-cache continuous-batching baseline engine.
   * ``kvcache``   — paged KV pool (fixed-size pages, per-slot page tables,
-                    free-list allocation, dense-compatibility view).
-  * ``scheduler`` — ``PagedServeEngine``: batched/bucketed + chunked
-                    prefill admission over the paged cache, donated
-                    mesh-committed buffers.
-  * ``metrics``   — TTFT / TPOT / throughput / occupancy counters
-                    (protocol: EXPERIMENTS.md §Serve).
+                    free-list allocation, per-page refcounts with
+                    copy-on-write sharing, prompt-prefix radix index,
+                    dense-compatibility view).
+  * ``scheduler`` — ``PagedServeEngine``: prefix-cached, policy-ordered,
+                    batched/bucketed + batched-chunked prefill admission
+                    over the paged cache, donated mesh-committed buffers.
+  * ``policy``    — pluggable admission ordering: FCFS,
+                    shortest-prefill-first, TTFT-SLO-aware least laxity.
+  * ``metrics``   — TTFT / TPOT / throughput / occupancy / prefix-hit
+                    counters (protocol: EXPERIMENTS.md §Serve).
 """
 from .engine import Request, ServeEngine
-from .kvcache import PagedKVCache
+from .kvcache import PagedKVCache, PrefixIndex, PrefixMatch
 from .metrics import EngineMetrics, RequestMetrics
+from .policy import (
+    AdmissionPolicy,
+    Candidate,
+    ShortestPrefillFirst,
+    SLOAware,
+    make_policy,
+)
 from .scheduler import PagedServeEngine
 
 __all__ = [
     "Request",
     "ServeEngine",
     "PagedKVCache",
+    "PrefixIndex",
+    "PrefixMatch",
     "PagedServeEngine",
     "EngineMetrics",
     "RequestMetrics",
+    "AdmissionPolicy",
+    "Candidate",
+    "ShortestPrefillFirst",
+    "SLOAware",
+    "make_policy",
 ]

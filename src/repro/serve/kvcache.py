@@ -1,4 +1,5 @@
-"""Paged KV cache: fixed-size pages, per-slot page tables, free-list alloc.
+"""Paged KV cache: fixed-size pages, per-slot page tables, free-list alloc,
+copy-on-write page sharing, and a prompt-prefix radix index.
 
 Dense decode caches waste memory on ragged prompts: every slot owns a full
 ``[layer, max_len]`` strip whether its request is 5 or 500 tokens long.
@@ -12,12 +13,28 @@ per-slot; paging only ever applies to per-token storage.
 Two layers:
 
   * **Functional core** — ``gather_view`` / ``scatter_pages`` /
-    ``scatter_token`` are pure, traceable pytree ops, so the scheduler can
-    fuse gather → decode → scatter into one jitted, buffer-donated call.
+    ``scatter_token`` / ``copy_page`` are pure, traceable pytree ops, so
+    the scheduler can fuse gather → decode → scatter into one jitted,
+    buffer-donated call.
   * **Stateful shell** — ``PagedKVCache`` owns the pool buffers plus the
-    host-side page table, free list, and admission reservations, and wraps
-    the core ops in cached ``jax.jit`` calls with pool donation so the
-    committed (mesh) layout is reused in place rather than re-materialized.
+    host-side page table, free list, per-page refcounts, and admission
+    reservations, and wraps the core ops in cached ``jax.jit`` calls with
+    pool donation so the committed (mesh) layout is reused in place rather
+    than re-materialized.
+
+**Prefix caching.**  Pages are reference-counted: a page may back several
+slots' tables at once (shared prompt prefixes) and survive its original
+request inside the ``PrefixIndex`` — a radix tree over page-granular token
+chunks that maps incoming prompts to already-computed KV pages
+(``match_prefix`` / ``index_prompt``).  ``release`` *decrefs* instead of
+invalidating: only pages whose refcount reaches zero return to the free
+list.  Writes must go through the copy-on-write guard
+(``ensure_writable``): mutating a page another slot or the index still
+references first copies it into a fresh page (invalidating the copied
+tail beyond the writer's valid token count), so sharers never observe the
+write.  Sharing is exact because every request's prompt starts at absolute
+position 0 — identical prefix tokens produce bit-identical K/V and RoPE
+phases, so a shared page is indistinguishable from a recomputed one.
 
 Exactness contract: ``dense_view()`` reproduces precisely the dense cache
 ``models.model.decode_step`` expects — unallocated table entries point at a
@@ -27,8 +44,10 @@ token-for-token identically (tests/test_serve.py equivalence test).
 """
 from __future__ import annotations
 
+import dataclasses
+import heapq
 import math
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +62,8 @@ PAGED_LEAVES = ("k", "v", "kv_pos")
 # Reserved pool pages.  NULL is never written: it backs every unallocated
 # page-table entry with an all-invalid (kv_pos = -1) page.  TRASH absorbs
 # writes from inactive decode rows (the batched decode step advances every
-# slot; rows without a request redirect their token write here).
+# slot; rows without a request redirect their token write here) and from
+# bulk-scatter rows covering shared pages (which must never be rewritten).
 NULL_PAGE = 0
 TRASH_PAGE = 1
 RESERVED_PAGES = 2
@@ -151,19 +171,202 @@ def reset_pages(pool: dict, page_ids: jax.Array) -> dict:
     return out
 
 
+def copy_page(pool: dict, src, dst, keep) -> dict:
+    """Copy-on-write core: duplicate page ``src`` onto page ``dst``.
+
+    Only the first ``keep`` in-page token positions stay valid in the copy
+    (``kv_pos`` beyond them resets to -1): the writer semantically owns a
+    prefix of the shared page, and the donor's tail tokens must never leak
+    into the writer's attention masks.  K/V tail bytes are left as-is —
+    they are masked, and the writer overwrites them next.
+    """
+    out = dict(pool)
+    for name, leaf in pool.items():
+        row = leaf[:, src]
+        if name == "kv_pos":                   # [L, page]
+            offs = jnp.arange(row.shape[-1])
+            row = jnp.where(offs[None, :] < keep, row, -1)
+        out[name] = leaf.at[:, dst].set(row)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# prompt-prefix radix index
+# ---------------------------------------------------------------------------
+
+
+class _RadixNode:
+    """One page-granular edge of the prefix trie: the ``page_size`` tokens
+    that label the edge, the pool page holding their K/V, and an LRU
+    stamp."""
+
+    __slots__ = ("children", "page", "tokens", "stamp")
+
+    def __init__(self, page: int = -1, tokens: Optional[np.ndarray] = None):
+        self.children: dict[bytes, _RadixNode] = {}
+        self.page = page
+        self.tokens = tokens
+        self.stamp = 0
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Result of a prompt-prefix lookup, already capped so at least one
+    prompt token is always recomputed (the suffix prefill must produce the
+    first generated token's logits)."""
+
+    tokens: int                      # total cached tokens (full + boundary)
+    pages: list                      # full-page ids, shareable as-is
+    boundary_page: Optional[int]     # page holding a *partial* chunk match
+    boundary_keep: int               # valid tokens inside the boundary page
+
+
+class PrefixIndex:
+    """Radix tree over page-granular token chunks → pool page ids.
+
+    Nodes hold one reference each on their page (taken by the cache when a
+    node is created, dropped on eviction), so indexed prefixes outlive the
+    requests that computed them.  Matching walks full ``page_size`` chunks
+    and finishes with a longest-common-prefix scan for a partial boundary
+    chunk; eviction removes least-recently-used leaves (``evict_lru``) so
+    interior pages — shared by more cached prompts — die last.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root = _RadixNode()
+        self._clock = 0
+        self.nodes = 0
+
+    def _touch(self, node: _RadixNode) -> None:
+        self._clock += 1
+        node.stamp = self._clock
+
+    def match(self, tokens: np.ndarray,
+              touch: bool = True) -> tuple[list, Optional[int], int]:
+        """Longest indexed prefix of ``tokens``: (full-page ids,
+        boundary page id or None, boundary matched-token count).
+        ``touch=False`` leaves the LRU stamps alone — for cost *estimates*
+        (admission-policy ranking), which must not perturb eviction order.
+        """
+        pg = self.page_size
+        tokens = np.asarray(tokens, np.int32)
+        node, pages = self.root, []
+        i = 0
+        while True:
+            chunk = tokens[i * pg: (i + 1) * pg]
+            child = None
+            if len(chunk) == pg:
+                child = node.children.get(chunk.tobytes())
+            if child is not None:
+                pages.append(child.page)
+                if touch:
+                    self._touch(child)
+                node = child
+                i += 1
+                continue
+            # partial boundary: longest common prefix with any child edge
+            best, m = None, 0
+            for cand in node.children.values():
+                lcp = int((np.cumprod(
+                    cand.tokens[: len(chunk)] == chunk
+                )).sum()) if len(chunk) else 0
+                if lcp > m:
+                    best, m = cand, lcp
+            if best is not None:
+                if touch:
+                    self._touch(best)
+                return pages, best.page, m
+            return pages, None, 0
+
+    def insert(
+        self,
+        tokens: np.ndarray,
+        pages: list,
+        on_new_ref: Callable[[int], None],
+    ) -> int:
+        """Index the full-page chunks of ``tokens`` backed by ``pages``
+        (one id per full chunk).  Existing nodes are deduplicated (the
+        original donor's page stays indexed); each newly created node calls
+        ``on_new_ref(page)`` so the cache can pin it.  Returns the number
+        of nodes created."""
+        pg = self.page_size
+        tokens = np.asarray(tokens, np.int32)
+        node, added = self.root, 0
+        for i, page in enumerate(pages):
+            chunk = tokens[i * pg: (i + 1) * pg]
+            if len(chunk) < pg:
+                break
+            key = chunk.tobytes()
+            child = node.children.get(key)
+            if child is None:
+                child = _RadixNode(page=page, tokens=chunk.copy())
+                node.children[key] = child
+                self.nodes += 1
+                added += 1
+                on_new_ref(page)
+            self._touch(child)
+            node = child
+        return added
+
+    def evict_lru(
+        self,
+        n_pages: int,
+        decref: Callable[[int], bool],
+        freeable: Callable[[int], bool] = lambda page: True,
+    ) -> int:
+        """Drop LRU leaves until ``decref`` reports ``n_pages`` pages hit
+        refcount zero.  Only leaves whose page ``freeable`` says would
+        actually free are touched: evicting a node whose page an active
+        slot still holds reclaims nothing, so those stay indexed (their
+        page frees later, when the slot releases).  One tree walk per
+        call — evicting a leaf exposes its parent as the next candidate
+        incrementally (heap by LRU stamp), so freeing a whole chain is
+        O(nodes + n log n), not O(n · nodes).  Returns pages freed."""
+        parents: dict[int, tuple] = {}   # id(node) -> (parent, key, node)
+        heap: list[tuple[int, int]] = []
+
+        def walk(node):
+            for key, child in node.children.items():
+                parents[id(child)] = (node, key, child)
+                if child.children:
+                    walk(child)
+                elif freeable(child.page):
+                    heapq.heappush(heap, (child.stamp, id(child)))
+
+        walk(self.root)
+        freed = 0
+        while freed < n_pages and heap:
+            _, nid = heapq.heappop(heap)
+            parent, key, node = parents.pop(nid)
+            if node.children or parent.children.get(key) is not node:
+                continue   # stale entry (already detached this call)
+            del parent.children[key]
+            self.nodes -= 1
+            if decref(node.page):
+                freed += 1
+            if parent is not self.root and not parent.children \
+                    and freeable(parent.page):
+                heapq.heappush(heap, (parent.stamp, id(parent)))
+        return freed
+
+
 # ---------------------------------------------------------------------------
 # stateful shell
 # ---------------------------------------------------------------------------
 
 
 class PagedKVCache:
-    """Page pool + page tables + free list for one serving engine.
+    """Page pool + page tables + free list + refcounts for one engine.
 
     ``capacity`` (data pages) defaults to full provisioning
     (slots × pages_per_slot = the dense cache's footprint); pass a smaller
     value to overcommit — admission then gates on reservations
     (``reserve``) and short prompts pack more requests into the same
-    memory, which is the whole point of paging.
+    memory, which is the whole point of paging.  ``prefix_cache=True``
+    attaches a ``PrefixIndex`` so finished prompts' full pages stay
+    resident for reuse; reservation shortfalls evict LRU index entries
+    before failing.
     """
 
     def __init__(
@@ -174,6 +377,7 @@ class PagedKVCache:
         *,
         page_size: int = 16,
         capacity: Optional[int] = None,
+        prefix_cache: bool = False,
         mesh=None,
         tp: int = 1,
     ):
@@ -231,10 +435,16 @@ class PagedKVCache:
         )
         self._owned: dict[int, list[int]] = {s: [] for s in range(slots)}
         self._reserved: dict[int, int] = {s: 0 for s in range(slots)}
+        # per-page reference counts: a page is live while any slot's table
+        # or the prefix index points at it; reserved pages stay at 0
+        self._ref = np.zeros((n_pool,), np.int32)
+        self.prefix = PrefixIndex(page_size) if prefix_cache else None
+        self.cow_copies = 0
 
         self._gather_j = jax.jit(gather_view)
         self._scatter_pages_j = jax.jit(scatter_pages, donate_argnums=(0,))
         self._reset_j = jax.jit(reset_pages, donate_argnums=(0,))
+        self._copy_page_j = jax.jit(copy_page, donate_argnums=(0,))
         # jitted + donated for the same reason as ServeEngine._slot_write:
         # an eager .at[].set would rebuild the state tree and silently
         # drop its mesh-committed sharding on every admission
@@ -262,15 +472,31 @@ class PagedKVCache:
         """Free pages not already promised to an admitted request."""
         return len(self._free) - sum(self._reserved.values())
 
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently referenced more than once (slots + index)."""
+        return int((self._ref > 1).sum())
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
     def occupancy(self) -> float:
         return self.used_pages / max(1, self.capacity)
 
-    def reserve(self, slot: int, n_pages: int) -> bool:
+    def reserve(self, slot: int, n_pages: int, cow: int = 0) -> bool:
         """Admission gate: promise ``n_pages`` of future growth to a slot.
-        Returns False (and reserves nothing) when the pool cannot honor the
-        worst case — the request must wait for a release."""
+        Pages the slot already holds (including attached shared prefix
+        pages) count toward the need; ``cow`` adds back pages that are
+        attached but will need a private copy (a shared boundary page
+        counts as held AND needs one fresh page).  A shortfall first
+        evicts LRU prefix entries; if the pool still cannot honor the
+        worst case, nothing is reserved and the request must wait for a
+        release."""
         n_pages = min(n_pages, self.pages_per_slot)
-        extra = max(0, n_pages - len(self._owned[slot]))
+        extra = max(0, n_pages - len(self._owned[slot]) + cow)
+        short = extra - self.available_pages
+        if short > 0 and self.prefix is not None:
+            self._evict_prefix(short)
         if extra > self.available_pages:
             return False
         self._reserved[slot] += extra
@@ -283,26 +509,75 @@ class PagedKVCache:
         own = self._owned[slot]
         while len(own) < need:
             page = self._free.pop()
+            self._ref[page] = 1
             own.append(page)
             self.table[slot, len(own) - 1] = page
             self._reserved[slot] = max(0, self._reserved[slot] - 1)
 
+    def attach(self, slot: int, page_ids: list) -> None:
+        """Share already-live pages into a slot's table (prefix reuse): each
+        page is increfed and appended after the slot's current pages.  The
+        slot must not write them without ``ensure_writable``."""
+        own = self._owned[slot]
+        for page in page_ids:
+            assert self._ref[page] >= 1, f"attach of dead page {page}"
+            self._ref[page] += 1
+            own.append(page)
+            self.table[slot, len(own) - 1] = page
+
+    def ensure_writable(self, slot: int, page_idx: int,
+                        n_valid: int) -> bool:
+        """Copy-on-write guard: before writing the slot's ``page_idx``-th
+        page, copy it into a fresh page if anyone else still references it.
+        ``n_valid`` is the slot's valid token count — copied in-page
+        positions at or beyond it are invalidated so the donor's tail never
+        leaks into this slot's masks.  Returns True when a copy happened."""
+        own = self._owned[slot]
+        if page_idx >= len(own):
+            return False
+        page = own[page_idx]
+        if self._ref[page] <= 1:
+            return False
+        if not self._free and self.prefix is not None:
+            self._evict_prefix(1)
+        assert self._free, "COW with an exhausted free list (reserve bug)"
+        new = self._free.pop()
+        self._reserved[slot] = max(0, self._reserved[slot] - 1)
+        self._ref[new] = 1
+        self._ref[page] -= 1
+        keep = max(0, min(n_valid - page_idx * self.page_size,
+                          self.page_size))
+        if self.pool:
+            self.pool = self._copy_page_j(
+                self.pool, jnp.int32(page), jnp.int32(new), jnp.int32(keep)
+            )
+        own[page_idx] = new
+        self.table[slot, page_idx] = new
+        self.cow_copies += 1
+        return True
+
     def release(self, slot: int, *, invalidate: bool = True) -> list[int]:
-        """Reclaim a finished request's pages; returns the freed ids.
+        """Decref a finished request's pages; returns the ids that actually
+        hit refcount zero (pages still shared — by other slots or the
+        prefix index — stay live).
 
         ``invalidate=False`` skips the jitted kv_pos reset so a caller
         freeing several slots in one engine step can batch the resets
         into a single ``invalidate()`` dispatch — freed pages MUST be
         invalidated before they can be reallocated."""
-        own = self._owned[slot]
-        if own:
+        freed: list[int] = []
+        for page in self._owned[slot]:
+            self._ref[page] -= 1
+            if self._ref[page] == 0:
+                freed.append(page)
+        if freed:
             if invalidate:
-                self.invalidate(own)
-            self._free.extend(own)
+                self.invalidate(freed)
+            self._free.extend(freed)
         self._owned[slot] = []
         self._reserved[slot] = 0
         self.table[slot] = NULL_PAGE
-        return own
+        return freed
 
     def invalidate(self, page_ids: list[int]) -> None:
         """One jitted reset marking the given pages all-invalid; the id
@@ -321,6 +596,84 @@ class PagedKVCache:
     def table_device(self) -> jax.Array:
         return jnp.asarray(self.table)
 
+    # -- prefix caching -----------------------------------------------------
+    def match_prefix(self, tokens: np.ndarray,
+                     touch: bool = True) -> Optional[PrefixMatch]:
+        """Longest cached prefix of a prompt, capped at len(tokens) - 1 so
+        the suffix prefill always recomputes at least one token (its logits
+        seed generation).  Returns None on a miss or when disabled.
+        ``touch=False`` = LRU-neutral estimate (see ``PrefixIndex.match``).
+        """
+        if self.prefix is None:
+            return None
+        tokens = np.asarray(tokens, np.int32)
+        pages, boundary, m = self.prefix.match(tokens, touch=touch)
+        pg = self.page_size
+        n = len(pages) * pg + m
+        n = min(n, len(tokens) - 1)
+        if n <= 0:
+            return None
+        k_full = n // pg
+        keep = n - k_full * pg
+        if keep == 0:
+            return PrefixMatch(n, pages[:k_full], None, 0)
+        # boundary source: a partial chunk match, or a full-page match
+        # pulled back by the cap — either way the page at chunk k_full
+        bpage = pages[k_full] if len(pages) > k_full else boundary
+        return PrefixMatch(n, pages[:k_full], bpage, keep)
+
+    def attach_prefix(self, slot: int, match: PrefixMatch) -> None:
+        """Seed a fresh slot from a prefix match: full pages AND the
+        boundary page (if any) attach shared — pure host bookkeeping, so
+        a caller whose reservation then fails rolls back with a cheap
+        ``release`` (nothing was copied, nothing needs invalidating, and
+        holding the refs protects the matched pages from eviction in the
+        meantime).  On success the caller must make the boundary page
+        private (``ensure_writable``) BEFORE any gather for this slot —
+        reserve with ``cow=1`` so a free page is guaranteed for the copy."""
+        assert not self._owned[slot], "attach_prefix needs an empty slot"
+        self.attach(slot, match.pages)
+        if match.boundary_page is not None:
+            self.attach(slot, [match.boundary_page])
+
+    def index_prompt(self, slot: int, tokens: np.ndarray) -> int:
+        """Register a prefilled prompt's FULL pages in the prefix index
+        (partial last pages are excluded: decode writes into them).  Each
+        newly indexed page gains one index-held reference."""
+        if self.prefix is None:
+            return 0
+        tokens = np.asarray(tokens, np.int32)
+        n_full = min(len(tokens) // self.page_size,
+                     len(self._owned[slot]))
+
+        def pin(page):
+            self._ref[page] += 1
+
+        return self.prefix.insert(
+            tokens, self._owned[slot][:n_full], pin
+        )
+
+    def _evict_prefix(self, n_pages: int) -> int:
+        """Reclaim ``n_pages`` by dropping LRU prefix-index entries whose
+        pages nobody else holds; freed pages are invalidated and returned
+        to the free list."""
+        freed: list[int] = []
+
+        def decref(page: int) -> bool:
+            self._ref[page] -= 1
+            if self._ref[page] == 0:
+                freed.append(page)
+                return True
+            return False
+
+        n = self.prefix.evict_lru(
+            n_pages, decref, freeable=lambda page: self._ref[page] == 1
+        )
+        if freed:
+            self.invalidate(freed)
+            self._free.extend(freed)
+        return n
+
     # -- data movement ------------------------------------------------------
     def dense_view(self) -> dict:
         """Materialize the dense cache ([L, slots, ...]) the model decodes
@@ -329,11 +682,22 @@ class PagedKVCache:
             else {}
         return {**view, **self.state}
 
+    def gather_row(self, slot: int) -> dict:
+        """Dense scratch row [L, 1, ...] of one slot's current pages —
+        seeds a chunked-prefill lane with its shared prefix K/V."""
+        if not self.pool:
+            return {}
+        return self._gather_j(
+            self.pool, jnp.asarray(self.table[slot: slot + 1])
+        )
+
     def write_prefill(self, slots: list[int], rows: dict) -> None:
         """Admit prefilled rows: paged leaves scatter into each slot's
         pages ([L, N, ..., S_pad, ...] with S_pad a page multiple, already
         allocated via ``alloc_upto``); state leaves land dense per slot.
-        Rows beyond ``len(slots)`` are padding and scatter into TRASH."""
+        Rows beyond ``len(slots)`` are padding and scatter into TRASH —
+        as do pages the slot only *shares* (refcount > 1): a bulk prefill
+        write never mutates another owner's data."""
         paged_rows, state_rows = split_leaves(rows)
         if paged_rows:
             n = next(iter(paged_rows.values())).shape[1]
@@ -343,7 +707,8 @@ class PagedKVCache:
             ids = np.full((n, n_pages), TRASH_PAGE, np.int32)
             for i, slot in enumerate(slots):
                 own = self._owned[slot][:n_pages]
-                ids[i, : len(own)] = own
+                for j, page in enumerate(own):
+                    ids[i, j] = page if self._ref[page] <= 1 else TRASH_PAGE
             self.pool = self._scatter_pages_j(
                 self.pool, paged_rows, jnp.asarray(ids)
             )

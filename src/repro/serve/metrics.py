@@ -57,8 +57,20 @@ def _p50(xs: list) -> float:
     return xs[len(xs) // 2]
 
 
+def _p99(xs: list) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+
+
 class EngineMetrics:
-    """Per-engine counters + the registry of per-request metrics."""
+    """Per-engine counters + the registry of per-request metrics.
+
+    ``ttft_slo_s`` (set by the engine when an SLO-aware policy is active,
+    or directly for reporting) turns on the ``ttft_under_slo`` summary
+    column: the fraction of finished requests whose TTFT met the deadline.
+    """
 
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self.clock = clock
@@ -69,10 +81,17 @@ class EngineMetrics:
         self.prefill_chunk_calls = 0
         self.prefill_tokens = 0        # real prompt tokens prefilled
         self.prefill_padded_tokens = 0  # bucket-padding overhead tokens
+        self.prefill_time_s = 0.0      # wall time inside prefill dispatches
+        # prefix-cache counters: hit rate is per admitted request; cached
+        # tokens are prompt tokens whose prefill was skipped entirely
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_cached_tokens = 0
         self.decode_steps = 0
         self.decode_tokens = 0
         self.admitted = 0
         self.finished = 0
+        self.ttft_slo_s: Optional[float] = None
         self._occ_sum = 0.0
         self._occ_max = 0.0
         self._occ_n = 0
@@ -101,6 +120,28 @@ class EngineMetrics:
         self._occ_max = max(self._occ_max, occ)
         self._occ_n += 1
 
+    def on_prefix_lookup(self, hit: bool, cached_tokens: int) -> None:
+        """One admission-time prefix-index lookup (hit ⇒ that many prompt
+        tokens skip prefill)."""
+        self.prefix_lookups += 1
+        if hit:
+            self.prefix_hits += 1
+            self.prefix_cached_tokens += cached_tokens
+
+    def on_prefill_time(self, dt: float, tokens: int) -> None:
+        """Wall time of one prefill dispatch — feeds the SLO policy's
+        seconds-per-token estimate.  ``tokens`` is informational (the
+        token counters are bumped by the engine alongside)."""
+        self.prefill_time_s += dt
+
+    def prefill_rate(self) -> float:
+        """Observed seconds per prefilled token (0.0 before any data):
+        the service-time model behind SLO-aware admission."""
+        done = self.prefill_tokens + self.prefill_padded_tokens
+        if done <= 0 or self.prefill_time_s <= 0:
+            return 0.0
+        return self.prefill_time_s / done
+
     # -- aggregation --------------------------------------------------------
     def summary(self) -> dict:
         done = [r for r in self.requests.values() if r.finish_t is not None]
@@ -110,6 +151,9 @@ class EngineMetrics:
         t0 = min((r.submit_t for r in done), default=0.0)
         t1 = max((r.finish_t for r in done), default=0.0)
         wall = max(t1 - t0, 1e-9)
+        under_slo = 1.0
+        if self.ttft_slo_s is not None and ttfts:
+            under_slo = sum(t <= self.ttft_slo_s for t in ttfts) / len(ttfts)
         return {
             "requests": len(done),
             "generated_tokens": toks,
@@ -117,11 +161,17 @@ class EngineMetrics:
             "throughput_tok_s": toks / wall,
             "ttft_mean_s": _mean(ttfts),
             "ttft_p50_s": _p50(ttfts),
+            "ttft_p99_s": _p99(ttfts),
+            "ttft_under_slo": under_slo,
             "tpot_mean_s": _mean(tpots),
             "prefill_calls": self.prefill_calls,
             "prefill_chunk_calls": self.prefill_chunk_calls,
             "prefill_tokens": self.prefill_tokens,
             "prefill_padded_tokens": self.prefill_padded_tokens,
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": self.prefix_hits / max(1, self.prefix_lookups),
+            "prefix_cached_tokens": self.prefix_cached_tokens,
             "decode_steps": self.decode_steps,
             "decode_tokens": self.decode_tokens,
             "kv_occupancy_mean": self._occ_sum / max(1, self._occ_n),

@@ -1,0 +1,110 @@
+"""Admission policies: which queued requests claim free slots first.
+
+``PagedServeEngine`` asks its policy to rank the queue every admission
+round; the engine then admits in ranked order until slots or KV pages run
+out.  Reservation failure stops the round (head-of-line blocking on the
+*ranked* head), which keeps the dense engine's deadlock-freedom argument:
+``submit()`` rejects requests that can never fit, so a failed reservation
+always resolves once a running request releases pages.
+
+Three built-ins:
+
+  * **fcfs** — arrival order; the PR-2 behavior and the fairness baseline.
+  * **spf** — shortest-prefill-first: fewest *tokens still to compute*
+    (prompt length minus any cached-prefix match) first.  Short requests
+    stop queueing behind long prompts, which collapses mean TTFT; the
+    prefix-cache interaction is the interesting part — a long prompt with
+    a hot cached prefix ranks as a short one.
+  * **slo** — TTFT-SLO-aware least-laxity ordering: rank by
+    ``(submit + slo) − now − est_prefill``, the latest instant admission
+    could start and still make the deadline.  The prefill-time estimate is
+    driven by ``metrics.py`` observations (measured seconds per prefilled
+    token so far), so the policy adapts to the platform without tuning.
+
+Custom policies subclass ``AdmissionPolicy`` and override ``order``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .metrics import EngineMetrics
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One queued request as the policy sees it."""
+
+    req: object                   # serve.engine.Request
+    submit_t: float               # metrics submit timestamp
+    prefill_tokens: int           # tokens still to compute (after prefix hit)
+    order: int                    # arrival index (FCFS tie-break)
+    match: object = None          # kvcache.PrefixMatch | None (estimate)
+
+
+class AdmissionPolicy:
+    """Base/FCFS policy: admit in arrival order."""
+
+    name = "fcfs"
+    # does ranking read Candidate.prefill_tokens?  When False the engine
+    # skips the per-candidate prefix-match estimates entirely (FCFS never
+    # looks, so walking the radix tree per queued prompt per round would
+    # be pure overhead)
+    needs_prefill_estimate = False
+
+    def order(self, cands: list[Candidate], now: float,
+              metrics: EngineMetrics) -> list[Candidate]:
+        return sorted(cands, key=lambda c: c.order)
+
+
+class ShortestPrefillFirst(AdmissionPolicy):
+    """Fewest prefill tokens first (cached prefixes count as free)."""
+
+    name = "spf"
+    needs_prefill_estimate = True
+
+    def order(self, cands, now, metrics):
+        return sorted(cands, key=lambda c: (c.prefill_tokens, c.order))
+
+
+class SLOAware(AdmissionPolicy):
+    """Least-laxity-first against a TTFT SLO.
+
+    Laxity = (submit + slo) − now − estimated prefill time; the request
+    closest to blowing its deadline (after accounting for how long its
+    remaining prefill will take at the observed rate) admits first.
+    Requests already past their deadline sort by how overdue they are.
+    """
+
+    name = "slo"
+    needs_prefill_estimate = True
+
+    def __init__(self, ttft_slo_s: float = 0.5):
+        assert ttft_slo_s > 0
+        self.ttft_slo_s = ttft_slo_s
+
+    def order(self, cands, now, metrics):
+        rate = metrics.prefill_rate()  # observed seconds / prefill token
+
+        def laxity(c: Candidate) -> float:
+            deadline = c.submit_t + self.ttft_slo_s
+            return deadline - now - c.prefill_tokens * rate
+
+        return sorted(cands, key=lambda c: (laxity(c), c.order))
+
+
+def make_policy(spec, ttft_slo_s: Optional[float] = None) -> AdmissionPolicy:
+    """Resolve an engine's ``admission=`` argument: a policy instance
+    passes through; a name picks a built-in (``ttft_slo_s`` feeds the SLO
+    policy's deadline)."""
+    if isinstance(spec, AdmissionPolicy):
+        return spec
+    if spec == "fcfs":
+        return AdmissionPolicy()
+    if spec == "spf":
+        return ShortestPrefillFirst()
+    if spec == "slo":
+        return SLOAware(ttft_slo_s or 0.5)
+    raise ValueError(
+        f"unknown admission policy {spec!r} (fcfs | spf | slo | instance)"
+    )

@@ -1,5 +1,5 @@
-"""Admission/step scheduler over the paged KV cache: batched + chunked
-prefill with continuous-batching decode.
+"""Admission/step scheduler over the paged KV cache: prefix-cached,
+policy-ordered, batched + chunked prefill with continuous-batching decode.
 
 The dense ``ServeEngine`` admits one request per jitted prefill call and
 re-traces per distinct prompt length — admission serializes behind
@@ -15,10 +15,24 @@ sharding" item names.  ``PagedServeEngine`` replaces that path with:
     — recurrent state (xlstm / hybrid) advances on every input token, MoE
     capacity dropping depends on the dispatched token count — still batch,
     but group by exact prompt length with no padding.
-  * **Chunked prefill** — prompts longer than ``prefill_chunk`` (dense
-    blocks only) advance one chunk per engine step via
-    ``models.model.prefill_chunk``, interleaved with decode so active
-    requests' TPOT does not stall behind a long admission.
+  * **Prefix caching** (``prefix_cache=True``, dense blocks) — admission
+    matches each prompt against the ``kvcache.PrefixIndex`` radix tree of
+    previously computed pages.  Matched full pages attach to the new slot
+    by reference (copy-on-write protected); only the unmatched suffix is
+    prefilled, through a chunk lane seeded with the shared prefix K/V.
+    Cached tokens skip prefill FLOPs entirely and the result is
+    bit-identical to a from-scratch prefill (same tokens at the same
+    absolute positions produce the same K/V).
+  * **Batched chunked prefill** — prompts longer than ``prefill_chunk``
+    (dense blocks only) and prefix-hit suffixes advance through *lanes*:
+    all mid-prefill slots with the same chunk length advance in ONE jitted
+    ``models.model.prefill_chunk`` call per length bucket (per-row start
+    offsets), interleaved with decode so active requests' TPOT does not
+    stall behind long admissions.
+  * **Policy-ordered admission** — a pluggable ``AdmissionPolicy``
+    (``policy.py``) ranks the queue each round: FCFS,
+    shortest-prefill-first, or TTFT-SLO-aware least-laxity ordering driven
+    by observed prefill rates.
   * **Paged KV + donated buffers** — cache storage lives in
     ``kvcache.PagedKVCache``; the decode step fuses page-gather → batched
     decode → token-scatter in ONE jitted call whose pool/state buffers are
@@ -27,14 +41,15 @@ sharding" item names.  ``PagedServeEngine`` replaces that path with:
     construction.
 
 Telemetry (``serve.metrics``) records TTFT / TPOT / throughput / page
-occupancy / jitted-call counts; ``benchmarks/bench_serving.py`` turns them
-into the repo's serving perf number (protocol: EXPERIMENTS.md §Serve).
+occupancy / prefix hit rate / jitted-call counts;
+``benchmarks/bench_serving.py`` turns them into the repo's serving perf
+number (protocol: EXPERIMENTS.md §Serve).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,14 +60,15 @@ from ..models import model as M
 from . import kvcache as KV
 from .engine import Request, batched_decode_fn
 from .metrics import EngineMetrics
+from .policy import AdmissionPolicy, Candidate, make_policy
 
 
 @dataclasses.dataclass
 class _Prefilling:
-    """A slot mid-way through chunked prefill."""
+    """A slot mid-way through (possibly prefix-seeded) chunked prefill."""
 
     req: Request
-    done: int      # prompt tokens already processed
+    done: int      # prompt tokens already processed (cached or computed)
     cache: dict    # dense scratch row [L, 1, ...] the chunks write into
 
 
@@ -64,7 +80,8 @@ def _next_pow2(n: int) -> int:
 
 
 class PagedServeEngine:
-    """Continuous batching over a paged KV cache with batched admission."""
+    """Continuous batching over a paged KV cache with batched admission,
+    prompt-prefix reuse, and policy-ordered scheduling."""
 
     def __init__(
         self,
@@ -76,6 +93,9 @@ class PagedServeEngine:
         page_size: int = 16,
         capacity: Optional[int] = None,
         prefill_chunk: int = 0,
+        prefix_cache: bool = False,
+        admission: Union[str, AdmissionPolicy] = "fcfs",
+        ttft_slo_s: Optional[float] = None,
         backend: Optional[str] = None,
         mesh=None,
         tp: int = 1,
@@ -97,14 +117,15 @@ class PagedServeEngine:
         self.max_len = max_len
         self.backend = backend
         self.mesh = mesh
-        # chunked prefill needs stateless layers AND deterministic token
-        # dispatch (MoE capacity dropping is count-dependent), so it only
-        # engages on dense blocks
+        # chunked prefill and prefix reuse need stateless layers AND
+        # deterministic token dispatch (MoE capacity dropping is
+        # count-dependent), so both only engage on dense blocks
         self.prefill_chunk = prefill_chunk if cfg.block == "dense" else 0
+        self.prefix_enabled = prefix_cache and cfg.block == "dense"
 
         self.kv = KV.PagedKVCache(
             cfg, slots, max_len, page_size=page_size, capacity=capacity,
-            mesh=mesh, tp=tp,
+            prefix_cache=self.prefix_enabled, mesh=mesh, tp=tp,
         )
         self.params = params
         if mesh is not None:
@@ -121,14 +142,16 @@ class PagedServeEngine:
         self.prefilling: dict[int, _Prefilling] = {}
         self.positions = np.zeros((slots,), np.int32)
         self.metrics = metrics or EngineMetrics()
+        self.policy = make_policy(admission, ttft_slo_s)
+        if ttft_slo_s is not None:
+            self.metrics.ttft_slo_s = ttft_slo_s
+        elif getattr(self.policy, "ttft_slo_s", None) is not None:
+            self.metrics.ttft_slo_s = self.policy.ttft_slo_s
+        self._arrivals = 0
+        self._arrival_order: dict[int, int] = {}
 
         self._prefill_jits: dict[int, callable] = {}
-        self._chunk_j = jax.jit(
-            lambda p, toks, cache, start: M.prefill_chunk(
-                cfg, p, toks, cache, start, backend=backend
-            ),
-            donate_argnums=(2,),
-        )
+        self._chunk_jits: dict[tuple[int, int], callable] = {}
         self._decode_j = self._build_decode()
 
     # -- public API ---------------------------------------------------------
@@ -146,6 +169,8 @@ class PagedServeEngine:
                 f"KV pages but the pool capacity is {self.kv.capacity}"
             )
         self.queue.append(req)
+        self._arrival_order[req.uid] = self._arrivals
+        self._arrivals += 1
         self.metrics.on_submit(req.uid, len(req.prompt))
 
     def run(self, max_iters: int = 10_000) -> list[Request]:
@@ -170,30 +195,112 @@ class PagedServeEngine:
             if s not in self.active and s not in self.prefilling
         ]
 
+    def _candidates(self, now: float) -> list[Candidate]:
+        """The queue as the admission policy sees it: arrival order,
+        submit time, and — only when the policy ranks by cost — the
+        prefill cost *after* prefix matching.  The estimate match is
+        LRU-neutral (``touch=False``) and admission re-matches fresh, so
+        ranking can neither perturb eviction order nor hand out pages
+        evicted between rank and admit."""
+        estimate = self.prefix_enabled \
+            and self.policy.needs_prefill_estimate
+        out = []
+        for req in self.queue:
+            match = self.kv.match_prefix(req.prompt, touch=False) \
+                if estimate else None
+            rm = self.metrics.requests.get(req.uid)
+            out.append(Candidate(
+                req=req,
+                submit_t=rm.submit_t if rm is not None else now,
+                prefill_tokens=len(req.prompt)
+                - (match.tokens if match else 0),
+                order=self._arrival_order.get(req.uid, 0),
+                match=match,
+            ))
+        return out
+
     def _admit(self) -> None:
+        free = self._free_slots()
+        if not free or not self.queue:
+            return
+        now = self.metrics.clock()
+        ranked = self.policy.order(self._candidates(now), now, self.metrics)
+        admitted: set[int] = set()
         batch: list[tuple[int, Request]] = []
-        for slot in self._free_slots():
-            if not self.queue:
+        for cand in ranked:
+            if not free:
                 break
-            req = self.queue[0]
+            req = cand.req
+            slot = free[0]
             budget = min(len(req.prompt) + req.max_new_tokens, self.max_len)
-            if not self.kv.reserve(slot, self.kv.pages_needed(budget)):
+            need = self.kv.pages_needed(budget)
+            # fresh match: ranking used a touch-free estimate, but pages
+            # may have been evicted while earlier candidates reserved
+            match = self.kv.match_prefix(req.prompt) \
+                if self.prefix_enabled else None
+            if match is not None:
+                # attach BEFORE reserving: host-only refs that (a) keep
+                # the matched pages safe from reserve's eviction and
+                # (b) roll back for free if the reservation fails — the
+                # boundary copy is deferred until admission is certain
+                self.kv.attach_prefix(slot, match)
+                ok = self.kv.reserve(
+                    slot, need,
+                    cow=1 if match.boundary_page is not None else 0,
+                )
+                if not ok and match.boundary_page is not None:
+                    # tight pool: give up the boundary copy and retry on
+                    # the full pages alone — detaching makes the donor's
+                    # boundary page itself evictable, which can be the
+                    # very page the shortfall needs
+                    self.kv.release(slot)
+                    trimmed = len(match.pages) * self.kv.page_size
+                    match = KV.PrefixMatch(trimmed, match.pages, None, 0) \
+                        if trimmed else None
+                    if match is not None:
+                        self.kv.attach_prefix(slot, match)
+                        ok = self.kv.reserve(slot, need)
+                    else:
+                        ok = self.kv.reserve(slot, need)
+                if not ok and match is not None:
+                    self.kv.release(slot)  # decrefs only: nothing copied
+            else:
+                ok = self.kv.reserve(slot, need)
+            if not ok:
                 # submit() rejects requests that can NEVER fit, so a failed
                 # reservation always resolves once running requests release
-                break  # FCFS: wait for a release to free pages
-            self.queue.popleft()
-            batch.append((slot, req))
-        if not batch:
-            return
-        if self.prefill_chunk:
-            long = [(s, r) for s, r in batch
-                    if len(r.prompt) > self.prefill_chunk]
-            batch = [(s, r) for s, r in batch
-                     if len(r.prompt) <= self.prefill_chunk]
-            for slot, req in long:
+                break  # wait for a release to free pages
+            if self.prefix_enabled:
+                self.metrics.on_prefix_lookup(
+                    match is not None, match.tokens if match else 0
+                )
+            if match is not None:
+                # lane seeded with the shared prefix K/V: only the suffix
+                # is ever computed.  The boundary page goes private first
+                # (reserve counted its copy), so the gather below never
+                # exposes a donor's tail tokens
+                if match.boundary_page is not None:
+                    self.kv.ensure_writable(
+                        slot, len(match.pages), match.tokens
+                    )
+                self.prefilling[slot] = _Prefilling(
+                    req, match.tokens, self.kv.gather_row(slot)
+                )
+            elif self.prefill_chunk and \
+                    len(req.prompt) > self.prefill_chunk:
                 self.prefilling[slot] = _Prefilling(
                     req, 0, M.init_cache(self.cfg, 1, self.kv.view_len)
                 )
+            else:
+                batch.append((slot, req))
+            free.pop(0)
+            admitted.add(req.uid)
+        if admitted:
+            self.queue = deque(
+                r for r in self.queue if r.uid not in admitted
+            )
+            for uid in admitted:   # only read while queued: keep bounded
+                self._arrival_order.pop(uid, None)
         self._batched_prefill(batch)
 
     def _bucket_tokens(self, plen: int) -> int:
@@ -260,6 +367,7 @@ class PagedServeEngine:
             for i, (_, req) in enumerate(group):
                 toks[i, : len(req.prompt)] = req.prompt
                 lens[i] = len(req.prompt)
+            t0 = self.metrics.clock()
             logits, rows = self._prefill_fn(cache_len)(
                 self.params, jnp.asarray(toks), jnp.asarray(lens)
             )
@@ -267,47 +375,96 @@ class PagedServeEngine:
             real = int(sum(len(r.prompt) for _, r in group))
             self.metrics.prefill_tokens += real
             self.metrics.prefill_padded_tokens += n_pad * s_tok - real
+            self.metrics.on_prefill_time(
+                self.metrics.clock() - t0, n_pad * s_tok
+            )
             for slot, req in group:
                 self.kv.alloc_upto(slot, len(req.prompt))
             self.kv.write_prefill([s for s, _ in group], rows)
             for i, (slot, req) in enumerate(group):
+                self.kv.index_prompt(slot, req.prompt)
                 req.output.append(int(jnp.argmax(logits[i, -1])))
                 self.active[slot] = req
                 self.positions[slot] = len(req.prompt)
                 self.metrics.on_first_token(req.uid)
 
-    # -- chunked prefill ----------------------------------------------------
+    # -- chunked prefill lanes ----------------------------------------------
+    def _chunk_fn(self, take: int, n: int):
+        """One jitted lane advance per (chunk length, lane count): the n
+        scratch rows concatenate inside the jit (donated), prefill_chunk
+        runs with per-row starts, and callers split the result back out."""
+        key = (take, n)
+        fn = self._chunk_jits.get(key)
+        if fn is None:
+            cfg, backend = self.cfg, self.backend
+
+            def f(p, toks, rows, starts):
+                cache = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=1), *rows
+                )
+                return M.prefill_chunk(
+                    cfg, p, toks, cache, starts, backend=backend
+                )
+
+            fn = self._chunk_jits[key] = jax.jit(f, donate_argnums=(2,))
+        return fn
+
     def _advance_prefill(self) -> None:
-        for slot, st in list(self.prefilling.items()):
-            plen = len(st.req.prompt)
-            take = min(self.prefill_chunk, plen - st.done)
-            chunk = np.asarray(st.req.prompt[st.done: st.done + take],
-                               np.int32)
-            logits, st.cache = self._chunk_j(
-                self.params, jnp.asarray(chunk)[None], st.cache,
-                jnp.int32(st.done),
+        """Advance every mid-prefill slot one chunk — batched: lanes with
+        the same chunk length this step share one jitted call (per-row
+        start offsets make the batch exact; see ``M.prefill_chunk``)."""
+        if not self.prefilling:
+            return
+        groups: dict[int, list[tuple[int, _Prefilling]]] = {}
+        for slot, st in self.prefilling.items():
+            remain = len(st.req.prompt) - st.done
+            take = min(self.prefill_chunk, remain) if self.prefill_chunk \
+                else remain
+            groups.setdefault(take, []).append((slot, st))
+        for take, group in groups.items():
+            n = len(group)
+            toks = np.zeros((n, take), np.int32)
+            starts = np.zeros((n,), np.int32)
+            for i, (_, st) in enumerate(group):
+                toks[i] = st.req.prompt[st.done: st.done + take]
+                starts[i] = st.done
+            rows = [st.cache for _, st in group]
+            t0 = self.metrics.clock()
+            logits, cache = self._chunk_fn(take, n)(
+                self.params, jnp.asarray(toks), rows, jnp.asarray(starts)
             )
             self.metrics.prefill_chunk_calls += 1
-            self.metrics.prefill_tokens += take
-            st.done += take
-            if st.done < plen:
-                continue
-            # final chunk: move the scratch row into pages and activate
-            self.kv.alloc_upto(slot, plen)
-            s_pad = self.kv.pages_needed(plen) * self.kv.page_size
-            rows = {
-                name: (leaf[:, :, :, :s_pad] if name in ("k", "v")
-                       else leaf[:, :, :s_pad] if name == "kv_pos"
-                       else leaf)
-                for name, leaf in st.cache.items()
-            }
-            self.kv.write_prefill([slot], rows)
-            req = st.req
-            req.output.append(int(jnp.argmax(logits[0, -1])))
-            self.active[slot] = req
-            self.positions[slot] = plen
-            self.metrics.on_first_token(req.uid)
-            del self.prefilling[slot]
+            self.metrics.prefill_tokens += n * take
+            self.metrics.on_prefill_time(
+                self.metrics.clock() - t0, n * take
+            )
+            for i, (slot, st) in enumerate(group):
+                st.cache = jax.tree.map(lambda x: x[:, i: i + 1], cache)
+                st.done += take
+                if st.done >= len(st.req.prompt):
+                    self._finish_lane(slot, st, logits[i])
+
+    def _finish_lane(self, slot: int, st: _Prefilling, logits_row) -> None:
+        """Final chunk done: move the scratch row into pages (shared
+        prefix pages are skipped — the bulk scatter never writes a page
+        with refcount > 1) and activate the request."""
+        req = st.req
+        plen = len(req.prompt)
+        self.kv.alloc_upto(slot, plen)
+        s_pad = self.kv.pages_needed(plen) * self.kv.page_size
+        rows = {
+            name: (leaf[:, :, :, :s_pad] if name in ("k", "v")
+                   else leaf[:, :, :s_pad] if name == "kv_pos"
+                   else leaf)
+            for name, leaf in st.cache.items()
+        }
+        self.kv.write_prefill([slot], rows)
+        self.kv.index_prompt(slot, req.prompt)
+        req.output.append(int(jnp.argmax(logits_row[-1])))
+        self.active[slot] = req
+        self.positions[slot] = plen
+        self.metrics.on_first_token(req.uid)
+        del self.prefilling[slot]
 
     # -- decode -------------------------------------------------------------
     def _build_decode(self):
@@ -336,7 +493,11 @@ class PagedServeEngine:
         toks = np.zeros((self.slots,), np.int32)
         for slot, req in self.active.items():
             toks[slot] = req.output[-1]
-            self.kv.alloc_upto(slot, int(self.positions[slot]) + 1)
+            pos = int(self.positions[slot])
+            self.kv.alloc_upto(slot, pos + 1)
+            # COW guard: decoding into a page another slot or the prefix
+            # index still references copies it first
+            self.kv.ensure_writable(slot, pos // self.kv.page_size, pos)
         page_ids, offs = self.kv.token_targets(self.positions)
         logits, self.kv.pool, self.kv.state = self._decode_j(
             self.params, jnp.asarray(toks), self.kv.pool, self.kv.state,

@@ -1,5 +1,7 @@
 """Paged KV cache unit tests: page accounting, gather/scatter round-trips,
-reservation gating — plus the serving metrics aggregation (fake clock)."""
+reservation gating, refcounted sharing + copy-on-write, the prompt-prefix
+radix index — plus the serving metrics aggregation (fake clock) and a
+property-style interleaving test proving the pool never leaks pages."""
 import jax.numpy as jnp
 import numpy as np
 
@@ -7,13 +9,42 @@ from repro.configs import get_config
 from repro.models import model as M
 from repro.serve.kvcache import (
     NULL_PAGE,
+    RESERVED_PAGES,
     PagedKVCache,
+    PrefixIndex,
     TRASH_PAGE,
     split_leaves,
 )
 from repro.serve.metrics import EngineMetrics
 
 CFG = get_config("tinyllama-1.1b", smoke=True)
+
+
+def _check_invariants(kv: PagedKVCache) -> None:
+    """The pool conservation law: every data page is exactly one of
+    free / live, refcounts equal the number of holders (slot tables +
+    prefix-index nodes), and the free list never double-lists a page."""
+    holders: dict[int, int] = {}
+    for own in kv._owned.values():
+        assert len(set(own)) == len(own), "slot owns a page twice"
+        for p in own:
+            holders[p] = holders.get(p, 0) + 1
+    if kv.prefix is not None:
+        def walk(node):
+            for child in node.children.values():
+                holders[child.page] = holders.get(child.page, 0) + 1
+                walk(child)
+        walk(kv.prefix.root)
+    live = set()
+    for p in range(RESERVED_PAGES, kv.capacity + RESERVED_PAGES):
+        assert kv._ref[p] == holders.get(p, 0), \
+            f"page {p}: ref {kv._ref[p]} != holders {holders.get(p, 0)}"
+        if holders.get(p, 0):
+            live.add(p)
+    free = set(kv._free)
+    assert len(free) == len(kv._free), "double-free: dup in free list"
+    assert free.isdisjoint(live), "page both free and referenced"
+    assert len(free) + len(live) == kv.capacity, "page leak"
 
 
 def _cache_rows(n, s_pad, seed=0):
@@ -118,6 +149,203 @@ def test_token_targets_trash_for_unallocated():
     pages, offs = kv.token_targets(np.asarray([4, 9], np.int32))
     assert pages[0] == kv.table[0, 0] and offs[0] == 4
     assert pages[1] == TRASH_PAGE            # slot 1 owns nothing
+
+
+def test_release_decrefs_shared_pages():
+    """Shared pages survive their original owner's release and free only
+    when the last holder lets go."""
+    kv = PagedKVCache(CFG, slots=2, max_len=64, page_size=16)
+    kv.reserve(0, 2)
+    kv.alloc_upto(0, 32)
+    pages = kv.page_ids(0)
+    kv.attach(1, pages)
+    assert kv.refcount(pages[0]) == 2 and kv.shared_pages == 2
+    assert kv.release(0) == []            # still held by slot 1
+    assert kv.used_pages == 2
+    _check_invariants(kv)
+    assert sorted(kv.release(1)) == sorted(pages)
+    assert kv.used_pages == 0
+    _check_invariants(kv)
+
+
+def test_cow_isolates_sharers():
+    """The acceptance bar for sharing: a shared page mutated by one slot
+    leaves the other slot's tokens unchanged."""
+    kv = PagedKVCache(CFG, slots=2, max_len=64, page_size=16)
+    rows = _cache_rows(1, 32)
+    kv.reserve(0, 2)
+    kv.alloc_upto(0, 32)
+    kv.write_prefill([0], rows)
+    before = {k: np.asarray(v).copy() for k, v in kv.dense_view().items()}
+    kv.attach(1, kv.page_ids(0))
+    # slot 1 owns tokens [0, 24): writing must COW page 1 first
+    assert kv.ensure_writable(1, 1, n_valid=24)
+    assert kv.cow_copies == 1
+    assert kv.page_ids(1)[1] != kv.page_ids(0)[1]   # private copy
+    assert kv.page_ids(1)[0] == kv.page_ids(0)[0]   # prefix still shared
+    _check_invariants(kv)
+    # the copy keeps slot 1's 8 in-page tokens and invalidates the donor
+    # tail; slot 0's own tail stays valid
+    mid = np.asarray(kv.dense_view()["kv_pos"])
+    assert (mid[:, 1, 16:24] == np.arange(16, 24)).all()
+    assert (mid[:, 1, 24:32] == -1).all()
+    assert (mid[:, 0, 24:32] == np.arange(24, 32)).all()
+    # mutate slot 1's strip: write_prefill skips the shared page 0
+    # (refcount 2) and lands new values only in the private copy
+    other = _cache_rows(1, 32, seed=9)
+    kv.write_prefill([1], other)
+    view = kv.dense_view()
+    for name in ("k", "v", "kv_pos"):
+        np.testing.assert_array_equal(          # slot 0 untouched
+            np.asarray(view[name])[:, 0], before[name][:, 0], err_msg=name
+        )
+    got_k = np.asarray(view["k"])
+    np.testing.assert_array_equal(              # shared page: donor data
+        got_k[:, 1, :, :16], np.asarray(rows["k"])[:, 0, :, :16]
+    )
+    np.testing.assert_array_equal(              # private page: new data
+        got_k[:, 1, :, 16:32], np.asarray(other["k"])[:, 0, :, 16:32]
+    )
+    _check_invariants(kv)
+
+
+def test_prefix_index_match_insert_evict():
+    idx = PrefixIndex(page_size=4)
+    refs: dict[int, int] = {}
+
+    def pin(p):
+        refs[p] = refs.get(p, 0) + 1
+
+    toks = np.arange(12, dtype=np.int32)
+    assert idx.insert(toks, [10, 11, 12], pin) == 3
+    assert refs == {10: 1, 11: 1, 12: 1}
+    # full re-insert dedups; a diverging prompt adds only its new chunk
+    assert idx.insert(toks, [20, 21, 22], pin) == 0
+    fork = np.concatenate([toks[:8], np.asarray([99, 98, 97, 96], np.int32)])
+    assert idx.insert(fork, [10, 11, 30], pin) == 1
+    # exact full-page walk
+    pages, boundary, m = idx.match(toks)
+    assert pages == [10, 11, 12] and boundary is None and m == 0
+    # partial tail chunk: longest-common-prefix against a child edge
+    pages, boundary, m = idx.match(toks[:10])
+    assert pages == [10, 11] and boundary == 12 and m == 2
+    # mid-page divergence
+    div = np.concatenate([toks[:6], np.asarray([77] * 6, np.int32)])
+    pages, boundary, m = idx.match(div)
+    assert pages == [10] and boundary == 11 and m == 2
+    # LRU eviction drops leaves first (12 was matched least recently
+    # after we touch the fork branch)
+    idx.match(fork)
+    dead: list[int] = []
+
+    def decref(p):
+        refs[p] -= 1
+        if refs[p] == 0:
+            dead.append(p)
+        return refs[p] == 0
+
+    assert idx.evict_lru(1, decref) == 1
+    assert dead == [12] and idx.nodes == 3
+
+
+def test_prefix_eviction_frees_pool_pressure():
+    """Index-held pages yield to admission demand: a reservation that
+    would fail evicts LRU prefix entries instead."""
+    kv = PagedKVCache(CFG, slots=2, max_len=64, page_size=16,
+                      capacity=4, prefix_cache=True)
+    kv.reserve(0, 2)
+    kv.alloc_upto(0, 32)
+    prompt = np.arange(32, dtype=np.int32)
+    assert kv.index_prompt(0, prompt) == 2
+    kv.release(0)                    # pages survive inside the index
+    assert kv.used_pages == 2 and kv.available_pages == 2
+    _check_invariants(kv)
+    assert kv.reserve(1, 4)          # forces eviction of both entries
+    assert kv.available_pages == 0 and kv.prefix.nodes == 0
+    _check_invariants(kv)
+
+
+def test_eviction_skips_slot_held_pages():
+    """A reservation shortfall must not wipe index entries whose pages
+    active slots still hold — evicting them reclaims nothing (regression:
+    evict_lru used to loop the whole tree empty with freed == 0)."""
+    kv = PagedKVCache(CFG, slots=2, max_len=64, page_size=16,
+                      capacity=4, prefix_cache=True)
+    kv.reserve(0, 2)
+    kv.alloc_upto(0, 32)
+    assert kv.index_prompt(0, np.arange(32, dtype=np.int32)) == 2
+    # slot 0 is still running: its indexed pages are not freeable, so the
+    # failing reservation leaves the index intact
+    assert not kv.reserve(1, 4)
+    assert kv.prefix.nodes == 2
+    _check_invariants(kv)
+    kv.release(0)                    # now only the index holds the pages
+    assert kv.reserve(1, 4)          # eviction frees them this time
+    assert kv.prefix.nodes == 0
+    _check_invariants(kv)
+
+
+def test_property_interleaved_share_cow_release_never_leaks():
+    """Property-style: random interleavings of admission (with prefix
+    adoption), sharing, COW writes, decode growth, release, and index
+    pressure keep the pool conserved — free + live == capacity, refcounts
+    == holders, no double-free — after every single operation."""
+    rng = np.random.RandomState(0)
+    kv = PagedKVCache(CFG, slots=3, max_len=64, page_size=8,
+                      capacity=16, prefix_cache=True)
+    vocab = 50
+    base = rng.randint(0, vocab, size=40).astype(np.int32)
+    active: dict[int, np.ndarray] = {}   # slot -> prompt
+    grown: dict[int, int] = {}           # slot -> token count incl. decode
+    for step in range(250):
+        op = rng.randint(0, 4)
+        free_slots = [s for s in range(3) if s not in active]
+        if op == 0 and free_slots:       # admit (maybe via prefix)
+            slot = free_slots[0]
+            plen = int(rng.randint(9, 40))
+            if rng.rand() < 0.6:         # shared-prefix prompt family
+                cut = int(rng.randint(8, len(base)))
+                prompt = np.concatenate([
+                    base[:cut],
+                    rng.randint(0, vocab, size=max(1, plen - cut)),
+                ]).astype(np.int32)
+            else:
+                prompt = rng.randint(0, vocab, size=plen).astype(np.int32)
+            match = kv.match_prefix(prompt)
+            if match is not None:
+                kv.attach_prefix(slot, match)
+            cow = 1 if match is not None \
+                and match.boundary_page is not None else 0
+            if kv.reserve(slot, kv.pages_needed(len(prompt) + 8), cow=cow):
+                if cow:
+                    kv.ensure_writable(slot, len(match.pages),
+                                       match.tokens)
+                kv.alloc_upto(slot, len(prompt))
+                kv.index_prompt(slot, prompt)
+                active[slot] = prompt
+                grown[slot] = len(prompt)
+            elif match is not None:
+                kv.release(slot)         # rollback, like the scheduler
+        elif op == 1 and active:         # decode growth + COW guard
+            slot = list(active)[rng.randint(len(active))]
+            pos = grown[slot]
+            if pos + 1 < kv.view_len:
+                kv.alloc_upto(slot, pos + 1)
+                kv.ensure_writable(slot, pos // kv.page_size, pos)
+                grown[slot] = pos + 1
+        elif op == 2 and active:         # finish + release
+            slot = list(active)[rng.randint(len(active))]
+            kv.release(slot)
+            del active[slot], grown[slot]
+        else:                            # index pressure
+            kv._evict_prefix(1)
+        _check_invariants(kv)
+    for slot in list(active):
+        kv.release(slot)
+        _check_invariants(kv)
+    kv._evict_prefix(kv.capacity)
+    _check_invariants(kv)
+    assert kv.used_pages == 0            # everything came back
 
 
 def test_metrics_summary_fake_clock():

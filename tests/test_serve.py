@@ -201,6 +201,148 @@ def test_paged_rejects_oversized_request(params):
                              max_new_tokens=20))
 
 
+@pytest.mark.slow
+def test_prefix_cache_matches_dense_shared_prompts(params):
+    """The prefix-caching acceptance bar: on a shared-prefix stream the
+    prefix engine decodes token-for-token identically to dense AND to the
+    prefix-off paged engine, while computing strictly fewer prefill
+    tokens and reporting a nonzero hit rate."""
+    rng = np.random.RandomState(7)
+    shared = rng.randint(0, CFG.vocab, size=37).astype(np.int32)
+    prompts = {}
+    for u in range(6):
+        # the first prompt runs past the page-16 boundary at 48 tokens so
+        # its third page is full and indexable: followers matching only 37
+        # shared tokens then hit it PARTIALLY, forcing boundary COW
+        n_tail = 13 if u == 0 else int(rng.randint(3, 12))
+        tail = rng.randint(0, CFG.vocab, size=n_tail).astype(np.int32)
+        prompts[u] = np.concatenate([shared, tail]) if u != 2 else tail
+    dense = _run_engine(ServeEngine(CFG, params, slots=2, max_len=64),
+                        prompts, max_new=4)
+    off = PagedServeEngine(CFG, params, slots=2, max_len=64, page_size=16)
+    got_off = _run_engine(off, prompts, max_new=4)
+    on = PagedServeEngine(CFG, params, slots=2, max_len=64, page_size=16,
+                          prefix_cache=True)
+    got_on = _run_engine(on, prompts, max_new=4)
+    for u in dense:
+        assert dense[u] == got_off[u] == got_on[u], u
+    s_on, s_off = on.metrics.summary(), off.metrics.summary()
+    assert s_on["prefill_tokens"] < s_off["prefill_tokens"]
+    assert s_on["prefix_hit_rate"] > 0 and s_on["prefix_cached_tokens"] > 0
+    # the 37-token prefix is not page-aligned: boundary pages went
+    # through copy-on-write without perturbing any donor
+    assert on.kv.cow_copies > 0
+
+
+def test_prefix_cow_end_to_end(params):
+    """Boundary-page COW in the full engine: a follower sharing 37 of a
+    50-token donor prompt copies the donor's third page, and both decode
+    exactly as without any sharing."""
+    rng = np.random.RandomState(8)
+    shared = rng.randint(0, CFG.vocab, size=37).astype(np.int32)
+    prompts = {
+        0: np.concatenate([shared, rng.randint(0, CFG.vocab, size=13)
+                           .astype(np.int32)]),
+        1: np.concatenate([shared, rng.randint(0, CFG.vocab, size=9)
+                           .astype(np.int32)]),
+    }
+    plain = _run_engine(
+        PagedServeEngine(CFG, params, slots=1, max_len=64, page_size=16),
+        prompts, max_new=4,
+    )
+    # capacity=8 gives the pool headroom for the boundary copy; a fully
+    # provisioned slots=1 pool instead trims the match to full pages
+    # (exercised below) rather than paying the copy
+    pref = PagedServeEngine(CFG, params, slots=1, max_len=64, page_size=16,
+                            capacity=8, prefix_cache=True)
+    got = _run_engine(pref, prompts, max_new=4)
+    assert got == plain
+    assert pref.kv.cow_copies == 1
+    assert pref.metrics.prefix_cached_tokens == 37
+    # tight pool: same stream, fully provisioned — the reservation cannot
+    # afford the copy, the boundary trims away, and the follower still
+    # reuses the donor's two full pages (and still decodes identically)
+    tight = PagedServeEngine(CFG, params, slots=1, max_len=64, page_size=16,
+                             prefix_cache=True)
+    got2 = _run_engine(tight, prompts, max_new=4)
+    assert got2 == plain
+    assert tight.kv.cow_copies == 0
+    assert tight.metrics.prefix_cached_tokens == 32
+
+
+@pytest.mark.slow
+def test_chunk_lanes_batch_concurrent_prefills(params):
+    """Two equally long prompts admitted together advance their chunked
+    prefill in ONE jitted call per chunk — half the calls of the per-slot
+    path — and still match the unchunked engine exactly."""
+    rng = np.random.RandomState(9)
+    prompts = {u: rng.randint(0, CFG.vocab, size=40).astype(np.int32)
+               for u in range(2)}
+    ref = _run_engine(
+        PagedServeEngine(CFG, params, slots=2, max_len=64, page_size=16),
+        prompts, max_new=4,
+    )
+    eng = PagedServeEngine(CFG, params, slots=2, max_len=64, page_size=16,
+                           prefill_chunk=16)
+    got = _run_engine(eng, prompts, max_new=4)
+    assert got == ref
+    # 40 tokens = chunks of 16/16/8 per slot; lanes batch both slots
+    assert eng.metrics.prefill_chunk_calls == 3
+
+
+def test_admission_policy_ordering():
+    """Policy unit semantics on synthetic candidates (no engines)."""
+    from repro.serve import (
+        AdmissionPolicy, Candidate, ShortestPrefillFirst, SLOAware,
+        make_policy,
+    )
+    from repro.serve.metrics import EngineMetrics
+
+    m = EngineMetrics(clock=lambda: 0.0)
+    cands = [
+        Candidate(req=None, submit_t=0.0, prefill_tokens=100, order=0),
+        Candidate(req=None, submit_t=1.0, prefill_tokens=5, order=1),
+        Candidate(req=None, submit_t=2.0, prefill_tokens=40, order=2),
+    ]
+    assert [c.order for c in AdmissionPolicy().order(cands, 3.0, m)] \
+        == [0, 1, 2]
+    assert [c.order for c in ShortestPrefillFirst().order(cands, 3.0, m)] \
+        == [1, 2, 0]
+    # SLO: with an observed prefill rate of 10ms/token and a 2s SLO the
+    # long first arrival has the least laxity (deadline 2.0, needs 1.0s);
+    # among the rest the earlier deadline wins
+    m.prefill_tokens = 1000
+    m.prefill_time_s = 10.0
+    assert m.prefill_rate() == 0.01
+    slo = make_policy("slo", ttft_slo_s=2.0)
+    assert isinstance(slo, SLOAware)
+    assert [c.order for c in slo.order(cands, 3.0, m)] == [0, 1, 2]
+    # flip: make the newest request's prefill enormous — least laxity now
+    cands[2].prefill_tokens = 1000
+    assert [c.order for c in slo.order(cands, 3.0, m)] == [2, 0, 1]
+    import pytest as _pytest
+    with _pytest.raises(ValueError):
+        make_policy("nope")
+
+
+def test_slo_attainment_summary():
+    from repro.serve.metrics import EngineMetrics
+
+    t = [0.0]
+    m = EngineMetrics(clock=lambda: t[0])
+    m.ttft_slo_s = 1.0
+    for uid, ttft in enumerate([0.5, 2.0, 0.9, 1.5]):
+        t[0] = 0.0
+        m.on_submit(uid, prompt_len=4)
+        t[0] = ttft
+        m.on_first_token(uid)
+        t[0] = ttft + 1.0
+        m.on_finish(uid, new_tokens=3)
+    s = m.summary()
+    assert s["ttft_under_slo"] == 0.5
+    assert s["ttft_p99_s"] == 2.0
+
+
 def test_admit_preserves_cache_sharding(params):
     """The _admit slot write must keep the mesh-committed layout instead
     of silently replacing it (regression test for the eager tree-map)."""
