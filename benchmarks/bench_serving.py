@@ -19,6 +19,13 @@ below the dense cache's 100% slot provisioning.  Every variant is required
 to decode token-identically to dense (asserted below — the benchmark
 doubles as an end-to-end exactness check).
 
+A second, *reasoning-shaped* workload (short prompts off one shared
+system prompt, long decodes, bursty Poisson arrivals in engine-step
+units) then runs through the paged engine with and without the
+speculative draft/verify lane: speculation's win is
+``tokens_per_target_call > 1.0`` at a high self-speculative acceptance
+rate, at bit-identical tokens (EXPERIMENTS.md §Speculative).
+
 CI runs a tiny smoke (env knobs below); paper-scale runs raise them:
 
   REPRO_SERVE_ARCH      (tinyllama-1.1b)  REPRO_SERVE_REQUESTS (8)
@@ -27,6 +34,9 @@ CI runs a tiny smoke (env knobs below); paper-scale runs raise them:
   REPRO_SERVE_SHARED_LEN (37: shared-prefix tokens, deliberately NOT
   page-aligned so boundary pages exercise copy-on-write)
   REPRO_SERVE_SHARED_FRAC (0.75)          REPRO_SERVE_TTFT_SLO (2.0 s)
+  REPRO_SERVE_REASONING_REQUESTS (6)  REPRO_SERVE_REASONING_SLOTS (2)
+  REPRO_SERVE_REASONING_MAX_NEW (24)  REPRO_SERVE_REASONING_MAX_LEN (96)
+  REPRO_SERVE_DRAFT_LEN (4: draft tokens per speculative round)
 
 With REPRO_BENCH_JSON set, the deterministic counters land in
 ``BENCH_serving.json`` for the CI regression gate
@@ -66,6 +76,58 @@ def _requests(cfg, n, max_new, shared_len, shared_frac, page):
             prompt = tail
         out.append(Request(uid, prompt, max_new_tokens=max_new))
     return out, n_shared
+
+
+def _reasoning_requests(cfg, n, shared_len, max_new):
+    """Reasoning-trace workload shape: every request is one short user
+    turn appended to the SAME system prompt (agents re-enter with the
+    system prompt cached), tails drawn from a small set of lengths so
+    jitted prefill traces stay bounded, and decode runs long — the
+    regime where draft/verify speculation pays."""
+    from repro.serve import Request
+
+    rng = np.random.RandomState(17)
+    shared = rng.randint(0, cfg.vocab, size=shared_len).astype(np.int32)
+    reqs = []
+    for uid in range(n):
+        tail_len = int(rng.choice([4, 8, 12]))
+        tail = rng.randint(0, cfg.vocab, size=tail_len).astype(np.int32)
+        reqs.append(Request(
+            uid, np.concatenate([shared, tail]),
+            max_new_tokens=int(rng.choice([max_new, max_new + 8,
+                                           max_new + 16])),
+        ))
+    return reqs
+
+
+def _bursty_arrivals(n, mean_gap=4.0):
+    """Bursty Poisson arrival times in ENGINE-STEP units (deterministic —
+    no wall clock): burst starts are exponential gaps apart, each burst
+    lands 1 + Poisson(1) requests on the same step."""
+    rng = np.random.RandomState(23)
+    steps, t = [], 0
+    while len(steps) < n:
+        t += 1 + int(rng.exponential(mean_gap))
+        for _ in range(1 + int(rng.poisson(1.0))):
+            if len(steps) < n:
+                steps.append(t)
+    return steps
+
+
+def _drive(eng, reqs, arrivals):
+    """Arrival-driven serving: request i is submitted once the engine
+    has run ``arrivals[i]`` iterations, so bursts queue up behind busy
+    slots exactly as a live frontend would deliver them."""
+    pending = sorted(zip(arrivals, reqs), key=lambda p: p[0])
+    finished, t = [], 0
+    while pending or eng.queue or eng.active \
+            or getattr(eng, "prefilling", None):
+        while pending and pending[0][0] <= t:
+            eng.submit(pending.pop(0)[1])
+        finished.extend(eng.step())
+        t += 1
+        assert t < 10_000, "arrival-driven serve did not drain"
+    return finished
 
 
 def run() -> None:
@@ -165,7 +227,92 @@ def run() -> None:
         f";cached={px['prefix_cached_tokens']}"
         f";cow_copies={cow['paged_prefix']}",
     )
+    # -- reasoning workload: long decodes off one shared system prompt,
+    # bursty step-unit arrivals, paged vs +prefix vs +prefix+speculative
+    r_req = _env("REPRO_SERVE_REASONING_REQUESTS", 6)
+    r_slots = _env("REPRO_SERVE_REASONING_SLOTS", 2)
+    r_max_new = _env("REPRO_SERVE_REASONING_MAX_NEW", 24)
+    r_max_len = _env("REPRO_SERVE_REASONING_MAX_LEN", 96)
+    draft_len = _env("REPRO_SERVE_DRAFT_LEN", 4)
+    r_engines = {
+        "reasoning_paged": lambda: PagedServeEngine(
+            cfg, params, slots=r_slots, max_len=r_max_len,
+            page_size=page),
+        "reasoning_prefix": lambda: PagedServeEngine(
+            cfg, params, slots=r_slots, max_len=r_max_len,
+            page_size=page, prefix_cache=True),
+        "reasoning_spec": lambda: PagedServeEngine(
+            cfg, params, slots=r_slots, max_len=r_max_len,
+            page_size=page, prefix_cache=True, speculative=True,
+            draft_len=draft_len),
+    }
+    arrivals = _bursty_arrivals(r_req)
+    r_outputs, r_summaries = {}, {}
+    for name, build in r_engines.items():
+        eng = build()
+        reqs = _reasoning_requests(cfg, r_req, shared_len, r_max_new)
+        done = _drive(eng, reqs, arrivals)
+        r_outputs[name] = {r.uid: r.output for r in done}
+        s = r_summaries[name] = eng.metrics.summary()
+        emit(
+            f"serving/{name}",
+            s["tpot_mean_s"] * 1e6,
+            f"tok_s={s['throughput_tok_s']:.2f}"
+            f";requests={s['requests']}"
+            f";decode_tokens={s['decode_tokens']}"
+            f";cached_tokens={s['prefix_cached_tokens']}"
+            f";acceptance={s['spec_acceptance_rate']:.3f}"
+            f";tok_per_target_call={s['tokens_per_target_call']:.3f}"
+            f";verify_steps={s['spec_steps']}"
+            f";draft_calls={s['draft_calls']}",
+        )
+    # speculation guardrails: bit-identical tokens, and each per-slot
+    # target call must emit MORE than the sequential engine's 1.0 —
+    # self-speculative greedy acceptance should be ~perfect
+    for name in r_engines:
+        assert r_outputs[name] == r_outputs["reasoning_paged"], \
+            f"{name} != reasoning_paged tokens"
+    sp = r_summaries["reasoning_spec"]
+    assert sp["spec_acceptance_rate"] >= 0.9, sp["spec_acceptance_rate"]
+    assert sp["tokens_per_target_call"] > 1.0, sp["tokens_per_target_call"]
+    if r_req > r_slots:
+        assert r_summaries["reasoning_prefix"]["prefix_cached_tokens"] > 0
+    emit(
+        "serving/speculation_win",
+        0.0,
+        f"decode_dispatches "
+        f"{r_summaries['reasoning_paged']['decode_steps']}"
+        f"->{sp['spec_steps']}"
+        f";tok_per_target_call={sp['tokens_per_target_call']:.3f}"
+        f";acceptance={sp['spec_acceptance_rate']:.3f}",
+    )
     emit_json("serving", {
+        "reasoning": {
+            "workload": {
+                "requests": r_req, "slots": r_slots,
+                "max_new": r_max_new, "max_len": r_max_len,
+                "shared_len": shared_len, "draft_len": draft_len,
+                "arrival_steps": arrivals,
+            },
+            "token_equivalent": True,   # asserted above
+            "engines": {
+                name: {
+                    "requests": s["requests"],
+                    "decode_tokens": s["decode_tokens"],
+                    "prefill_tokens": s["prefill_tokens"],
+                    "prefix_cached_tokens": s["prefix_cached_tokens"],
+                    "spec_steps": s["spec_steps"],
+                    "spec_acceptance_rate":
+                        round(s["spec_acceptance_rate"], 4),
+                    "tokens_per_target_call":
+                        round(s["tokens_per_target_call"], 4),
+                    "draft_calls": s["draft_calls"],
+                    "throughput_tok_s": round(s["throughput_tok_s"], 3),
+                    "tpot_mean_s": round(s["tpot_mean_s"], 5),
+                }
+                for name, s in r_summaries.items()
+            },
+        },
         "workload": {
             "requests": n_req, "slots": slots, "max_new": max_new,
             "max_len": max_len, "page_size": page,

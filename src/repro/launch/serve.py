@@ -4,7 +4,9 @@ with Reasoning-Compiler-tuned kernels.
 ``--engine paged`` (default) uses the paged-KV scheduler — batched
 bucketed prefill, optional chunked prefill, page-pool occupancy — and
 ``--engine dense`` the dense-cache baseline, so the two are one flag apart
-for A/B runs (protocol: EXPERIMENTS.md §Serve).
+for A/B runs (protocol: EXPERIMENTS.md §Serve).  ``--speculative`` adds
+the draft-and-verify decode lane (``--draft-arch``/``--draft-len``;
+EXPERIMENTS.md §Speculative).
 
 ``python -m repro.launch.serve --arch tinyllama-1.1b --smoke --requests 8``
 """
@@ -49,10 +51,25 @@ def main():
     ap.add_argument("--ttft-slo", type=float, default=0.5,
                     help="TTFT deadline (seconds) for --admission slo "
                          "and the under-SLO report column")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-propose / batch-verify decode lane "
+                         "(dense blocks): greedy output is bit-identical "
+                         "to plain decode, but each target call emits "
+                         "1..draft-len+1 tokens per slot")
+    ap.add_argument("--draft-arch", default="",
+                    help="draft model architecture for --speculative "
+                         "(same vocab as --arch; empty = self-"
+                         "speculative, reusing the target params)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="draft tokens proposed per speculative round")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    draft_cfg = draft_params = None
+    if args.speculative and args.draft_arch:
+        draft_cfg = get_config(args.draft_arch, smoke=args.smoke)
+        draft_params = M.init_params(draft_cfg, jax.random.PRNGKey(1))
     if args.engine == "paged":
         engine = PagedServeEngine(
             cfg, params, slots=args.slots, max_len=args.max_len,
@@ -60,6 +77,8 @@ def main():
             capacity=args.kv_pages or None,
             prefix_cache=args.prefix_cache, admission=args.admission,
             ttft_slo_s=args.ttft_slo,
+            speculative=args.speculative, draft_cfg=draft_cfg,
+            draft_params=draft_params, draft_len=args.draft_len,
         )
     else:
         engine = ServeEngine(
@@ -90,6 +109,12 @@ def main():
         print(f"  prefix cache: hit rate {s['prefix_hit_rate']:.2f}  "
               f"cached tokens {s['prefix_cached_tokens']}  "
               f"cow copies {engine.kv.cow_copies}")
+    if s["spec_steps"]:
+        print(f"  speculative: acceptance {s['spec_acceptance_rate']:.2f} "
+              f"({s['spec_accepted']}/{s['spec_proposed']})  "
+              f"tokens/target-call {s['tokens_per_target_call']:.2f}  "
+              f"verify steps {s['spec_steps']}  "
+              f"draft calls {s['draft_calls']}")
 
 
 if __name__ == "__main__":

@@ -530,6 +530,15 @@ def prefill_chunk(
     Callers must ensure ``start + C <= ring length`` (serving keeps
     ``max_len`` under the ring threshold, so the ring never wraps).
     """
+    x, cache = _chunk_forward(cfg, params, tokens, cache, start, backend)
+    return _unembed(cfg, params, x[:, -1:]), cache
+
+
+def _chunk_forward(cfg, params, tokens, cache, start, backend):
+    """Shared body of ``prefill_chunk`` / ``verify_step``: run a [B, C]
+    chunk at per-row (or shared) offsets against an existing cache and
+    write its K/V; returns the final-norm hidden states [B, C, D] and the
+    updated cache.  Callers choose which positions to unembed."""
     assert cfg.has_decode and cfg.block == "dense", \
         f"chunked prefill requires a stateless dense block, got {cfg.block}"
     x = _embed(cfg, params, {"tokens": tokens})
@@ -574,7 +583,56 @@ def prefill_chunk(
 
     x, cache = _scan(body, x, (params["layers"], cache))
     x = apply_norm(x, params["final_norm"], cfg.norm)
-    return _unembed(cfg, params, x[:, -1:]), cache
+    return x, cache
+
+
+def verify_step(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,  # [B, C]: committed token + the C-1 draft proposals
+    cache,
+    start,              # int32 scalar or [B]: absolute pos of tokens[:, 0]
+    *,
+    lengths: Optional[jax.Array] = None,
+    backend: Optional[str] = None,
+):
+    """Multi-token verify step for speculative decoding.
+
+    Runs one chunk-shaped forward over ``tokens`` at positions
+    ``start .. start+C-1`` (per-row offsets supported, exactly like
+    ``prefill_chunk``) and returns logits at EVERY chunk position
+    ([B, C, V]) plus the updated cache: the target model scores a draft's
+    k proposals — plus the already-committed token that seeds them — in
+    ONE call, and position ``i``'s argmax decides the fate of draft token
+    ``i`` (greedy acceptance keeps the longest matching prefix).
+
+    The chunk's K/V is written exactly as ``prefill_chunk`` would write
+    it.  Per-token K/V is a function of (token, absolute position) only
+    — RoPE phases come from ``positions`` — so an accepted token's cache
+    entry is bit-identical to the one single-token ``decode_step`` would
+    have produced; this is the equivalence the speculative engine's
+    greedy == dense guarantee rests on.
+
+    ``lengths`` ([B] int32, optional) applies per-row accepted-length
+    masking to the returned cache: row ``b`` keeps only its first
+    ``lengths[b]`` chunk tokens (cache positions at or beyond
+    ``start[b] + lengths[b]`` reset to kv_pos = -1).  Dense-cache callers
+    use it to reject a per-row suffix in place; the paged serving engine
+    instead routes rejected writes to the pool's TRASH page at scatter
+    time (``kvcache.scatter_tokens``) and never mutates shared state.
+    """
+    x, cache = _chunk_forward(cfg, params, tokens, cache, start, backend)
+    logits = _unembed(cfg, params, x)
+    if lengths is not None:
+        bound = jnp.asarray(start, jnp.int32) \
+            + jnp.asarray(lengths, jnp.int32)        # [B] (or scalar)
+        bound = jnp.broadcast_to(bound, (tokens.shape[0],))
+        kvp = cache["kv_pos"]                        # [L, B, r]
+        cache = dict(
+            cache,
+            kv_pos=jnp.where(kvp >= bound[None, :, None], -1, kvp),
+        )
+    return logits, cache
 
 
 def decode_step(

@@ -10,12 +10,17 @@
                     over the paged cache, donated mesh-committed buffers.
   * ``policy``    — pluggable admission ordering: FCFS,
                     shortest-prefill-first, TTFT-SLO-aware least laxity.
-  * ``metrics``   — TTFT / TPOT / throughput / occupancy / prefix-hit
-                    counters (protocol: EXPERIMENTS.md §Serve).
+  * ``speculative`` — draft-propose / batch-verify / merge decode lane
+                    over shared COW pages (greedy output bit-identical
+                    to token-by-token decode).
+  * ``metrics``   — TTFT / TPOT / throughput / occupancy / prefix-hit /
+                    speculation counters (protocol: EXPERIMENTS.md
+                    §Serve, §Speculative).
 """
 from .engine import Request, ServeEngine
 from .kvcache import PagedKVCache, PrefixIndex, PrefixMatch
 from .metrics import EngineMetrics, RequestMetrics
+from .speculative import SpeculativeDecoder
 from .policy import (
     AdmissionPolicy,
     Candidate,
@@ -32,6 +37,7 @@ __all__ = [
     "PrefixIndex",
     "PrefixMatch",
     "PagedServeEngine",
+    "SpeculativeDecoder",
     "EngineMetrics",
     "RequestMetrics",
     "AdmissionPolicy",

@@ -147,9 +147,15 @@ class ServeEngine:
         for _ in range(max_iters):
             if not self.queue and not self.active:
                 break
-            self._admit()
-            finished.extend(self._decode_iteration())
+            finished.extend(self.step())
         return finished
+
+    def step(self) -> list[Request]:
+        """One engine iteration: admit, then one decode round (same
+        contract as ``PagedServeEngine.step`` — arrival-driven harnesses
+        can interleave ``submit`` with steps on either engine)."""
+        self._admit()
+        return self._decode_iteration()
 
     # -- internals ----------------------------------------------------------------
     def _free_slots(self) -> list[int]:

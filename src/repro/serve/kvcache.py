@@ -13,7 +13,8 @@ per-slot; paging only ever applies to per-token storage.
 Two layers:
 
   * **Functional core** — ``gather_view`` / ``scatter_pages`` /
-    ``scatter_token`` / ``copy_page`` are pure, traceable pytree ops, so
+    ``scatter_token`` / ``scatter_tokens`` / ``copy_page`` are pure,
+    traceable pytree ops, so
     the scheduler can fuse gather → decode → scatter into one jitted,
     buffer-donated call.
   * **Stateful shell** — ``PagedKVCache`` owns the pool buffers plus the
@@ -158,6 +159,45 @@ def scatter_token(
         # selection pool[:, ids, :, offs] is [slots, L, Hkv, hd]
         vals = rows[name].transpose(1, 0, 2, 3)
         out[name] = pool[name].at[:, page_ids, :, offsets].set(vals)
+    return out
+
+
+def scatter_tokens(
+    pool: dict,
+    rows: dict,
+    page_ids: jax.Array,   # [N, C] target page per token (TRASH to drop)
+    offsets: jax.Array,    # [N, C] in-page offsets
+    positions: jax.Array,  # [N, C] absolute positions (kv_pos values)
+) -> dict:
+    """Write a [N, C]-block of per-token K/V rows back into the pool —
+    the speculative commit: C is the verify-chunk length, and every
+    (row, token) pair carries its own target page/offset/position.
+
+    ``rows`` k/v leaves are [L, N, Hkv, C, hd] (the token rows extracted
+    from a verify forward's cache view).  Entries whose write must NOT
+    land — rejected draft tokens, padded rows, inactive slots — point
+    ``page_ids`` at ``TRASH_PAGE``: a rejected proposal therefore never
+    touches a real page, so shared pages need no rollback and sharers
+    can never observe a speculative write.
+    """
+    n, c = page_ids.shape
+    flat_p = page_ids.reshape(-1)
+    flat_o = offsets.reshape(-1)
+    out = dict(pool)
+    if "kv_pos" in pool:
+        # adjacent advanced indices (axes 1, 2) stay in place: [L, N*C]
+        out["kv_pos"] = pool["kv_pos"].at[:, flat_p, flat_o].set(
+            positions.reshape(-1)[None]
+        )
+    for name in ("k", "v"):
+        if name not in pool:
+            continue
+        leaf = rows[name]          # [L, N, Hkv, C, hd]
+        L, _, hkv, _, hd = leaf.shape
+        # advanced indices split by a slice move to the front: the target
+        # selection pool[:, ids, :, offs] is [N*C, L, Hkv, hd]
+        vals = leaf.transpose(1, 3, 0, 2, 4).reshape(n * c, L, hkv, hd)
+        out[name] = pool[name].at[:, flat_p, :, flat_o].set(vals)
     return out
 
 
@@ -555,6 +595,50 @@ class PagedKVCache:
         self.table[slot, page_idx] = new
         self.cow_copies += 1
         return True
+
+    def fork_slot(self, src: int, dst: int) -> None:
+        """Branch a slot: ``dst``'s page table becomes a shared (increfed)
+        copy of ``src``'s — the page-table fork behind n-way speculative
+        branches / best-of-n sampling.  No data moves: both slots read the
+        same pages until either writes, at which point ``ensure_writable``
+        copy-on-writes the touched page.  The fork carries no reservation;
+        callers that will grow the branch must ``reserve`` for it."""
+        assert not self._owned[dst], "fork into a non-empty slot"
+        self.attach(dst, self._owned[src])
+
+    def rollback(self, slot: int, n_valid: int) -> list[int]:
+        """Discard a slot's tokens at or beyond position ``n_valid`` — the
+        reject path for a partially-written speculative branch.  Whole
+        pages past the bound detach (freed + invalidated if this slot was
+        their last holder; merely decrefed if a sibling or the prefix
+        index still shares them).  A page *straddling* the bound first
+        goes private via the copy-on-write guard — a sharer keeps its own
+        tail — and then has its in-page tail invalidated.  Returns the
+        page ids actually freed.  The slot's reservation is unchanged
+        (rollback un-writes tokens; it does not re-promise growth)."""
+        pg = self.page_size
+        own = self._owned[slot]
+        keep = min(0 if n_valid <= 0 else math.ceil(n_valid / pg), len(own))
+        freed: list[int] = []
+        for page in own[keep:]:
+            self._ref[page] -= 1
+            if self._ref[page] == 0:
+                freed.append(page)
+        del own[keep:]
+        self.table[slot, keep:] = NULL_PAGE
+        if freed:
+            self.invalidate(freed)
+            self._free.extend(freed)
+        if keep and n_valid < keep * pg:
+            # boundary page: COW already invalidates the copied tail; a
+            # page that was private needs the explicit tail reset
+            idx = keep - 1
+            if not self.ensure_writable(slot, idx, n_valid) and self.pool:
+                self.pool = self._copy_page_j(
+                    self.pool, jnp.int32(own[idx]), jnp.int32(own[idx]),
+                    jnp.int32(n_valid - idx * pg),
+                )
+        return freed
 
     def release(self, slot: int, *, invalidate: bool = True) -> list[int]:
         """Decref a finished request's pages; returns the ids that actually

@@ -89,6 +89,18 @@ class EngineMetrics:
         self.prefix_cached_tokens = 0
         self.decode_steps = 0
         self.decode_tokens = 0
+        # speculative-decode counters (serve.speculative): acceptance rate
+        # and tokens-per-target-call are THE speculation win metrics — a
+        # non-speculative engine pays one target call per emitted token
+        # per slot (tokens/call == 1.0 by definition); speculation beats
+        # it exactly when acceptance is nonzero
+        self.spec_steps = 0          # batched verify dispatches
+        self.spec_slot_steps = 0     # per-slot verify calls (slot, round)
+        self.spec_proposed = 0       # draft tokens offered for verification
+        self.spec_accepted = 0       # draft tokens the target reproduced
+        self.spec_emitted = 0        # tokens emitted via the spec lane
+        self.draft_calls = 0         # draft-model decode dispatches
+        self.draft_prefill_calls = 0
         self.admitted = 0
         self.finished = 0
         self.ttft_slo_s: Optional[float] = None
@@ -174,6 +186,20 @@ class EngineMetrics:
             "prefix_cached_tokens": self.prefix_cached_tokens,
             "decode_steps": self.decode_steps,
             "decode_tokens": self.decode_tokens,
+            "spec_steps": self.spec_steps,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "spec_emitted": self.spec_emitted,
+            "spec_acceptance_rate":
+                self.spec_accepted / max(1, self.spec_proposed),
+            # emitted tokens per per-slot target call: the sequential
+            # token-by-token equivalent is exactly 1.0, so > 1.0 is the
+            # speculation speedup (in target-call units); 0.0 = lane unused
+            "tokens_per_target_call":
+                self.spec_emitted / self.spec_slot_steps
+                if self.spec_slot_steps else 0.0,
+            "draft_calls": self.draft_calls,
+            "draft_prefill_calls": self.draft_prefill_calls,
             "kv_occupancy_mean": self._occ_sum / max(1, self._occ_n),
             "kv_occupancy_max": self._occ_max,
         }

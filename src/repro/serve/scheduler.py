@@ -29,6 +29,14 @@ sharding" item names.  ``PagedServeEngine`` replaces that path with:
     ``models.model.prefill_chunk`` call per length bucket (per-row start
     offsets), interleaved with decode so active requests' TPOT does not
     stall behind long admissions.
+  * **Speculative decode lane** (``speculative=True``, dense blocks) —
+    the single-token decode iteration is replaced by a draft-propose /
+    batch-verify / merge round (``serve.speculative``): a draft model
+    proposes ``draft_len`` tokens per slot, one batched
+    ``models.model.verify_step`` call scores them all, and accepted
+    tokens commit to the page pool in one TRASH-routed scatter.  Greedy
+    output is bit-identical to the single-token path; admission, chunk
+    lanes, and prefix caching compose unchanged.
   * **Policy-ordered admission** — a pluggable ``AdmissionPolicy``
     (``policy.py``) ranks the queue each round: FCFS,
     shortest-prefill-first, or TTFT-SLO-aware least-laxity ordering driven
@@ -96,6 +104,10 @@ class PagedServeEngine:
         prefix_cache: bool = False,
         admission: Union[str, AdmissionPolicy] = "fcfs",
         ttft_slo_s: Optional[float] = None,
+        speculative: bool = False,
+        draft_cfg: Optional[ArchConfig] = None,
+        draft_params=None,
+        draft_len: int = 4,
         backend: Optional[str] = None,
         mesh=None,
         tp: int = 1,
@@ -153,6 +165,20 @@ class PagedServeEngine:
         self._prefill_jits: dict[int, callable] = {}
         self._chunk_jits: dict[tuple[int, int], callable] = {}
         self._decode_j = self._build_decode()
+
+        # speculative decode lane (draft-propose / batch-verify / merge):
+        # replaces the single-token decode iteration; admission, chunked
+        # prefill lanes, and prefix caching are unchanged and compose
+        self.spec = None
+        if speculative:
+            from .speculative import SpeculativeDecoder
+
+            self.spec = SpeculativeDecoder(
+                cfg, self.params, self.kv, slots=slots,
+                draft_cfg=draft_cfg, draft_params=draft_params,
+                draft_len=draft_len, backend=backend,
+                metrics=self.metrics,
+            )
 
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -381,6 +407,8 @@ class PagedServeEngine:
             for slot, req in group:
                 self.kv.alloc_upto(slot, len(req.prompt))
             self.kv.write_prefill([s for s, _ in group], rows)
+            if self.spec is not None:
+                self.spec.prefill([s for s, _ in group], toks, lens)
             for i, (slot, req) in enumerate(group):
                 self.kv.index_prompt(slot, req.prompt)
                 req.output.append(int(jnp.argmax(logits[i, -1])))
@@ -460,6 +488,13 @@ class PagedServeEngine:
         }
         self.kv.write_prefill([slot], rows)
         self.kv.index_prompt(slot, req.prompt)
+        if self.spec is not None:
+            # the draft holds no pages: it prefills the full prompt even
+            # when the target side adopted a cached prefix
+            s_tok = self._bucket_tokens(plen)
+            dtoks = np.zeros((1, s_tok), np.int32)
+            dtoks[0, :plen] = req.prompt
+            self.spec.prefill([slot], dtoks, np.asarray([plen], np.int32))
         req.output.append(int(jnp.argmax(logits_row[-1])))
         self.active[slot] = req
         self.positions[slot] = plen
@@ -490,6 +525,8 @@ class PagedServeEngine:
     def _decode_iteration(self) -> list[Request]:
         if not self.active:
             return []
+        if self.spec is not None:
+            return self._spec_iteration()
         toks = np.zeros((self.slots,), np.int32)
         for slot, req in self.active.items():
             toks[slot] = req.output[-1]
@@ -523,4 +560,32 @@ class PagedServeEngine:
                 freed.extend(self.kv.release(slot, invalidate=False))
                 self.metrics.on_finish(req.uid, len(req.output))
         self.kv.invalidate(freed)  # one reset dispatch per step
+        return done
+
+    def _spec_iteration(self) -> list[Request]:
+        """Speculative decode round: the decoder proposes/verifies/merges
+        (1..draft_len+1 tokens per slot); request lifecycle — finish
+        detection, slot release, metrics — stays here and mirrors the
+        single-token path token-for-token."""
+        emitted = self.spec.step(self.active, self.positions)
+        self.metrics.decode_steps += 1
+        self.metrics.on_occupancy(self.kv.occupancy())
+        done = []
+        freed: list[int] = []
+        for slot, req in list(self.active.items()):
+            toks = emitted[slot]
+            req.output.extend(toks)
+            self.positions[slot] += len(toks)
+            self.metrics.decode_tokens += len(toks)
+            nxt = toks[-1]
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and nxt == req.eos_id)
+                    or int(self.positions[slot]) >= self.max_len - 1):
+                req.done = True
+                done.append(req)
+                del self.active[slot]
+                self.positions[slot] = 0
+                freed.extend(self.kv.release(slot, invalidate=False))
+                self.metrics.on_finish(req.uid, len(req.output))
+        self.kv.invalidate(freed)
         return done

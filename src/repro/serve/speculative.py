@@ -1,0 +1,307 @@
+"""Speculative decoding over shared COW pages.
+
+Draft-and-verify decode — the highest-leverage decode-side optimization in
+the serving surveys PAPERS.md tracks, and the regime the reasoning-traffic
+study says dominates real workloads (long decode, short prefill): a cheap
+*draft* model proposes ``k`` tokens per decode slot, and ONE batched
+target-model call (``models.model.verify_step``) scores every slot's
+proposals at once.  Greedy acceptance keeps the longest prefix of each
+slot's proposals whose argmax the target reproduces, then emits the
+target's own next token after that prefix (a correction on mismatch, a
+bonus token on full acceptance) — so every verify call yields between 1
+and k+1 tokens per slot and the emitted stream is **bit-identical to
+running the target model token-by-token** (greedy speculative decoding is
+lossless by construction; tests/test_serve.py asserts it).
+
+Page-pool integration — the part the PR-5 refcount/COW machinery buys:
+
+  * the verify forward runs over a *gathered* view of the shared page
+    pool (extended with scratch TRASH columns so a near-``max_len`` chunk
+    never clamps) and does not write the pool;
+  * accepted tokens' K/V rows are extracted from the verify cache and
+    committed by one ``kvcache.scatter_tokens`` dispatch whose targets
+    route every rejected or padded proposal to the pool's TRASH page — a
+    rejected draft token therefore never lands in a real page, shared
+    pages need no rollback, and sharers (prefix index, forked siblings)
+    can never observe a speculative write;
+  * pages inside the speculative window ``[pos, pos + k]`` pass through
+    the ``ensure_writable`` copy-on-write guard first, exactly like the
+    non-speculative decode path, so speculation composes with prefix
+    caching and page-table forks (``kvcache.fork_slot``).
+
+The draft model keeps its own DENSE cache (it shares nothing with the
+page pool): self-speculative serving (draft == target, ~100% greedy
+acceptance) reuses the target params; cross-arch drafting only needs a
+matching vocab.  The draft advances ``k + 1`` feeds per round — the
+committed token plus its own k proposals — so that on a full acceptance
+its cache already holds K/V for every accepted position; after
+acceptance one jitted mask resets the draft cache beyond each slot's
+accepted bound (per-row accepted-length masking, the dense-cache
+analogue of TRASH routing).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import model as M
+from . import kvcache as KV
+from .engine import Request, batched_decode_fn
+from .metrics import EngineMetrics
+
+
+class SpeculativeDecoder:
+    """Draft-propose / batch-verify / merge-accepted decode lane over a
+    ``PagedKVCache``, driven by ``PagedServeEngine._spec_iteration``."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        kv: KV.PagedKVCache,
+        *,
+        slots: int,
+        draft_cfg: Optional[ArchConfig] = None,
+        draft_params=None,
+        draft_len: int = 4,
+        backend: Optional[str] = None,
+        metrics: Optional[EngineMetrics] = None,
+    ):
+        assert cfg.block == "dense", (
+            "speculative decoding needs a stateless dense block "
+            f"(verify is a chunked forward), got {cfg.block}"
+        )
+        assert draft_len >= 1
+        self.cfg = cfg
+        self.params = params
+        self.kv = kv
+        self.slots = slots
+        self.k = int(draft_len)
+        self.backend = backend
+        self.metrics = metrics if metrics is not None else EngineMetrics()
+        self.draft_cfg = draft_cfg if draft_cfg is not None else cfg
+        self.draft_params = draft_params if draft_params is not None \
+            else params
+        assert self.draft_cfg.block == "dense", (
+            f"draft arch must be dense, got {self.draft_cfg.block}"
+        )
+        assert self.draft_cfg.vocab == cfg.vocab, (
+            "draft/target vocab mismatch: "
+            f"{self.draft_cfg.vocab} vs {cfg.vocab}"
+        )
+        assert not kv.state, "speculation over per-slot state leaves"
+        # Draft ring is view_len + k + 1 so speculative feeds near max_len
+        # never wrap (a wrap would overwrite live low positions; the wrapped
+        # entries themselves are masked away after acceptance).
+        self.draft_cache = M.init_cache(
+            self.draft_cfg, slots, kv.view_len + self.k + 1
+        )
+        # Verify-view extension: enough TRASH columns appended to the slot
+        # tables that start + k + 1 <= view length for every row — the
+        # chunk write inside verify_step is a dynamic_update_slice, which
+        # would otherwise *clamp* a near-the-end chunk backwards and
+        # corrupt every verify position in that row.  The gathered TRASH
+        # copies are scratch: the verify view is discarded, and rejected
+        # rows' extracted K/V re-routes to TRASH at scatter time anyway.
+        self._ext_cols = math.ceil((self.k + 1) / kv.page_size)
+        self._draft_dec = jax.jit(
+            batched_decode_fn(self.draft_cfg, backend), donate_argnums=(2,)
+        )
+        self._verify_j = self._build_verify()
+        self._scatter_j = jax.jit(KV.scatter_tokens, donate_argnums=(0,))
+        self._mask_j = jax.jit(self._mask_tail, donate_argnums=(0,))
+        self._draft_admit_jits: dict[tuple, callable] = {}
+
+    # -- jit builders -------------------------------------------------------
+    @staticmethod
+    def _mask_tail(cache, bounds):
+        """Per-row accepted-length masking of the dense draft cache: row
+        ``s`` keeps positions < ``bounds[s]`` (0 wipes the row)."""
+        kvp = cache["kv_pos"]
+        return dict(
+            cache, kv_pos=jnp.where(kvp >= bounds[None, :, None], -1, kvp)
+        )
+
+    def _build_verify(self):
+        cfg, backend, k1 = self.cfg, self.backend, self.k + 1
+        vl = self.kv.view_len
+
+        def verify(p, toks, pool, table, starts):
+            view = KV.gather_view(pool, table)
+            # The gathered TRASH extension columns can carry *valid-looking*
+            # kv_pos values (write_prefill routes shared pages and padding
+            # rows into TRASH with their real positions) — mask them, or
+            # every verify query would attend to TRASH garbage.  Chunk
+            # writes landing in the extension (a row near max_len writing
+            # past its k_eff) re-enter with kv_pos > every real query's
+            # position, so they stay invisible.
+            view = dict(
+                view, kv_pos=view["kv_pos"].at[:, :, vl:].set(-1)
+            )
+            logits, cache2 = M.verify_step(
+                cfg, p, toks, view, starts, backend=backend
+            )
+            # extract the chunk's K/V token rows: [L, S, Hkv, k1, hd]
+            idx = starts[:, None] + jnp.arange(k1, dtype=jnp.int32)[None]
+            rows = {
+                name: jnp.take_along_axis(
+                    cache2[name], idx[None, :, None, :, None], axis=3
+                )
+                for name in ("k", "v")
+            }
+            return logits, rows
+
+        return jax.jit(verify)
+
+    # -- draft admission ----------------------------------------------------
+    def prefill(self, slots: list, toks: np.ndarray,
+                lens: np.ndarray) -> None:
+        """Prefill the draft cache rows for newly admitted requests.
+
+        ``toks`` is [n_pad, S] right-padded prompts, ``lens`` [n_pad] real
+        lengths; rows beyond ``len(slots)`` are padding.  The draft always
+        prefills the FULL prompt — even when the target side adopted a
+        cached prefix, the draft holds no pages to share — which keeps the
+        draft a strict add-on cost: speculation can only win decode-side.
+        """
+        s = int(toks.shape[1])
+        key = (s, int(toks.shape[0]), len(slots))
+        fn = self._draft_admit_jits.get(key)
+        if fn is None:
+            dcfg, backend = self.draft_cfg, self.backend
+
+            def f(p, t, l, cache, idx):
+                n = idx.shape[0]
+                _, rows = M.prefill(
+                    dcfg, p, {"tokens": t}, s, lengths=l, backend=backend
+                )
+                kvp = cache["kv_pos"].at[:, idx].set(-1)
+                kvp = kvp.at[:, idx, :s].set(rows["kv_pos"][:, :n])
+                return {
+                    "k": cache["k"].at[:, idx, :, :s].set(rows["k"][:, :n]),
+                    "v": cache["v"].at[:, idx, :, :s].set(rows["v"][:, :n]),
+                    "kv_pos": kvp,
+                }
+
+            fn = self._draft_admit_jits[key] = jax.jit(
+                f, donate_argnums=(3,)
+            )
+        self.draft_cache = fn(
+            self.draft_params, jnp.asarray(toks), jnp.asarray(lens),
+            self.draft_cache, jnp.asarray(np.asarray(slots, np.int32)),
+        )
+        self.metrics.draft_prefill_calls += 1
+
+    # -- one speculative round ----------------------------------------------
+    def step(self, active: dict[int, Request],
+             positions: np.ndarray) -> dict[int, list]:
+        """One draft-propose → batch-verify → merge round over all active
+        slots.  Returns ``{slot: emitted tokens}`` — 1..k+1 tokens per
+        slot, already truncated at eos / token-budget / max_len bounds —
+        greedy-equivalent to stepping the target one token at a time."""
+        kv, S, k, pg = self.kv, self.slots, self.k, self.kv.page_size
+        pos0 = np.asarray(positions, np.int32).copy()
+        t0 = np.zeros((S,), np.int32)
+        k_eff = np.zeros((S,), np.int32)
+        for slot, req in active.items():
+            t0[slot] = req.output[-1]
+            # emit-budget for this round: never propose past the request's
+            # token budget or the slot's page reservation (budget =
+            # min(plen + max_new, max_len) pages were promised at admit)
+            e_max = min(req.max_new_tokens - len(req.output),
+                        kv.max_len - 1 - int(pos0[slot]))
+            k_eff[slot] = max(0, min(k, e_max - 1))
+
+        # 1) draft proposals: k+1 feeds (committed token, then each
+        #    proposal) so a full acceptance leaves the draft cache already
+        #    holding K/V through pos + k
+        drafts = np.zeros((S, k), np.int32)
+        cur = jnp.asarray(t0)
+        for j in range(k + 1):
+            lg, self.draft_cache = self._draft_dec(
+                self.draft_params, cur, self.draft_cache,
+                jnp.asarray(pos0 + j),
+            )
+            self.metrics.draft_calls += 1
+            if j < k:
+                cur = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+                drafts[:, j] = np.asarray(cur)
+
+        # 2) COW/alloc the speculative window [pos, pos + k_eff]: writes
+        #    only ever land in private pages
+        for slot in active:
+            p0, ke = int(pos0[slot]), int(k_eff[slot])
+            kv.alloc_upto(slot, p0 + ke + 1)
+            for idx in range(p0 // pg, (p0 + ke) // pg + 1):
+                kv.ensure_writable(slot, idx, p0)
+
+        # 3) ONE batched target verify over [t0, d_1 .. d_k] per slot
+        vtoks = np.zeros((S, k + 1), np.int32)
+        vtoks[:, 0] = t0
+        vtoks[:, 1:] = drafts
+        table = np.concatenate([
+            kv.table,
+            np.full((S, self._ext_cols), KV.TRASH_PAGE, np.int32),
+        ], axis=1)
+        logits, rows = self._verify_j(
+            self.params, jnp.asarray(vtoks), kv.pool, jnp.asarray(table),
+            jnp.asarray(pos0),
+        )
+        self.metrics.spec_steps += 1
+        y = np.asarray(jnp.argmax(logits, axis=-1))        # [S, k+1]
+
+        # 4) greedy acceptance + eos truncation (host): position j's
+        #    target argmax y[j] judges draft j; the first mismatch (or the
+        #    bonus token after k_eff matches) is emitted as-is
+        emitted: dict[int, list] = {}
+        for slot, req in active.items():
+            ke = int(k_eff[slot])
+            m = 0
+            while m < ke and int(drafts[slot, m]) == int(y[slot, m]):
+                m += 1
+            toks: list = []
+            for j in range(m + 1):
+                toks.append(int(y[slot, j]))
+                if req.eos_id is not None and toks[-1] == req.eos_id:
+                    break
+            emitted[slot] = toks
+            self.metrics.spec_slot_steps += 1
+            self.metrics.spec_proposed += ke
+            self.metrics.spec_accepted += m
+            self.metrics.spec_emitted += len(toks)
+
+        # 5) commit accepted K/V in one dispatch; rejected proposals,
+        #    emit-truncated tails, and inactive rows all route to TRASH.
+        #    Position pos0+j holds the token *fed* there (t0, d_1, ...),
+        #    and every fed token below the accepted bound equals its
+        #    emitted counterpart — so the committed pages are exactly what
+        #    token-by-token decode would have written.
+        pages = np.full((S, k + 1), KV.TRASH_PAGE, np.int32)
+        offs = np.zeros((S, k + 1), np.int32)
+        posv = np.full((S, k + 1), -1, np.int32)
+        for slot in active:
+            p0 = int(pos0[slot])
+            for j in range(len(emitted[slot])):
+                p = p0 + j
+                pages[slot, j] = kv.table[slot, p // pg]
+                offs[slot, j] = p % pg
+                posv[slot, j] = p
+        kv.pool = self._scatter_j(
+            kv.pool, rows, jnp.asarray(pages), jnp.asarray(offs),
+            jnp.asarray(posv),
+        )
+
+        # 6) draft-cache accepted-length masking: drop draft K/V beyond
+        #    each slot's accepted bound (and wipe inactive rows, which the
+        #    batched draft feeds scribbled at low positions)
+        bounds = np.zeros((S,), np.int32)
+        for slot in active:
+            bounds[slot] = int(pos0[slot]) + len(emitted[slot])
+        self.draft_cache = self._mask_j(self.draft_cache,
+                                        jnp.asarray(bounds))
+        return emitted

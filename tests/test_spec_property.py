@@ -1,0 +1,27 @@
+"""Property test for the speculative fork/verify/merge page invariants.
+
+Hypothesis drives ``run_spec_ops`` (tests/test_speculative.py) — an
+interpreter over random admit / draft-write / accept / reject / fork /
+rollback / release interleavings that checks pool conservation
+(free + live == capacity, refcounts == holders, no double-free) and
+rejected-draft invisibility after every op.  The seeded variant in
+test_speculative.py keeps baseline coverage when the dev deps are
+absent; this file widens the search space.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_speculative import run_spec_ops  # noqa: E402
+
+_OPS = st.lists(
+    st.tuples(st.integers(0, 4), st.integers(0, 999)),
+    min_size=1, max_size=40,
+)
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(ops=_OPS)
+def test_property_spec_interleavings_conserve_pool(ops):
+    run_spec_ops(ops)

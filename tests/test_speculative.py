@@ -1,0 +1,321 @@
+"""Speculative decoding substrate: the multi-token verify step, the
+fork/verify/merge page primitives, and a property harness asserting the
+PR-5 pool invariants (free + live == capacity, refcounts == holders, no
+double-free) hold under random interleavings of fork / draft-write /
+accept / reject / rollback / release — and that no rejected-draft token
+is ever visible through a surviving slot's gather view."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.kvcache import (
+    NULL_PAGE,
+    TRASH_PAGE,
+    PagedKVCache,
+    scatter_tokens,
+)
+
+from test_kvcache import _check_invariants
+
+CFG = get_config("tinyllama-1.1b", smoke=True)
+
+
+# ---------------------------------------------------------------------------
+# verify_step
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_verify_step_matches_full_forward(params):
+    """Chunk-verify logits at every position equal the full forward's
+    logits at those positions (the target model scoring k drafts in one
+    call computes exactly what k sequential steps would have)."""
+    rng = np.random.RandomState(0)
+    toks = rng.randint(0, CFG.vocab, size=12).astype(np.int32)
+    s0 = 7
+    _, cache = M.prefill(
+        CFG, params, {"tokens": jnp.asarray(toks[:s0])[None]}, 32
+    )
+    vlg, cache2 = M.verify_step(
+        CFG, params, jnp.asarray(toks[s0:])[None], cache, jnp.int32(s0)
+    )
+    full, _ = M.forward(CFG, params, {"tokens": jnp.asarray(toks)[None]})
+    ref = np.asarray(full)[0, s0:]                  # positions s0..11
+    got = np.asarray(vlg)[0]
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, atol=2e-3)
+    assert (got.argmax(-1) == ref.argmax(-1)).all()
+    # the chunk K/V landed at its absolute positions
+    kvp = np.asarray(cache2["kv_pos"])[0, 0]
+    assert (kvp[:12] == np.arange(12)).all() and (kvp[12:] == -1).all()
+
+
+def test_verify_step_per_row_length_masking(params):
+    """``lengths`` rejects a per-row suffix in place: row b keeps only
+    its first lengths[b] chunk tokens in the returned cache."""
+    rng = np.random.RandomState(1)
+    toks = rng.randint(0, CFG.vocab, size=(2, 6)).astype(np.int32)
+    chunk = rng.randint(0, CFG.vocab, size=(2, 4)).astype(np.int32)
+    _, cache = M.prefill(CFG, params, {"tokens": jnp.asarray(toks)}, 32)
+    lg_ref, _ = M.verify_step(
+        CFG, params, jnp.asarray(chunk), cache, jnp.int32(6)
+    )
+    _, cache2 = M.verify_step(
+        CFG, params, jnp.asarray(chunk), cache, jnp.int32(6),
+        lengths=jnp.asarray([1, 3], jnp.int32),
+    )
+    kvp = np.asarray(cache2["kv_pos"])[0]           # [B, r]
+    assert (kvp[0, :7] == np.arange(7)).all() and (kvp[0, 7:] == -1).all()
+    assert (kvp[1, :9] == np.arange(9)).all() and (kvp[1, 9:] == -1).all()
+    # masking only touches kv_pos validity, never the logits
+    lg_masked, _ = M.verify_step(
+        CFG, params, jnp.asarray(chunk), cache, jnp.int32(6),
+        lengths=jnp.asarray([1, 3], jnp.int32),
+    )
+    np.testing.assert_array_equal(np.asarray(lg_ref),
+                                  np.asarray(lg_masked))
+
+
+# ---------------------------------------------------------------------------
+# page primitives: scatter_tokens / fork_slot / rollback
+# ---------------------------------------------------------------------------
+
+
+def _token_rows(n, c, tags):
+    """k/v rows [L, n, Hkv, c, hd] where token j of row i is the constant
+    ``tags[i][j]`` — recognizable through any gather."""
+    spec = M.cache_spec(CFG, n, c)
+    L, _, hkv, _, hd = spec["k"].shape
+    k = np.zeros((L, n, hkv, c, hd), np.float32)
+    for i in range(n):
+        for j in range(c):
+            k[:, i, :, j, :] = tags[i][j]
+    return {"k": jnp.asarray(k), "v": jnp.asarray(k)}
+
+
+def _commit(kv, slot, start, accepts, tags):
+    """Speculative commit helper: write tokens at start+j for each j,
+    routing rejected entries (accepts[j] False) to TRASH."""
+    c = len(accepts)
+    pages = np.full((1, c), TRASH_PAGE, np.int32)
+    offs = np.zeros((1, c), np.int32)
+    posv = np.full((1, c), -1, np.int32)
+    for j, ok in enumerate(accepts):
+        if ok:
+            p = start + j
+            pages[0, j] = kv.table[slot, p // kv.page_size]
+            offs[0, j] = p % kv.page_size
+            posv[0, j] = p
+    kv.pool = scatter_tokens(
+        kv.pool, _token_rows(1, c, [tags]), jnp.asarray(pages),
+        jnp.asarray(offs), jnp.asarray(posv),
+    )
+
+
+def _visible(kv):
+    """{slot: {pos: tag}} as the model would see it through gather_view."""
+    view = kv.dense_view()
+    kvp = np.asarray(view["kv_pos"])[0]             # [slots, view_len]
+    kval = np.asarray(view["k"])[0]                 # [slots, Hkv, vl, hd]
+    out = {}
+    for s in range(kv.slots):
+        out[s] = {
+            int(p): float(kval[s, 0, p, 0])
+            for p in np.nonzero(kvp[s] >= 0)[0]
+        }
+        for p, v in out[s].items():
+            assert kvp[s, p] == p, "view index != absolute position"
+    return out
+
+
+def test_scatter_tokens_trash_routing():
+    kv = PagedKVCache(CFG, slots=2, max_len=32, page_size=4)
+    assert kv.reserve(0, 3)
+    kv.alloc_upto(0, 9)                              # 3 pages
+    _commit(kv, 0, 0, [True] * 4, [10, 11, 12, 13])
+    _commit(kv, 0, 4, [True, True, False, False], [14, 15, 666, 667])
+    vis = _visible(kv)
+    assert vis[0] == {0: 10, 1: 11, 2: 12, 3: 13, 4: 14, 5: 15}
+    assert vis[1] == {}                              # untouched slot
+    # the null page stayed pristine and rejected tags are nowhere
+    assert (np.asarray(kv.pool["kv_pos"])[:, NULL_PAGE] == -1).all()
+    assert 666 not in vis[0].values() and 667 not in vis[0].values()
+    _check_invariants(kv)
+
+
+def test_fork_cow_and_rollback():
+    """fork shares pages by refcount; a branch write COWs; rollback
+    truncates the branch without perturbing the donor."""
+    kv = PagedKVCache(CFG, slots=3, max_len=32, page_size=4)
+    assert kv.reserve(0, 4)
+    kv.alloc_upto(0, 6)                              # pages 0..1 (6 tokens)
+    _commit(kv, 0, 0, [True] * 6, list(range(10, 16)))
+    kv.fork_slot(0, 1)
+    _check_invariants(kv)
+    assert kv.page_ids(1) == kv.page_ids(0)
+    assert all(kv.refcount(p) == 2 for p in kv.page_ids(0))
+
+    # branch grows: page idx 1 must go private before the write at pos 6
+    assert kv.reserve(1, 4)
+    copied = kv.ensure_writable(1, 1, 6)
+    assert copied and kv.page_ids(1)[1] != kv.page_ids(0)[1]
+    _commit(kv, 1, 6, [True], [26])
+    vis = _visible(kv)
+    assert vis[0] == {i: 10 + i for i in range(6)}   # donor unperturbed
+    assert vis[1] == {**{i: 10 + i for i in range(6)}, 6: 26}
+    _check_invariants(kv)
+
+    # rollback the branch inside its private page: in-page tail masked
+    kv.rollback(1, 5)
+    vis = _visible(kv)
+    assert vis[1] == {i: 10 + i for i in range(5)}
+    assert vis[0] == {i: 10 + i for i in range(6)}
+    _check_invariants(kv)
+
+    # rollback into the SHARED page: the private page frees, the shared
+    # boundary page COWs so the donor keeps its tail
+    freed = kv.rollback(1, 3)
+    assert len(freed) == 1
+    vis = _visible(kv)
+    assert vis[1] == {0: 10, 1: 11, 2: 12}
+    assert vis[0] == {i: 10 + i for i in range(6)}
+    _check_invariants(kv)
+
+    kv.release(1)
+    kv.release(0)
+    _check_invariants(kv)
+    assert kv.used_pages == 0
+
+
+def test_rollback_to_zero_frees_everything():
+    kv = PagedKVCache(CFG, slots=2, max_len=32, page_size=4)
+    assert kv.reserve(0, 3)
+    kv.alloc_upto(0, 9)
+    _commit(kv, 0, 0, [True] * 9, list(range(30, 39)))
+    freed = kv.rollback(0, 0)
+    assert len(freed) == 3 and kv.used_pages == 0
+    assert _visible(kv)[0] == {}
+    assert (kv.table[0] == NULL_PAGE).all()
+    _check_invariants(kv)
+
+
+# ---------------------------------------------------------------------------
+# interleaving harness: pool invariants under speculative op sequences
+#
+# ``run_spec_ops`` interprets a list of (op, arg) pairs as admit /
+# speculative-commit (accept + reject) / fork / rollback / release ops
+# and checks, after EVERY op, that the pool is conserved
+# (free + live == capacity, refcounts == holders — test_kvcache's
+# ``_check_invariants``) and that no rejected draft's tag is visible
+# through any surviving slot's gather view.  Driven here from seeded
+# deterministic sequences; tests/test_spec_property.py feeds it from
+# hypothesis when the dev deps are installed.
+# ---------------------------------------------------------------------------
+
+
+def run_spec_ops(ops):
+    SLOTS, PG, MAX_LEN, GROW = 3, 4, 32, 8
+    kv = PagedKVCache(CFG, slots=SLOTS, max_len=MAX_LEN, page_size=PG,
+                      capacity=16)
+    model: dict[int, dict[int, float]] = {}      # slot -> pos -> tag
+    budget: dict[int, int] = {}
+    rejected: set[float] = set()
+    tag = [100.0]
+
+    def next_tags(n):
+        out = [tag[0] + i for i in range(n)]
+        tag[0] += n
+        return out
+
+    def check():
+        _check_invariants(kv)
+        vis = _visible(kv)
+        for s, want in model.items():
+            assert vis[s] == want, (s, vis[s], want)
+        seen = {v for s in vis for v in vis[s].values()}
+        assert not (seen & rejected), "rejected draft visible in a view"
+
+    for op, arg in ops:
+        slot = arg % SLOTS
+        if op == 0 and slot not in model:                     # admit
+            plen = 3 + arg % 9
+            if not kv.reserve(slot, kv.pages_needed(
+                    min(plen + GROW, MAX_LEN))):
+                continue
+            kv.alloc_upto(slot, plen)
+            tags = next_tags(plen)
+            _commit(kv, slot, 0, [True] * plen, tags)
+            model[slot] = dict(enumerate(tags))
+            budget[slot] = min(plen + GROW, MAX_LEN)
+        elif op == 1 and slot in model:                       # spec round
+            pos0 = len(model[slot])
+            k_eff = min(3, budget[slot] - pos0)
+            if k_eff <= 0:
+                continue
+            need = kv.pages_needed(pos0 + k_eff) \
+                - len(kv.page_ids(slot))
+            cows = sum(
+                kv.refcount(p) > 1
+                for p in kv.page_ids(slot)[pos0 // PG:]
+            )
+            if len(kv._free) < need + cows:
+                continue       # a real engine reserves for this up front
+            kv.alloc_upto(slot, pos0 + k_eff)
+            for idx in range(pos0 // PG, (pos0 + k_eff - 1) // PG + 1):
+                kv.ensure_writable(slot, idx, pos0)
+            m = (arg // 7) % (k_eff + 1)                      # accepted
+            tags = next_tags(k_eff)
+            _commit(kv, slot, pos0,
+                    [j < m for j in range(k_eff)], tags)
+            model[slot].update(
+                (pos0 + j, tags[j]) for j in range(m)
+            )
+            rejected.update(tags[m:])
+        elif op == 2:                                         # fork
+            dst = (arg // 7) % SLOTS
+            if slot not in model or dst in model or dst == slot:
+                continue
+            kv.fork_slot(slot, dst)
+            model[dst] = dict(model[slot])
+            budget[dst] = budget[slot]
+        elif op == 3 and slot in model:                       # rollback
+            n = (arg // 7) % (len(model[slot]) + 1)
+            own = kv.page_ids(slot)
+            keep = -(-n // PG) if n else 0
+            straddles = keep and n < keep * PG \
+                and kv.refcount(own[keep - 1]) > 1
+            if straddles and not kv._free:
+                continue
+            kv.rollback(slot, n)
+            model[slot] = {p: t for p, t in model[slot].items()
+                           if p < n}
+        elif op == 4 and slot in model:                       # release
+            kv.release(slot)
+            del model[slot]
+            del budget[slot]
+        else:
+            continue
+        check()
+
+    for slot in list(model):
+        kv.release(slot)
+    _check_invariants(kv)
+    assert kv.used_pages == 0, "page leak after draining all slots"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_spec_interleavings_conserve_pool(seed):
+    """Seeded random op sequences through the interleaving harness —
+    always-on coverage of the same invariants the hypothesis property
+    test (tests/test_spec_property.py) explores more widely."""
+    rng = np.random.RandomState(seed)
+    ops = [(int(rng.randint(0, 5)), int(rng.randint(0, 1000)))
+           for _ in range(60)]
+    run_spec_ops(ops)
