@@ -37,6 +37,13 @@ CI runs a tiny smoke (env knobs below); paper-scale runs raise them:
   REPRO_SERVE_REASONING_REQUESTS (6)  REPRO_SERVE_REASONING_SLOTS (2)
   REPRO_SERVE_REASONING_MAX_NEW (24)  REPRO_SERVE_REASONING_MAX_LEN (96)
   REPRO_SERVE_DRAFT_LEN (4: draft tokens per speculative round)
+  REPRO_SERVE_TRACE_REPEATS (3: min-of-k walls for the tracing-overhead
+  measurement)
+
+A final traced-vs-untraced A/B (warmed engines, identical streams,
+min-of-k walls) measures the ``repro.obs`` instrumentation overhead and
+gates it in ``BENCH_serving.json``; the traced run's Chrome timeline is
+written to ``$REPRO_BENCH_JSON/serving.trace.json`` (CI uploads it).
 
 With REPRO_BENCH_JSON set, the deterministic counters land in
 ``BENCH_serving.json`` for the CI regression gate
@@ -45,6 +52,7 @@ With REPRO_BENCH_JSON set, the deterministic counters land in
 from __future__ import annotations
 
 import os
+import time
 
 import numpy as np
 
@@ -128,6 +136,41 @@ def _drive(eng, reqs, arrivals):
         t += 1
         assert t < 10_000, "arrival-driven serve did not drain"
     return finished
+
+
+def _trace_overhead(build, make_reqs, repeats=3):
+    """Traced-vs-untraced wall overhead on identical request streams.
+
+    Both engines warm up on TWO full streams first (the second stream
+    still compiles fresh chunk-lane shapes once prefix-cache state from
+    the first kicks in), then the timed streams run INTERLEAVED —
+    off/on/off/on — so slow drift on a CI-shared box (frequency scaling,
+    cache warmth) cancels instead of charging whichever variant ran
+    last.  The best (min) wall per variant is compared; min-of-k is the
+    standard way to strip scheduler noise.  Returns
+    ``(overhead_frac, untraced_s, traced_s, tracer)``."""
+    from repro.obs import Tracer
+
+    tracer = Tracer()
+    eng_off, eng_on = build(None), build(tracer)
+    uid = 0
+
+    def serve(eng):
+        nonlocal uid
+        reqs = make_reqs(uid)
+        uid += len(reqs)
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run()
+        return time.perf_counter() - t0
+
+    for _ in range(2):                     # warmup (compiles, both streams)
+        serve(eng_off), serve(eng_on)
+    walls = [(serve(eng_off), serve(eng_on)) for _ in range(repeats)]
+    off = min(w for w, _ in walls)
+    on = min(w for _, w in walls)
+    return on / max(off, 1e-9) - 1.0, off, on, tracer
 
 
 def run() -> None:
@@ -286,7 +329,44 @@ def run() -> None:
         f";tok_per_target_call={sp['tokens_per_target_call']:.3f}"
         f";acceptance={sp['spec_acceptance_rate']:.3f}",
     )
+    # -- tracing overhead: the repro.obs instrumentation must be cheap
+    # enough to leave on in perf runs (EXPERIMENTS.md §Observability gates
+    # it at <= 5% of wall; the baseline rule adds a noise tolerance)
+    def build_traced(tracer):
+        return PagedServeEngine(
+            cfg, params, slots=slots, max_len=max_len, page_size=page,
+            prefix_cache=True, tracer=tracer,
+        )
+
+    def make_reqs(uid0):
+        reqs, _ = _requests(cfg, n_req, max_new, shared_len,
+                            shared_frac, page)
+        for r in reqs:
+            r.uid += uid0
+        return reqs
+
+    overhead, wall_off, wall_on, tracer = _trace_overhead(
+        build_traced, make_reqs,
+        repeats=_env("REPRO_SERVE_TRACE_REPEATS", 3),
+    )
+    emit(
+        "serving/tracing_overhead",
+        wall_on * 1e6,
+        f"overhead_frac={overhead:.4f}"
+        f";untraced_s={wall_off:.4f};traced_s={wall_on:.4f}"
+        f";events={len(tracer.events())}",
+    )
+    out_dir = os.environ.get("REPRO_BENCH_JSON", "")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tracer.export_chrome(os.path.join(out_dir, "serving.trace.json"))
     emit_json("serving", {
+        "tracing": {
+            "overhead_frac": round(overhead, 4),
+            "untraced_wall_s": round(wall_off, 5),
+            "traced_wall_s": round(wall_on, 5),
+            "events": len(tracer.events()),
+        },
         "reasoning": {
             "workload": {
                 "requests": r_req, "slots": r_slots,

@@ -16,11 +16,15 @@ from __future__ import annotations
 
 import json
 import os
+import platform
 import statistics
+import subprocess
 import sys
 
 REPEATS = int(os.environ.get("REPRO_BENCH_REPEATS", "3"))
 BUDGET = int(os.environ.get("REPRO_BENCH_BUDGET", "600"))
+
+BENCH_SCHEMA_VERSION = 1
 
 PAPER_WORKLOADS = [
     "llama3_8b_attention",
@@ -39,14 +43,41 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     sys.stdout.flush()
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def run_meta() -> dict:
+    """Provenance stamped into every BENCH_*.json: schema version plus
+    the commit and interpreter that produced the numbers — so an archived
+    artifact is attributable without its CI run."""
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_sha": _git_sha(),
+        "python": platform.python_version(),
+    }
+
+
 def emit_json(table: str, payload: dict) -> str | None:
     """Write ``BENCH_<table>.json`` into $REPRO_BENCH_JSON (no-op when the
-    env knob is unset).  Returns the written path."""
+    env knob is unset).  Returns the written path.  A top-level ``meta``
+    key (``run_meta()``) is stamped in unless the payload already carries
+    one; metric keys stay top-level so baseline rules' dotted paths keep
+    resolving."""
     out_dir = os.environ.get("REPRO_BENCH_JSON", "")
     if not out_dir:
         return None
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{table}.json")
+    payload = dict(payload)
+    payload.setdefault("meta", run_meta())
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -33,6 +33,7 @@ from ..core.lowering import LoweringError
 from ..core.mcts import MCTS, SearchCurve
 from ..core.oracle import MeasuredOracle, make_oracle
 from ..core.workloads import Workload, get_workload
+from ..obs import NULL_TRACER, Tracer
 from .artifacts import (
     AttentionBlocks,
     CompiledArtifact,
@@ -131,10 +132,14 @@ class CompilerSession:
         rerank_top: int = 3,
         measure_repeats: int = 3,
         seed: int = 0,
+        tracer: Optional[Tracer] = None,
     ):
         self.platform = target if isinstance(target, Platform) \
             else get_platform(target)
+        self.trace = tracer or NULL_TRACER
         self.oracle = make_oracle(oracle, self.platform)
+        if hasattr(self.oracle, "trace"):
+            self.oracle.trace = self.trace
         self._proposer_spec = proposer
         if isinstance(proposer, LLMBase):
             self.llm: Optional[LLMBase] = proposer
@@ -230,7 +235,7 @@ class CompilerSession:
         searcher = MCTS(
             workload, self.oracle, proposer=proposer,
             branching=self.branching if branching is None else branching,
-            seed=seed, **mcts_kwargs,
+            seed=seed, tracer=self.trace, **mcts_kwargs,
         )
         curve = self._drive(searcher, budget, patience=patience,
                             min_samples=min_samples)
@@ -333,12 +338,21 @@ class CompilerSession:
             # mcts/evolutionary no donor is used (and none is recorded)
             donor = self.context.donor(task) \
                 if self.shared_context and self.method == "llm-mcts" else None
-            res = self.search(
-                task.workload, budget=grant, seed=self.seed,
-                donor=donor,
-                patience=policy.patience if policy.early_stop else None,
-                min_samples=task.min_samples,
-            )
+            with self.trace.span(
+                "compile-task", cat="compile",
+                workload=task.workload.name, platform=self.platform.name,
+                method=self.method, llm=self.llm_name,
+                budget_granted=grant,
+                seeded_from=donor.workload_name if donor else None,
+            ) as tsp:
+                res = self.search(
+                    task.workload, budget=grant, seed=self.seed,
+                    donor=donor,
+                    patience=policy.patience if policy.early_stop else None,
+                    min_samples=task.min_samples,
+                )
+                tsp.set(samples=res.samples,
+                        speedup=round(res.best_speedup, 4))
             pool = max(0, pool - res.samples)
             self.samples_spent += res.samples
             self.tasks_compiled += 1
@@ -365,7 +379,7 @@ class CompilerSession:
             # time the same launch configuration the record persists
             self._measured_oracle = MeasuredOracle(
                 self.platform, repeats=self.measure_repeats,
-                hardware_floors=True,
+                hardware_floors=True, tracer=self.trace,
             )
         return self._measured_oracle
 

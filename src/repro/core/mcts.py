@@ -33,6 +33,7 @@ import math
 import random
 from typing import Callable, Optional, Sequence
 
+from ..obs import NULL_TRACER, Tracer
 from .cost_model import HardwareOracle, SurrogateModel
 from .llm import LLMProposer, Proposal, TraceEntry
 from .lowering import LoweringError
@@ -104,9 +105,11 @@ class MCTS:
         surrogate: Optional[SurrogateModel] = None,
         transposition_table: bool = False,
         prior_weight: float = 0.0,
+        tracer: Optional[Tracer] = None,
     ):
         self.workload = workload
         self.oracle = oracle
+        self.trace = tracer or NULL_TRACER
         self.proposer = proposer
         self.branching = branching
         self.c_uct = c_uct
@@ -146,7 +149,9 @@ class MCTS:
         if child is None:
             return None
         reward = self._rollout(child)
-        self._backprop(child, reward)
+        with self.trace.span("backprop", cat="search", reward=reward,
+                             depth=child.depth):
+            self._backprop(child, reward)
         return child
 
     # -- phases ----------------------------------------------------------------
@@ -172,7 +177,16 @@ class MCTS:
                 TraceEntry(n.schedule, n.latency_s, n.speedup)
                 for n in node.ancestors()
             ]
-            proposal = self.proposer.propose(trace, self.rng)
+            with self.trace.span(
+                "llm-proposal", cat="search", depth=node.depth,
+                trace_len=len(trace),
+            ) as psp:
+                proposal = self.proposer.propose(trace, self.rng)
+                psp.set(
+                    fallback=proposal.fallback if proposal else True,
+                    n_transforms=len(proposal.transforms)
+                    if proposal else 0,
+                )
 
         new_sched: Optional[Schedule] = None
         if proposal is not None and not proposal.fallback:
@@ -207,7 +221,11 @@ class MCTS:
             return None
 
         try:
-            latency = self.oracle.measure(new_sched)
+            with self.trace.span(
+                "oracle-measure", cat="search", depth=node.depth + 1,
+            ) as msp:
+                latency = self.oracle.measure(new_sched)
+                msp.set(latency_s=latency)
         except LoweringError:
             # a measured backend refused this program (no realization /
             # grid guard): no kernel ran, so no sample is consumed and the

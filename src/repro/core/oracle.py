@@ -28,6 +28,7 @@ from typing import Optional, Protocol, runtime_checkable
 
 import jax
 
+from ..obs import NULL_TRACER, Tracer
 from .cost_model import HardwareOracle, Platform, get_platform
 from .lowering import Lowered, LoweringError, lower_schedule, time_lowered
 from .schedule import Schedule, initial_schedule
@@ -82,9 +83,11 @@ class MeasuredOracle:
         dedup_configs: bool = True,
         max_grid_steps: int = 8192,
         seed: int = 0,
+        tracer: Optional[Tracer] = None,
     ):
         self.platform = platform if isinstance(platform, Platform) \
             else get_platform(platform)
+        self.trace = tracer or NULL_TRACER
         self.interpret = (jax.default_backend() != "tpu") \
             if interpret is None else interpret
         self.hardware_floors = hardware_floors
@@ -130,7 +133,14 @@ class MeasuredOracle:
         if t is None:
             if self.check_numerics:
                 low.verify()
-            t = time_lowered(low, warmup=self.warmup, repeats=self.repeats)
+            with self.trace.span(
+                "time-kernel", cat="oracle",
+                workload=s.workload.name, fallback=low.fallback,
+                grid_steps=low.grid_steps,
+            ) as ksp:
+                t = time_lowered(low, warmup=self.warmup,
+                                 repeats=self.repeats)
+                ksp.set(latency_s=t)
             self.timed_kernels += 1
             self._config_cache[ckey] = t
         self._cache[key] = t
@@ -159,6 +169,14 @@ class HybridOracle:
     @property
     def platform(self) -> Platform:
         return self.measured.platform
+
+    @property
+    def trace(self) -> Tracer:
+        return self.measured.trace
+
+    @trace.setter
+    def trace(self, tracer: Tracer) -> None:
+        self.measured.trace = tracer
 
     def measure(self, s: Schedule) -> float:
         return self.measured.measure(s)

@@ -8,6 +8,12 @@ for A/B runs (protocol: EXPERIMENTS.md §Serve).  ``--speculative`` adds
 the draft-and-verify decode lane (``--draft-arch``/``--draft-len``;
 EXPERIMENTS.md §Speculative).
 
+``--trace-out engine.trace.json`` records the whole run as a Chrome
+trace-event timeline (admission spans, per-slot request lifetimes,
+prefill buckets / chunk lanes / decode dispatches, KV page events; open
+at ``chrome://tracing`` or https://ui.perfetto.dev).  A ``.jsonl``
+suffix writes raw events instead (EXPERIMENTS.md §Observability).
+
 ``python -m repro.launch.serve --arch tinyllama-1.1b --smoke --requests 8``
 """
 from __future__ import annotations
@@ -19,10 +25,11 @@ import numpy as np
 
 from ..configs.base import get_config
 from ..models import model as M
+from ..obs import Tracer
 from ..serve import PagedServeEngine, Request, ServeEngine
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
@@ -62,8 +69,13 @@ def main():
                          "speculative, reusing the target params)")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="draft tokens proposed per speculative round")
-    args = ap.parse_args()
+    ap.add_argument("--trace-out", default="",
+                    help="write the engine timeline here: .json = Chrome "
+                         "trace-event format (chrome://tracing), "
+                         ".jsonl = raw events")
+    args = ap.parse_args(argv)
 
+    tracer = Tracer() if args.trace_out else None
     cfg = get_config(args.arch, smoke=args.smoke)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     draft_cfg = draft_params = None
@@ -79,10 +91,12 @@ def main():
             ttft_slo_s=args.ttft_slo,
             speculative=args.speculative, draft_cfg=draft_cfg,
             draft_params=draft_params, draft_len=args.draft_len,
+            tracer=tracer,
         )
     else:
         engine = ServeEngine(
-            cfg, params, slots=args.slots, max_len=args.max_len
+            cfg, params, slots=args.slots, max_len=args.max_len,
+            tracer=tracer,
         )
     rng = np.random.RandomState(0)
     for uid in range(args.requests):
@@ -115,6 +129,10 @@ def main():
               f"tokens/target-call {s['tokens_per_target_call']:.2f}  "
               f"verify steps {s['spec_steps']}  "
               f"draft calls {s['draft_calls']}")
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        print(f"  trace: {len(tracer.events())} events -> "
+              f"{args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ from ..compiler import (
 )
 from ..compiler.records import DEFAULT_RECORDS_PATH, LEGACY_JSON_PATH
 from ..configs.base import get_config
+from ..obs import Tracer
 
 
 def _parse_seqs(args) -> list[int]:
@@ -112,6 +113,11 @@ def main(argv=None):
                     default=None, metavar="JSON_PATH",
                     help="one-shot migration of a v0 JSON tuning cache "
                          "into the versioned JSONL store, then exit")
+    ap.add_argument("--trace-out", default="",
+                    help="write the session timeline here: one span per "
+                         "compiled task / LLM proposal / oracle "
+                         "measurement (.json = Chrome trace-event format, "
+                         ".jsonl = raw events)")
     args = ap.parse_args(argv)
 
     records = TuningRecords(args.records) if args.records \
@@ -129,6 +135,7 @@ def main(argv=None):
     seqs = _parse_seqs(args)
     tasks = _tasks(cfg, seqs, args.tp, args.all_kernels)
 
+    tracer = Tracer() if args.trace_out else None
     session = CompilerSession(
         target="tpu-v5e",
         oracle=args.oracle,
@@ -139,6 +146,7 @@ def main(argv=None):
         records=records,
         shared_context=args.shared,
         measure=args.measure,
+        tracer=tracer,
     )
     artifacts = session.compile(tasks)
     for art in artifacts:
@@ -154,6 +162,9 @@ def main(argv=None):
           f"{session.samples_spent} samples, "
           f"{session.seeds_played} cross-task seeds")
     print(f"records: {records.path} ({len(records)} entries)")
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        print(f"trace: {len(tracer.events())} events -> {args.trace_out}")
     return 0
 
 

@@ -1,0 +1,27 @@
+"""``repro.obs`` — zero-dependency tracing + metrics substrate.
+
+Shared by the serving engine (``repro.serve``) and the compiler session
+(``repro.compiler``): ``Tracer`` records nestable spans and instant
+events into a bounded ring (exportable as Chrome trace-event JSON or
+JSONL), ``Histogram``/``percentile`` give exact-at-small-n latency
+percentiles, and ``export`` renders Prometheus text or a versioned JSON
+snapshot.  Every instrumentation site defaults to the disabled
+``NULL_TRACER``, so un-traced runs pay (measured, gated) near-zero
+overhead — see EXPERIMENTS.md §Observability.
+"""
+from .hist import Histogram, HistSummary, percentile
+from .trace import MAIN_TRACK, NULL_TRACER, TraceEvent, Tracer
+from .export import SCHEMA, prometheus_text, snapshot
+
+__all__ = [
+    "Histogram",
+    "HistSummary",
+    "percentile",
+    "MAIN_TRACK",
+    "NULL_TRACER",
+    "TraceEvent",
+    "Tracer",
+    "SCHEMA",
+    "prometheus_text",
+    "snapshot",
+]

@@ -1,0 +1,89 @@
+"""Metric export: Prometheus text exposition + a stable JSON snapshot.
+
+Two consumers, one source of truth:
+
+  * ``prometheus_text(counters, histograms)`` renders the standard text
+    exposition format a scrape endpoint would serve — counters as
+    ``# TYPE <name> counter`` singletons, histograms as cumulative
+    ``_bucket{le=...}`` series with ``_sum``/``_count``, so the serving
+    engine's telemetry drops straight into any Prometheus/Grafana stack.
+  * ``snapshot(counters, histograms, meta=...)`` is the machine-readable
+    JSON schema (``SCHEMA`` stamps the version) that benchmark artifacts
+    and tests consume; histogram entries carry count/sum/min/max and the
+    p50/p90/p99 from ``obs.hist`` (exact at small n).
+
+Metric names are sanitized to Prometheus conventions (``[a-zA-Z0-9_]``,
+no leading digit); the snapshot keeps the original names.
+"""
+from __future__ import annotations
+
+import re
+from typing import Mapping, Optional
+
+from .hist import Histogram
+
+SCHEMA = "repro.obs/v1"
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def _prom_name(name: str, prefix: str) -> str:
+    out = _NAME_RE.sub("_", prefix + name)
+    return "_" + out if out[:1].isdigit() else out
+
+
+def prometheus_text(
+    counters: Mapping[str, float],
+    histograms: Optional[Mapping[str, Histogram]] = None,
+    *,
+    prefix: str = "repro_",
+) -> str:
+    """The ``/metrics`` exposition body for one scrape."""
+    lines: list[str] = []
+    for name in sorted(counters):
+        pn = _prom_name(name, prefix)
+        val = counters[name]
+        kind = "gauge" if isinstance(val, float) else "counter"
+        lines.append(f"# TYPE {pn} {kind}")
+        lines.append(f"{pn} {val}")
+    for name in sorted(histograms or {}):
+        h = histograms[name]
+        pn = _prom_name(name, prefix)
+        lines.append(f"# TYPE {pn} histogram")
+        cum = 0
+        for upper, count in h.nonzero_buckets():
+            cum += count
+            lines.append(f'{pn}_bucket{{le="{upper:.6g}"}} {cum}')
+        lines.append(f'{pn}_bucket{{le="+Inf"}} {h.count}')
+        lines.append(f"{pn}_sum {h.total}")
+        lines.append(f"{pn}_count {h.count}")
+    return "\n".join(lines) + "\n"
+
+
+def snapshot(
+    counters: Mapping[str, float],
+    histograms: Optional[Mapping[str, Histogram]] = None,
+    *,
+    meta: Optional[dict] = None,
+) -> dict:
+    """Versioned JSON-ready snapshot: the stable schema trace/bench
+    artifacts embed (EXPERIMENTS.md §Observability documents the
+    fields)."""
+    hists = {}
+    for name, h in (histograms or {}).items():
+        s = h.summary()
+        hists[name] = {
+            "count": s.count, "sum": s.total,
+            "min": s.min, "max": s.max, "mean": s.mean,
+            "p50": s.p50, "p90": s.p90, "p99": s.p99,
+            "buckets": [[upper, count]
+                        for upper, count in h.nonzero_buckets()],
+        }
+    out = {
+        "schema": SCHEMA,
+        "counters": dict(counters),
+        "histograms": hists,
+    }
+    if meta:
+        out["meta"] = dict(meta)
+    return out

@@ -1,0 +1,163 @@
+"""Log-bucketed histograms with exact small-n percentiles.
+
+The metrics layer needs percentiles twice over:
+
+  * **One-shot lists** (a benchmark's collected TTFTs): ``percentile(xs,
+    q)`` — the exact linear-interpolated quantile (numpy's default
+    method, computed here without numpy so the obs package stays
+    dependency-free).  This replaces the old nearest-rank ``_p50``/
+    ``_p99`` helpers in ``serve.metrics``, which were biased high: for
+    n=4 the old p50 returned the 3rd order statistic instead of the
+    median.
+  * **Streaming observation** (per-dispatch prefill/decode wall times on
+    a long-running engine): ``Histogram`` keeps log-spaced buckets
+    (constant relative error ``growth − 1`` per bucket) plus the exact
+    samples up to ``exact_n``.  Percentile queries are *exact* while the
+    sample count is small — which is every CI run and most tests — and
+    degrade gracefully to bucket interpolation after, with bounded
+    memory forever.
+
+Histograms export as Prometheus cumulative buckets and as a JSON summary
+(``obs.export``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional, Sequence
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Exact q-th percentile (0..100) with linear interpolation between
+    closest ranks; 0.0 on an empty sequence (the metrics-summary
+    convention)."""
+    if not xs:
+        return 0.0
+    assert 0.0 <= q <= 100.0, q
+    xs = sorted(xs)
+    if len(xs) == 1:
+        return float(xs[0])
+    rank = (q / 100.0) * (len(xs) - 1)
+    lo = int(math.floor(rank))
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return float(xs[lo] + (xs[hi] - xs[lo]) * frac)
+
+
+@dataclasses.dataclass
+class HistSummary:
+    """The stable summary shape ``obs.export.snapshot`` serializes."""
+
+    count: int
+    total: float
+    min: float
+    max: float
+    p50: float
+    p90: float
+    p99: float
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+
+class Histogram:
+    """Log-bucketed streaming histogram.
+
+    Buckets cover ``(lowest * growth**i, lowest * growth**(i+1)]``;
+    values at or below ``lowest`` land in bucket 0, so zero and negative
+    observations are representable (they clamp to the first edge).  The
+    default ``growth=1.25`` bounds in-bucket interpolation error to ~12%
+    relative — plenty for latency work where the interesting signal is
+    order-of-magnitude — while ``exact_n`` raw samples keep small-n
+    percentiles *exact* (CI smokes observe tens of dispatches, not
+    millions)."""
+
+    def __init__(self, *, lowest: float = 1e-7, growth: float = 1.25,
+                 max_buckets: int = 128, exact_n: int = 1024):
+        assert growth > 1.0 and lowest > 0.0
+        self.lowest = lowest
+        self.growth = growth
+        self._log_g = math.log(growth)
+        self.max_buckets = max_buckets
+        self.exact_n = exact_n
+        self.counts = [0] * max_buckets
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._exact: Optional[list[float]] = []
+
+    # -- recording ----------------------------------------------------------
+    def _bucket(self, x: float) -> int:
+        if x <= self.lowest:
+            return 0
+        i = int(math.log(x / self.lowest) / self._log_g) + 1
+        return min(i, self.max_buckets - 1)
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        self.counts[self._bucket(x)] += 1
+        self.count += 1
+        self.total += x
+        self.min = min(self.min, x)
+        self.max = max(self.max, x)
+        if self._exact is not None:
+            self._exact.append(x)
+            if len(self._exact) > self.exact_n:
+                self._exact = None      # cap crossed: buckets take over
+
+    def observe_many(self, xs: Iterable[float]) -> None:
+        for x in xs:
+            self.observe(x)
+
+    @classmethod
+    def from_values(cls, xs: Iterable[float], **kwargs) -> "Histogram":
+        h = cls(**kwargs)
+        h.observe_many(xs)
+        return h
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def bucket_upper(self, i: int) -> float:
+        """Inclusive upper edge of bucket ``i``."""
+        return self.lowest * self.growth ** i
+
+    def percentile(self, q: float) -> float:
+        """Exact while the sample cap holds; otherwise interpolated
+        within the covering log bucket (clamped to observed min/max)."""
+        if self.count == 0:
+            return 0.0
+        if self._exact is not None:
+            return percentile(self._exact, q)
+        target = (q / 100.0) * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if seen + c >= target:
+                lo = self.lowest * self.growth ** (i - 1) if i else 0.0
+                hi = self.bucket_upper(i)
+                frac = (target - seen) / c
+                val = lo + (hi - lo) * frac
+                return float(min(max(val, self.min), self.max))
+            seen += c
+        return float(self.max)
+
+    def summary(self) -> HistSummary:
+        return HistSummary(
+            count=self.count, total=self.total,
+            min=self.min if self.count else 0.0,
+            max=self.max if self.count else 0.0,
+            p50=self.percentile(50), p90=self.percentile(90),
+            p99=self.percentile(99),
+        )
+
+    def nonzero_buckets(self) -> list[tuple[float, int]]:
+        """(upper_edge, count) for occupied buckets — the Prometheus
+        exposition and JSON snapshot read these."""
+        return [(self.bucket_upper(i), c)
+                for i, c in enumerate(self.counts) if c]

@@ -1,0 +1,267 @@
+"""Tracing substrate: nestable spans + instant events on named tracks.
+
+One ``Tracer`` per process-level run (an engine, a compiler session, a
+benchmark).  The design constraints, in order:
+
+  * **Near-zero cost when off.**  Every instrumentation site goes through
+    a tracer; the module-level ``NULL_TRACER`` is permanently disabled and
+    its ``span``/``instant``/``begin``/``end`` are constant-time no-ops,
+    so un-traced runs pay one attribute check per site.  The traced-vs-
+    untraced overhead bound is measured and gated in
+    ``benchmarks/bench_serving.py`` (EXPERIMENTS.md §Observability).
+  * **Bounded memory.**  Events land in a ring buffer (``capacity``,
+    oldest dropped first, ``dropped`` counts the loss) — a serving engine
+    can trace indefinitely without growing without bound.
+  * **Deterministic tests.**  The clock is injectable, exactly like
+    ``serve.metrics.EngineMetrics``.
+  * **Standard formats out.**  ``export_chrome`` writes the Chrome
+    trace-event JSON (open in ``chrome://tracing`` / Perfetto: one row
+    per track, spans nest by time containment), ``export_jsonl`` one
+    event per line for ad-hoc ``jq``/pandas analysis; ``write`` picks by
+    file suffix.
+
+Spans nest per thread (a thread-local stack supplies the implicit
+``track``), and an explicit ``track="slot3"`` pins an event to a named
+timeline row — the serving engine uses per-slot tracks so a trace renders
+as the classic per-slot request Gantt chart.  ``begin``/``end`` cover
+spans whose start and end live in different call frames (one request's
+admit → finish lifetime).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from collections import deque
+from typing import Callable, Optional
+
+# Default ring capacity: ~64k events is hours of engine steps, and a few
+# MB of host memory at most.
+DEFAULT_CAPACITY = 1 << 16
+
+MAIN_TRACK = "main"
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One trace event.  ``ph`` follows the Chrome trace-event phases:
+    "X" complete span (ts + dur), "B"/"E" begin/end pair, "i" instant."""
+
+    __slots__ = ("name", "cat", "ph", "ts", "dur", "track", "args")
+
+    name: str
+    cat: str
+    ph: str
+    ts: float                    # seconds on the tracer clock
+    dur: float                   # seconds ("X" only; else 0.0)
+    track: str
+    args: Optional[dict]
+
+
+class _Span:
+    """Context manager for one "X" span.  ``set(**kw)`` merges result
+    fields into the span's args before it is recorded (the span is
+    appended at *exit*, so late fields — a measured latency, an accepted
+    count — land on the same event)."""
+
+    __slots__ = ("_tracer", "name", "cat", "track", "args", "_t0")
+
+    def __init__(self, tracer, name, cat, track, args):
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.track = track
+        self.args = args
+
+    def set(self, **kwargs) -> "_Span":
+        if self.args is None:
+            self.args = {}
+        self.args.update(kwargs)
+        return self
+
+    def __enter__(self) -> "_Span":
+        t = self._tracer
+        self._t0 = t.clock()
+        stack = t._stack()
+        if self.track is None:
+            self.track = stack[-1] if stack else MAIN_TRACK
+        stack.append(self.track)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        t = self._tracer
+        t1 = t.clock()
+        t._stack().pop()
+        t._append(TraceEvent(self.name, self.cat, "X", self._t0,
+                             t1 - self._t0, self.track, self.args))
+
+
+class _NullSpan:
+    """The disabled tracer's span: one shared instance, no clock reads."""
+
+    __slots__ = ()
+
+    def set(self, **kwargs) -> "_NullSpan":
+        return self
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Tracer:
+    """Thread-safe bounded event recorder with span/instant primitives."""
+
+    def __init__(
+        self,
+        clock: Callable[[], float] = time.perf_counter,
+        *,
+        capacity: int = DEFAULT_CAPACITY,
+        enabled: bool = True,
+    ):
+        assert capacity >= 1
+        self.clock = clock
+        self.capacity = capacity
+        self.enabled = enabled
+        self.dropped = 0
+        self._buf: deque[TraceEvent] = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+        self._local = threading.local()
+
+    # -- recording ----------------------------------------------------------
+    def _stack(self) -> list:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    def _append(self, ev: TraceEvent) -> None:
+        with self._lock:
+            if len(self._buf) == self.capacity:
+                self.dropped += 1
+            self._buf.append(ev)
+
+    def span(self, name: str, cat: str = "", track: Optional[str] = None,
+             **args):
+        """``with tracer.span("prefill", rows=4) as sp: ...`` — records one
+        "X" event spanning the block.  Nested spans inherit the enclosing
+        span's track unless ``track`` pins one explicitly."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, cat, track, args or None)
+
+    def instant(self, name: str, cat: str = "",
+                track: Optional[str] = None, **args) -> None:
+        """One zero-duration "i" event (page alloc/free, COW copy, ...)."""
+        if not self.enabled:
+            return
+        if track is None:
+            stack = self._stack()
+            track = stack[-1] if stack else MAIN_TRACK
+        self._append(TraceEvent(name, cat, "i", self.clock(), 0.0, track,
+                                args or None))
+
+    def begin(self, name: str, cat: str = "",
+              track: Optional[str] = None, **args) -> None:
+        """Open a long-lived span whose end happens in another call frame
+        (e.g. one request's admit → finish).  Pair with ``end(name,
+        track=...)``; Chrome matches "B"/"E" by name within a track."""
+        if not self.enabled:
+            return
+        self._append(TraceEvent(name, cat, "B", self.clock(), 0.0,
+                                track or MAIN_TRACK, args or None))
+
+    def end(self, name: str, cat: str = "",
+            track: Optional[str] = None, **args) -> None:
+        if not self.enabled:
+            return
+        self._append(TraceEvent(name, cat, "E", self.clock(), 0.0,
+                                track or MAIN_TRACK, args or None))
+
+    # -- inspection ---------------------------------------------------------
+    def events(self) -> list[TraceEvent]:
+        """Snapshot of the ring (oldest first)."""
+        with self._lock:
+            return list(self._buf)
+
+    def spans(self, name: Optional[str] = None) -> list[TraceEvent]:
+        """Completed "X" spans, optionally filtered by name."""
+        return [e for e in self.events()
+                if e.ph == "X" and (name is None or e.name == name)]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._buf.clear()
+            self.dropped = 0
+
+    # -- export -------------------------------------------------------------
+    def _track_ids(self, events) -> dict[str, int]:
+        """Stable track → tid mapping: main first, then first-seen order
+        (per-slot tracks therefore render in admission order)."""
+        ids: dict[str, int] = {MAIN_TRACK: 0}
+        for e in events:
+            if e.track not in ids:
+                ids[e.track] = len(ids)
+        return ids
+
+    def chrome_trace(self) -> dict:
+        """The Chrome trace-event JSON object (``chrome://tracing`` /
+        Perfetto).  Timestamps convert to microseconds; per-track
+        metadata events name the rows."""
+        events = self.events()
+        tids = self._track_ids(events)
+        out = [
+            {"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
+             "args": {"name": track}}
+            for track, tid in tids.items()
+        ]
+        for e in events:
+            rec = {
+                "name": e.name, "cat": e.cat or "default", "ph": e.ph,
+                "ts": e.ts * 1e6, "pid": 0, "tid": tids[e.track],
+            }
+            if e.ph == "X":
+                rec["dur"] = e.dur * 1e6
+            if e.ph == "i":
+                rec["s"] = "t"           # thread-scoped instant
+            if e.args:
+                rec["args"] = e.args
+            out.append(rec)
+        return {"traceEvents": out, "displayTimeUnit": "ms",
+                "otherData": {"dropped_events": self.dropped}}
+
+    def export_chrome(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+            f.write("\n")
+        return path
+
+    def export_jsonl(self, path: str) -> str:
+        """One event per line: ``{"name", "cat", "ph", "ts", "dur",
+        "track", "args"}`` with times in seconds."""
+        with open(path, "w") as f:
+            for e in self.events():
+                f.write(json.dumps({
+                    "name": e.name, "cat": e.cat, "ph": e.ph,
+                    "ts": e.ts, "dur": e.dur, "track": e.track,
+                    "args": e.args or {},
+                }) + "\n")
+        return path
+
+    def write(self, path: str) -> str:
+        """Suffix-dispatched export: ``*.jsonl`` → JSONL, anything else
+        (canonically ``*.trace.json``) → Chrome trace format."""
+        if path.endswith(".jsonl"):
+            return self.export_jsonl(path)
+        return self.export_chrome(path)
+
+
+# The shared disabled tracer: instrumentation sites default to this, so
+# construction-time ``tracer or NULL_TRACER`` is the whole integration.
+NULL_TRACER = Tracer(enabled=False, capacity=1)

@@ -24,6 +24,7 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..dist import sharding as shd
 from ..models import model as M
+from ..obs import NULL_TRACER, Tracer
 from .metrics import EngineMetrics
 
 
@@ -67,6 +68,7 @@ class ServeEngine:
         backend: Optional[str] = None,
         mesh=None,
         tp: int = 1,
+        tracer: Optional[Tracer] = None,
     ):
         """``tp`` must match the degree the params were built with
         (``init_params(cfg, key, tp)``) so the cache's padded KV-head
@@ -85,6 +87,7 @@ class ServeEngine:
         self.max_len = max_len
         self.backend = backend
         self.mesh = mesh
+        self.trace = tracer or NULL_TRACER
 
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}       # slot -> request
@@ -166,10 +169,21 @@ class ServeEngine:
             if not self.queue:
                 break
             req = self.queue.popleft()
+            self.metrics.on_admit(req.uid)
+            self.trace.begin(f"req{req.uid}", cat="request",
+                             track=f"slot{slot}", uid=req.uid,
+                             prompt_len=len(req.prompt))
             toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, cache1 = self._prefill_one(self.params, toks)
-            self.metrics.prefill_calls += 1
-            self.metrics.prefill_tokens += len(req.prompt)
+            with self.trace.span("prefill", cat="serve",
+                                 track=f"slot{slot}",
+                                 tokens=len(req.prompt)):
+                t0 = self.metrics.clock()
+                logits, cache1 = self._prefill_one(self.params, toks)
+                self.metrics.prefill_calls += 1
+                self.metrics.prefill_tokens += len(req.prompt)
+                self.metrics.on_prefill_time(
+                    self.metrics.clock() - t0, len(req.prompt)
+                )
             self.cache = self._slot_write(
                 self.cache, cache1, jnp.int32(slot)
             )
@@ -177,6 +191,8 @@ class ServeEngine:
             self.active[slot] = req
             self.positions[slot] = len(req.prompt)
             self.metrics.on_first_token(req.uid)
+            self.trace.instant("first-token", cat="request",
+                               track=f"slot{slot}", uid=req.uid)
 
     def _decode_iteration(self) -> list[Request]:
         if not self.active:
@@ -184,10 +200,14 @@ class ServeEngine:
         toks = np.zeros((self.slots,), np.int32)
         for slot, req in self.active.items():
             toks[slot] = req.output[-1]
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(self.positions),
-        )
+        with self.trace.span("decode", cat="serve",
+                             rows=len(self.active)):
+            t0 = self.metrics.clock()
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(self.positions),
+            )
+            self.metrics.on_decode_time(self.metrics.clock() - t0)
         self.metrics.decode_steps += 1
         self.metrics.decode_tokens += len(self.active)
         self.metrics.on_occupancy(len(self.active) / self.slots)
@@ -204,6 +224,9 @@ class ServeEngine:
                 del self.active[slot]
                 self.positions[slot] = 0
                 self.metrics.on_finish(req.uid, len(req.output))
+                self.trace.end(f"req{req.uid}", cat="request",
+                               track=f"slot{slot}",
+                               new_tokens=len(req.output))
         return done
 
 

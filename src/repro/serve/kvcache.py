@@ -56,6 +56,7 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..models import model as M
+from ..obs import NULL_TRACER, Tracer
 
 # Per-token attention-cache leaves; everything else is per-slot state.
 PAGED_LEAVES = ("k", "v", "kv_pos")
@@ -420,8 +421,10 @@ class PagedKVCache:
         prefix_cache: bool = False,
         mesh=None,
         tp: int = 1,
+        tracer: Optional[Tracer] = None,
     ):
         assert page_size >= 1
+        self.trace = tracer or NULL_TRACER
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -547,12 +550,17 @@ class PagedKVCache:
         slot, drawing from its reservation (decode growth is lazy)."""
         need = self.pages_needed(n_tokens)
         own = self._owned[slot]
+        grabbed: list[int] = []
         while len(own) < need:
             page = self._free.pop()
             self._ref[page] = 1
             own.append(page)
+            grabbed.append(page)
             self.table[slot, len(own) - 1] = page
             self._reserved[slot] = max(0, self._reserved[slot] - 1)
+        if grabbed:
+            self.trace.instant("page-alloc", cat="kv", slot=slot,
+                               pages=grabbed)
 
     def attach(self, slot: int, page_ids: list) -> None:
         """Share already-live pages into a slot's table (prefix reuse): each
@@ -594,6 +602,8 @@ class PagedKVCache:
         own[page_idx] = new
         self.table[slot, page_idx] = new
         self.cow_copies += 1
+        self.trace.instant("cow-copy", cat="kv", slot=slot, src=int(page),
+                           dst=int(new), keep=int(keep))
         return True
 
     def fork_slot(self, src: int, dst: int) -> None:
@@ -629,6 +639,8 @@ class PagedKVCache:
         if freed:
             self.invalidate(freed)
             self._free.extend(freed)
+        self.trace.instant("rollback", cat="kv", slot=slot,
+                           n_valid=int(n_valid), freed=list(freed))
         if keep and n_valid < keep * pg:
             # boundary page: COW already invalidates the copied tail; a
             # page that was private needs the explicit tail reset
@@ -658,6 +670,8 @@ class PagedKVCache:
             if invalidate:
                 self.invalidate(freed)
             self._free.extend(freed)
+            self.trace.instant("page-free", cat="kv", slot=slot,
+                               pages=list(freed))
         self._owned[slot] = []
         self._reserved[slot] = 0
         self.table[slot] = NULL_PAGE
@@ -756,6 +770,8 @@ class PagedKVCache:
         if freed:
             self.invalidate(freed)
             self._free.extend(freed)
+            self.trace.instant("prefix-evict", cat="kv",
+                               pages=list(freed))
         return n
 
     # -- data movement ------------------------------------------------------

@@ -1,23 +1,29 @@
 """Serving telemetry: TTFT / TPOT / throughput / cache occupancy.
 
 One ``EngineMetrics`` per engine; one ``RequestMetrics`` per request.  The
-engine calls the ``on_*`` hooks at submit / first token / finish and bumps
-step counters from its scheduling loop; ``summary()`` folds everything into
-the flat dict that ``benchmarks/bench_serving.py`` emits and
-EXPERIMENTS.md §Serve defines the measurement rules for:
+engine calls the ``on_*`` hooks at submit / admit / first token / finish
+and bumps step counters from its scheduling loop; ``summary()`` folds
+everything into the flat dict that ``benchmarks/bench_serving.py`` emits
+and EXPERIMENTS.md §Serve defines the measurement rules for:
 
   * **TTFT** — submit → first generated token (queueing + prefill).
   * **TPOT** — (finish − first token) / (new_tokens − 1): steady decode.
   * **throughput** — generated tokens / (first submit → last finish).
   * **occupancy** — used / capacity KV pages, sampled once per engine step.
 
-The clock is injectable for deterministic tests.
+Percentiles come from ``repro.obs.hist`` (exact linear-interpolated at
+small n); per-dispatch wall times stream into log-bucketed
+``obs.Histogram``s so a long-running engine keeps bounded-memory latency
+distributions — ``histograms()``/``prometheus()`` expose them to the
+export layer.  The clock is injectable for deterministic tests.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from typing import Callable, Optional
+
+from ..obs import Histogram, percentile, prometheus_text
 
 
 @dataclasses.dataclass
@@ -27,6 +33,7 @@ class RequestMetrics:
     uid: int
     prompt_len: int = 0
     submit_t: Optional[float] = None
+    admit_t: Optional[float] = None
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     new_tokens: int = 0
@@ -48,20 +55,6 @@ class RequestMetrics:
 
 def _mean(xs: list) -> float:
     return sum(xs) / len(xs) if xs else 0.0
-
-
-def _p50(xs: list) -> float:
-    if not xs:
-        return 0.0
-    xs = sorted(xs)
-    return xs[len(xs) // 2]
-
-
-def _p99(xs: list) -> float:
-    if not xs:
-        return 0.0
-    xs = sorted(xs)
-    return xs[min(len(xs) - 1, int(0.99 * len(xs)))]
 
 
 class EngineMetrics:
@@ -101,12 +94,15 @@ class EngineMetrics:
         self.spec_emitted = 0        # tokens emitted via the spec lane
         self.draft_calls = 0         # draft-model decode dispatches
         self.draft_prefill_calls = 0
-        self.admitted = 0
+        self.admitted = 0            # requests granted a slot (on_admit)
         self.finished = 0
         self.ttft_slo_s: Optional[float] = None
         self._occ_sum = 0.0
         self._occ_max = 0.0
         self._occ_n = 0
+        # streaming per-dispatch wall-time distributions (bounded memory)
+        self.prefill_hist = Histogram()
+        self.decode_hist = Histogram()
 
     # -- request lifecycle hooks -------------------------------------------
     def on_submit(self, uid: int, prompt_len: int) -> None:
@@ -114,11 +110,18 @@ class EngineMetrics:
             uid, prompt_len=prompt_len, submit_t=self.clock()
         )
 
+    def on_admit(self, uid: int) -> None:
+        """The request won a slot (admission — NOT first token: a chunked
+        prefill admits many steps before its first token emerges)."""
+        self.admitted += 1
+        r = self.requests.get(uid)
+        if r is not None and r.admit_t is None:
+            r.admit_t = self.clock()
+
     def on_first_token(self, uid: int) -> None:
         r = self.requests.get(uid)
         if r is not None and r.first_token_t is None:
             r.first_token_t = self.clock()
-        self.admitted += 1
 
     def on_finish(self, uid: int, new_tokens: int) -> None:
         r = self.requests.get(uid)
@@ -145,6 +148,12 @@ class EngineMetrics:
         seconds-per-token estimate.  ``tokens`` is informational (the
         token counters are bumped by the engine alongside)."""
         self.prefill_time_s += dt
+        self.prefill_hist.observe(dt)
+
+    def on_decode_time(self, dt: float) -> None:
+        """Wall time of one decode (or speculative verify-round)
+        dispatch."""
+        self.decode_hist.observe(dt)
 
     def prefill_rate(self) -> float:
         """Observed seconds per prefilled token (0.0 before any data):
@@ -172,8 +181,8 @@ class EngineMetrics:
             "wall_s": wall,
             "throughput_tok_s": toks / wall,
             "ttft_mean_s": _mean(ttfts),
-            "ttft_p50_s": _p50(ttfts),
-            "ttft_p99_s": _p99(ttfts),
+            "ttft_p50_s": percentile(ttfts, 50),
+            "ttft_p99_s": percentile(ttfts, 99),
             "ttft_under_slo": under_slo,
             "tpot_mean_s": _mean(tpots),
             "prefill_calls": self.prefill_calls,
@@ -203,3 +212,44 @@ class EngineMetrics:
             "kv_occupancy_mean": self._occ_sum / max(1, self._occ_n),
             "kv_occupancy_max": self._occ_max,
         }
+
+    # -- export surfaces (repro.obs) ----------------------------------------
+    def counters(self) -> dict:
+        """Monotonic counters + admitted/finished — the Prometheus-side
+        view (summary() is the benchmark-side one)."""
+        return {
+            "admitted": self.admitted,
+            "finished": self.finished,
+            "prefill_calls": self.prefill_calls,
+            "prefill_chunk_calls": self.prefill_chunk_calls,
+            "prefill_tokens": self.prefill_tokens,
+            "prefix_hits": self.prefix_hits,
+            "prefix_cached_tokens": self.prefix_cached_tokens,
+            "decode_steps": self.decode_steps,
+            "decode_tokens": self.decode_tokens,
+            "spec_steps": self.spec_steps,
+            "spec_accepted": self.spec_accepted,
+            "draft_calls": self.draft_calls,
+        }
+
+    def histograms(self) -> dict:
+        """Latency distributions: streaming dispatch hists + request-level
+        TTFT/TPOT built from the finished-request registry."""
+        done = [r for r in self.requests.values() if r.finish_t is not None]
+        out = {
+            "prefill_dispatch_s": self.prefill_hist,
+            "decode_dispatch_s": self.decode_hist,
+            "ttft_s": Histogram.from_values(
+                t for t in (r.ttft for r in done) if t is not None
+            ),
+            "tpot_s": Histogram.from_values(
+                t for t in (r.tpot for r in done) if t is not None
+            ),
+        }
+        return out
+
+    def prometheus(self, prefix: str = "repro_serve_") -> str:
+        """Prometheus text exposition of the engine's telemetry."""
+        return prometheus_text(
+            self.counters(), self.histograms(), prefix=prefix
+        )

@@ -65,6 +65,7 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..models import model as M
+from ..obs import NULL_TRACER, Tracer
 from . import kvcache as KV
 from .engine import Request, batched_decode_fn
 from .metrics import EngineMetrics
@@ -112,6 +113,7 @@ class PagedServeEngine:
         mesh=None,
         tp: int = 1,
         metrics: Optional[EngineMetrics] = None,
+        tracer: Optional[Tracer] = None,
     ):
         """``tp`` must match the degree the params were built with
         (``init_params(cfg, key, tp)``) so the pool's padded KV-head axis
@@ -134,10 +136,12 @@ class PagedServeEngine:
         # count-dependent), so both only engage on dense blocks
         self.prefill_chunk = prefill_chunk if cfg.block == "dense" else 0
         self.prefix_enabled = prefix_cache and cfg.block == "dense"
+        self.trace = tracer or NULL_TRACER
 
         self.kv = KV.PagedKVCache(
             cfg, slots, max_len, page_size=page_size, capacity=capacity,
             prefix_cache=self.prefix_enabled, mesh=mesh, tp=tp,
+            tracer=tracer,
         )
         self.params = params
         if mesh is not None:
@@ -177,7 +181,7 @@ class PagedServeEngine:
                 cfg, self.params, self.kv, slots=slots,
                 draft_cfg=draft_cfg, draft_params=draft_params,
                 draft_len=draft_len, backend=backend,
-                metrics=self.metrics,
+                metrics=self.metrics, tracer=tracer,
             )
 
     # -- public API ---------------------------------------------------------
@@ -249,6 +253,11 @@ class PagedServeEngine:
         free = self._free_slots()
         if not free or not self.queue:
             return
+        with self.trace.span("admit", cat="serve", queued=len(self.queue),
+                             free_slots=len(free)) as sp:
+            self._admit_ranked(free, sp)
+
+    def _admit_ranked(self, free: list[int], sp) -> None:
         now = self.metrics.clock()
         ranked = self.policy.order(self._candidates(now), now, self.metrics)
         admitted: set[int] = set()
@@ -300,6 +309,12 @@ class PagedServeEngine:
                 self.metrics.on_prefix_lookup(
                     match is not None, match.tokens if match else 0
                 )
+            self.metrics.on_admit(req.uid)
+            self.trace.begin(
+                f"req{req.uid}", cat="request", track=f"slot{slot}",
+                uid=req.uid, prompt_len=len(req.prompt),
+                cached_tokens=match.tokens if match else 0,
+            )
             if match is not None:
                 # lane seeded with the shared prefix K/V: only the suffix
                 # is ever computed.  The boundary page goes private first
@@ -327,6 +342,7 @@ class PagedServeEngine:
             )
             for uid in admitted:   # only read while queued: keep bounded
                 self._arrival_order.pop(uid, None)
+        sp.set(admitted=len(admitted))
         self._batched_prefill(batch)
 
     def _bucket_tokens(self, plen: int) -> int:
@@ -393,20 +409,24 @@ class PagedServeEngine:
             for i, (_, req) in enumerate(group):
                 toks[i, : len(req.prompt)] = req.prompt
                 lens[i] = len(req.prompt)
-            t0 = self.metrics.clock()
-            logits, rows = self._prefill_fn(cache_len)(
-                self.params, jnp.asarray(toks), jnp.asarray(lens)
-            )
-            self.metrics.prefill_calls += 1
-            real = int(sum(len(r.prompt) for _, r in group))
-            self.metrics.prefill_tokens += real
-            self.metrics.prefill_padded_tokens += n_pad * s_tok - real
-            self.metrics.on_prefill_time(
-                self.metrics.clock() - t0, n_pad * s_tok
-            )
-            for slot, req in group:
-                self.kv.alloc_upto(slot, len(req.prompt))
-            self.kv.write_prefill([s for s, _ in group], rows)
+            with self.trace.span(
+                "prefill-bucket", cat="serve", bucket_tokens=s_tok,
+                rows=n_pad, slots=[s for s, _ in group],
+            ):
+                t0 = self.metrics.clock()
+                logits, rows = self._prefill_fn(cache_len)(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens)
+                )
+                self.metrics.prefill_calls += 1
+                real = int(sum(len(r.prompt) for _, r in group))
+                self.metrics.prefill_tokens += real
+                self.metrics.prefill_padded_tokens += n_pad * s_tok - real
+                self.metrics.on_prefill_time(
+                    self.metrics.clock() - t0, n_pad * s_tok
+                )
+                for slot, req in group:
+                    self.kv.alloc_upto(slot, len(req.prompt))
+                self.kv.write_prefill([s for s, _ in group], rows)
             if self.spec is not None:
                 self.spec.prefill([s for s, _ in group], toks, lens)
             for i, (slot, req) in enumerate(group):
@@ -415,6 +435,8 @@ class PagedServeEngine:
                 self.active[slot] = req
                 self.positions[slot] = len(req.prompt)
                 self.metrics.on_first_token(req.uid)
+                self.trace.instant("first-token", cat="request",
+                                   track=f"slot{slot}", uid=req.uid)
 
     # -- chunked prefill lanes ----------------------------------------------
     def _chunk_fn(self, take: int, n: int):
@@ -457,15 +479,20 @@ class PagedServeEngine:
                 toks[i] = st.req.prompt[st.done: st.done + take]
                 starts[i] = st.done
             rows = [st.cache for _, st in group]
-            t0 = self.metrics.clock()
-            logits, cache = self._chunk_fn(take, n)(
-                self.params, jnp.asarray(toks), rows, jnp.asarray(starts)
-            )
-            self.metrics.prefill_chunk_calls += 1
-            self.metrics.prefill_tokens += n * take
-            self.metrics.on_prefill_time(
-                self.metrics.clock() - t0, n * take
-            )
+            with self.trace.span(
+                "chunk-lane", cat="serve", chunk_tokens=take, lanes=n,
+                slots=[s for s, _ in group],
+            ):
+                t0 = self.metrics.clock()
+                logits, cache = self._chunk_fn(take, n)(
+                    self.params, jnp.asarray(toks), rows,
+                    jnp.asarray(starts)
+                )
+                self.metrics.prefill_chunk_calls += 1
+                self.metrics.prefill_tokens += n * take
+                self.metrics.on_prefill_time(
+                    self.metrics.clock() - t0, n * take
+                )
             for i, (slot, st) in enumerate(group):
                 st.cache = jax.tree.map(lambda x: x[:, i: i + 1], cache)
                 st.done += take
@@ -499,6 +526,8 @@ class PagedServeEngine:
         self.active[slot] = req
         self.positions[slot] = plen
         self.metrics.on_first_token(req.uid)
+        self.trace.instant("first-token", cat="request",
+                           track=f"slot{slot}", uid=req.uid)
         del self.prefilling[slot]
 
     # -- decode -------------------------------------------------------------
@@ -536,11 +565,16 @@ class PagedServeEngine:
             # index still references copies it first
             self.kv.ensure_writable(slot, pos // self.kv.page_size, pos)
         page_ids, offs = self.kv.token_targets(self.positions)
-        logits, self.kv.pool, self.kv.state = self._decode_j(
-            self.params, jnp.asarray(toks), self.kv.pool, self.kv.state,
-            self.kv.table_device(), jnp.asarray(self.positions),
-            jnp.asarray(page_ids), jnp.asarray(offs),
-        )
+        with self.trace.span("decode", cat="serve",
+                             rows=len(self.active)):
+            t0 = self.metrics.clock()
+            logits, self.kv.pool, self.kv.state = self._decode_j(
+                self.params, jnp.asarray(toks), self.kv.pool,
+                self.kv.state, self.kv.table_device(),
+                jnp.asarray(self.positions),
+                jnp.asarray(page_ids), jnp.asarray(offs),
+            )
+            self.metrics.on_decode_time(self.metrics.clock() - t0)
         self.metrics.decode_steps += 1
         self.metrics.decode_tokens += len(self.active)
         self.metrics.on_occupancy(self.kv.occupancy())
@@ -559,6 +593,9 @@ class PagedServeEngine:
                 self.positions[slot] = 0
                 freed.extend(self.kv.release(slot, invalidate=False))
                 self.metrics.on_finish(req.uid, len(req.output))
+                self.trace.end(f"req{req.uid}", cat="request",
+                               track=f"slot{slot}",
+                               new_tokens=len(req.output))
         self.kv.invalidate(freed)  # one reset dispatch per step
         return done
 
@@ -567,7 +604,11 @@ class PagedServeEngine:
         (1..draft_len+1 tokens per slot); request lifecycle — finish
         detection, slot release, metrics — stays here and mirrors the
         single-token path token-for-token."""
-        emitted = self.spec.step(self.active, self.positions)
+        with self.trace.span("spec-round", cat="serve",
+                             rows=len(self.active)):
+            t0 = self.metrics.clock()
+            emitted = self.spec.step(self.active, self.positions)
+            self.metrics.on_decode_time(self.metrics.clock() - t0)
         self.metrics.decode_steps += 1
         self.metrics.on_occupancy(self.kv.occupancy())
         done = []
@@ -587,5 +628,8 @@ class PagedServeEngine:
                 self.positions[slot] = 0
                 freed.extend(self.kv.release(slot, invalidate=False))
                 self.metrics.on_finish(req.uid, len(req.output))
+                self.trace.end(f"req{req.uid}", cat="request",
+                               track=f"slot{slot}",
+                               new_tokens=len(req.output))
         self.kv.invalidate(freed)
         return done

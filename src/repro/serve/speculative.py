@@ -50,6 +50,7 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..models import model as M
+from ..obs import NULL_TRACER, Tracer
 from . import kvcache as KV
 from .engine import Request, batched_decode_fn
 from .metrics import EngineMetrics
@@ -71,6 +72,7 @@ class SpeculativeDecoder:
         draft_len: int = 4,
         backend: Optional[str] = None,
         metrics: Optional[EngineMetrics] = None,
+        tracer: Optional[Tracer] = None,
     ):
         assert cfg.block == "dense", (
             "speculative decoding needs a stateless dense block "
@@ -84,6 +86,7 @@ class SpeculativeDecoder:
         self.k = int(draft_len)
         self.backend = backend
         self.metrics = metrics if metrics is not None else EngineMetrics()
+        self.trace = tracer or NULL_TRACER
         self.draft_cfg = draft_cfg if draft_cfg is not None else cfg
         self.draft_params = draft_params if draft_params is not None \
             else params
@@ -222,15 +225,17 @@ class SpeculativeDecoder:
         #    holding K/V through pos + k
         drafts = np.zeros((S, k), np.int32)
         cur = jnp.asarray(t0)
-        for j in range(k + 1):
-            lg, self.draft_cache = self._draft_dec(
-                self.draft_params, cur, self.draft_cache,
-                jnp.asarray(pos0 + j),
-            )
-            self.metrics.draft_calls += 1
-            if j < k:
-                cur = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
-                drafts[:, j] = np.asarray(cur)
+        with self.trace.span("draft", cat="spec", k=k,
+                             rows=len(active)):
+            for j in range(k + 1):
+                lg, self.draft_cache = self._draft_dec(
+                    self.draft_params, cur, self.draft_cache,
+                    jnp.asarray(pos0 + j),
+                )
+                self.metrics.draft_calls += 1
+                if j < k:
+                    cur = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+                    drafts[:, j] = np.asarray(cur)
 
         # 2) COW/alloc the speculative window [pos, pos + k_eff]: writes
         #    only ever land in private pages
@@ -248,12 +253,13 @@ class SpeculativeDecoder:
             kv.table,
             np.full((S, self._ext_cols), KV.TRASH_PAGE, np.int32),
         ], axis=1)
-        logits, rows = self._verify_j(
-            self.params, jnp.asarray(vtoks), kv.pool, jnp.asarray(table),
-            jnp.asarray(pos0),
-        )
-        self.metrics.spec_steps += 1
-        y = np.asarray(jnp.argmax(logits, axis=-1))        # [S, k+1]
+        with self.trace.span("verify", cat="spec", rows=len(active)):
+            logits, rows = self._verify_j(
+                self.params, jnp.asarray(vtoks), kv.pool,
+                jnp.asarray(table), jnp.asarray(pos0),
+            )
+            self.metrics.spec_steps += 1
+            y = np.asarray(jnp.argmax(logits, axis=-1))    # [S, k+1]
 
         # 4) greedy acceptance + eos truncation (host): position j's
         #    target argmax y[j] judges draft j; the first mismatch (or the
@@ -270,6 +276,9 @@ class SpeculativeDecoder:
                 if req.eos_id is not None and toks[-1] == req.eos_id:
                     break
             emitted[slot] = toks
+            self.trace.instant("spec-accept", cat="spec",
+                               track=f"slot{slot}", proposed=ke,
+                               accepted=m, emitted=len(toks))
             self.metrics.spec_slot_steps += 1
             self.metrics.spec_proposed += ke
             self.metrics.spec_accepted += m
@@ -291,10 +300,14 @@ class SpeculativeDecoder:
                 pages[slot, j] = kv.table[slot, p // pg]
                 offs[slot, j] = p % pg
                 posv[slot, j] = p
-        kv.pool = self._scatter_j(
-            kv.pool, rows, jnp.asarray(pages), jnp.asarray(offs),
-            jnp.asarray(posv),
-        )
+        with self.trace.span(
+            "spec-commit", cat="spec",
+            committed=sum(len(t) for t in emitted.values()),
+        ):
+            kv.pool = self._scatter_j(
+                kv.pool, rows, jnp.asarray(pages), jnp.asarray(offs),
+                jnp.asarray(posv),
+            )
 
         # 6) draft-cache accepted-length masking: drop draft K/V beyond
         #    each slot's accepted bound (and wipe inactive rows, which the

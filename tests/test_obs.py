@@ -1,0 +1,505 @@
+"""repro.obs: tracer semantics, histogram percentiles, export formats,
+metrics-layer regressions, and the traced-engine / traced-session
+integration (the PR-7 observability acceptance checks)."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.obs import (
+    MAIN_TRACK,
+    NULL_TRACER,
+    Histogram,
+    Tracer,
+    percentile,
+    prometheus_text,
+    snapshot,
+)
+from repro.serve import PagedServeEngine, Request, ServeEngine
+from repro.serve.metrics import EngineMetrics
+
+CFG = get_config("tinyllama-1.1b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    return t, clock
+
+
+# ---------------------------------------------------------------------------
+# Tracer primitives
+# ---------------------------------------------------------------------------
+
+
+def test_span_records_x_event_with_late_args():
+    t, clock = _fake_clock()
+    tr = Tracer(clock=clock)
+    with tr.span("work", cat="c", rows=3) as sp:
+        sp.set(latency_s=0.5)
+    (ev,) = tr.events()
+    assert (ev.name, ev.ph, ev.cat, ev.track) == ("work", "X", "c",
+                                                  MAIN_TRACK)
+    assert ev.ts == 1.0 and ev.dur == 1.0   # enter at t=1, exit at t=2
+    assert ev.args == {"rows": 3, "latency_s": 0.5}
+
+
+def test_nested_spans_inherit_track():
+    _, clock = _fake_clock()
+    tr = Tracer(clock=clock)
+    with tr.span("outer", track="slot3"):
+        with tr.span("inner"):          # no explicit track: inherits
+            tr.instant("tick")          # instants inherit too
+    inner, outer = tr.spans("inner")[0], tr.spans("outer")[0]
+    tick = [e for e in tr.events() if e.name == "tick"][0]
+    assert inner.track == outer.track == tick.track == "slot3"
+    # nesting by time containment (what chrome://tracing renders)
+    assert outer.ts < inner.ts
+    assert inner.ts + inner.dur < outer.ts + outer.dur
+
+
+def test_begin_end_cross_frame_pair():
+    _, clock = _fake_clock()
+    tr = Tracer(clock=clock)
+    tr.begin("req7", track="slot0", uid=7)
+    tr.instant("first-token", track="slot0")
+    tr.end("req7", track="slot0", new_tokens=5)
+    phs = [e.ph for e in tr.events()]
+    assert phs == ["B", "i", "E"]
+    b, e = tr.events()[0], tr.events()[2]
+    assert b.track == e.track == "slot0"
+    assert b.ts < e.ts
+
+
+def test_ring_buffer_bounds_memory_and_counts_drops():
+    _, clock = _fake_clock()
+    tr = Tracer(clock=clock, capacity=4)
+    for i in range(10):
+        tr.instant(f"e{i}")
+    evs = tr.events()
+    assert len(evs) == 4
+    assert [e.name for e in evs] == ["e6", "e7", "e8", "e9"]  # oldest out
+    assert tr.dropped == 6
+    assert tr.chrome_trace()["otherData"]["dropped_events"] == 6
+    tr.clear()
+    assert tr.events() == [] and tr.dropped == 0
+
+
+def test_disabled_tracer_records_nothing():
+    calls = [0]
+
+    def clock():
+        calls[0] += 1
+        return 0.0
+
+    tr = Tracer(clock=clock, enabled=False)
+    with tr.span("x") as sp:
+        sp.set(a=1)
+    tr.instant("y")
+    tr.begin("z")
+    tr.end("z")
+    assert tr.events() == []
+    assert calls[0] == 0        # the disabled path never reads the clock
+    assert NULL_TRACER.events() == []
+
+
+def test_chrome_trace_format(tmp_path):
+    _, clock = _fake_clock()
+    tr = Tracer(clock=clock)
+    with tr.span("a", cat="serve", track="slot1", rows=2):
+        pass
+    tr.instant("i1", track="slot1")
+    path = tr.write(str(tmp_path / "t.trace.json"))
+    d = json.load(open(path))
+    evs = d["traceEvents"]
+    meta = {e["args"]["name"]: e["tid"] for e in evs if e["ph"] == "M"}
+    assert meta[MAIN_TRACK] == 0 and "slot1" in meta
+    x = [e for e in evs if e["ph"] == "X"][0]
+    assert x["ts"] == 1.0 * 1e6 and x["dur"] == 1.0 * 1e6  # microseconds
+    assert x["tid"] == meta["slot1"]
+    assert x["args"] == {"rows": 2}
+    i = [e for e in evs if e["ph"] == "i"][0]
+    assert i["s"] == "t"
+
+
+def test_jsonl_export(tmp_path):
+    _, clock = _fake_clock()
+    tr = Tracer(clock=clock)
+    with tr.span("a"):
+        pass
+    tr.instant("b", track="slot0", pages=[1, 2])
+    path = tr.write(str(tmp_path / "t.jsonl"))
+    lines = [json.loads(l) for l in open(path)]
+    assert [l["name"] for l in lines] == ["a", "b"]
+    assert lines[1]["args"] == {"pages": [1, 2]}
+    assert lines[0]["ph"] == "X" and lines[0]["dur"] == 1.0  # seconds
+
+
+# ---------------------------------------------------------------------------
+# histograms / percentiles
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_exact_interpolation():
+    assert percentile([], 99) == 0.0
+    assert percentile([3.0], 50) == 3.0
+    xs = [0.5, 2.0, 0.9, 1.5]
+    assert percentile(xs, 0) == 0.5
+    assert percentile(xs, 100) == 2.0
+    assert percentile(xs, 50) == pytest.approx(1.2)    # true median
+    assert percentile(xs, 99) == pytest.approx(1.985)
+    # the old nearest-rank helper returned 1.5 for p50 on n=4 (biased
+    # high); interpolation must return the midpoint of 0.9 and 1.5
+    assert percentile([1, 2, 3, 4], 50) == pytest.approx(2.5)
+
+
+def test_histogram_exact_small_n_matches_percentile():
+    h = Histogram()
+    xs = [0.001, 0.01, 0.005, 0.1, 0.0001]
+    h.observe_many(xs)
+    for q in (50, 90, 99):
+        assert h.percentile(q) == pytest.approx(percentile(xs, q))
+    s = h.summary()
+    assert s.count == 5 and s.min == 0.0001 and s.max == 0.1
+    assert s.mean == pytest.approx(sum(xs) / 5)
+
+
+def test_histogram_bucket_fallback_bounded_error():
+    h = Histogram(exact_n=10)
+    rng = np.random.RandomState(0)
+    xs = list(rng.lognormal(-6, 1.0, size=500))
+    h.observe_many(xs)
+    assert h._exact is None             # cap crossed: buckets took over
+    for q in (50, 90, 99):
+        exact = percentile(xs, q)
+        approx = h.percentile(q)
+        # log buckets with growth=1.25 bound relative error to ~1 bucket
+        assert abs(approx - exact) / exact < 0.25, (q, exact, approx)
+    assert h.percentile(100) <= h.max
+    assert sum(c for _, c in h.nonzero_buckets()) == 500
+
+
+def test_histogram_zero_and_below_lowest():
+    h = Histogram()
+    h.observe(0.0)
+    h.observe(-1.0)
+    assert h.count == 2
+    assert h.counts[0] == 2             # clamp to the first bucket
+    assert Histogram().percentile(50) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# export: Prometheus text + JSON snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_text_exposition():
+    h = Histogram.from_values([0.001, 0.01, 0.01])
+    text = prometheus_text({"finished": 3, "occ": 0.5}, {"lat_s": h},
+                           prefix="t_")
+    assert "# TYPE t_finished counter" in text
+    assert "t_finished 3" in text
+    assert "# TYPE t_occ gauge" in text            # float -> gauge
+    assert "# TYPE t_lat_s histogram" in text
+    assert 't_lat_s_bucket{le="+Inf"} 3' in text
+    assert "t_lat_s_count 3" in text
+    # cumulative buckets: counts never decrease along le
+    cums = [int(l.rsplit(" ", 1)[1]) for l in text.splitlines()
+            if l.startswith("t_lat_s_bucket")]
+    assert cums == sorted(cums)
+
+
+def test_snapshot_schema():
+    h = Histogram.from_values([0.5, 2.0, 0.9, 1.5])
+    snap = snapshot({"n": 4}, {"ttft_s": h}, meta={"run": "x"})
+    assert snap["schema"] == "repro.obs/v1"
+    assert snap["counters"] == {"n": 4}
+    hs = snap["histograms"]["ttft_s"]
+    assert hs["count"] == 4
+    assert hs["p50"] == pytest.approx(1.2)
+    assert hs["p99"] == pytest.approx(1.985)
+    assert snap["meta"] == {"run": "x"}
+    json.dumps(snap)                    # must be JSON-serializable
+
+
+# ---------------------------------------------------------------------------
+# metrics-layer regressions (the satellite fixes)
+# ---------------------------------------------------------------------------
+
+
+def test_first_token_does_not_bump_admitted():
+    """Regression: on_first_token used to increment ``admitted``
+    unconditionally — even for unknown uids, and once per request
+    per call."""
+    m = EngineMetrics(clock=lambda: 0.0)
+    m.on_first_token(999)               # unknown uid
+    assert m.admitted == 0
+    m.on_submit(1, prompt_len=4)
+    m.on_first_token(1)
+    m.on_first_token(1)                 # idempotent
+    assert m.admitted == 0              # first token is NOT admission
+    m.on_admit(1)
+    assert m.admitted == 1
+    assert m.requests[1].admit_t is not None
+
+
+def test_admit_timestamp_ordering():
+    t = [0.0]
+    m = EngineMetrics(clock=lambda: t[0])
+    m.on_submit(1, prompt_len=4)
+    t[0] = 1.0
+    m.on_admit(1)
+    t[0] = 2.0
+    m.on_first_token(1)
+    r = m.requests[1]
+    assert r.submit_t < r.admit_t < r.first_token_t
+
+
+def test_summary_zero_finished_requests():
+    s = EngineMetrics(clock=lambda: 0.0).summary()
+    assert s["requests"] == 0
+    assert s["generated_tokens"] == 0
+    assert s["throughput_tok_s"] == 0.0
+    assert s["ttft_mean_s"] == 0.0 and s["ttft_p99_s"] == 0.0
+    assert s["tpot_mean_s"] == 0.0
+
+
+def test_summary_wall_floor_guard():
+    """All requests finishing at one instant must not divide by zero."""
+    m = EngineMetrics(clock=lambda: 5.0)
+    m.on_submit(1, prompt_len=4)
+    m.on_finish(1, new_tokens=3)
+    s = m.summary()
+    assert s["wall_s"] == pytest.approx(1e-9)
+    assert np.isfinite(s["throughput_tok_s"])
+
+
+def test_summary_spec_lane_unused():
+    m = EngineMetrics(clock=lambda: 0.0)
+    assert m.summary()["tokens_per_target_call"] == 0.0
+
+
+def test_summary_slo_with_no_ttfts():
+    m = EngineMetrics(clock=lambda: 0.0)
+    m.ttft_slo_s = 1.0
+    m.on_submit(1, prompt_len=4)
+    m.on_finish(1, new_tokens=0)        # finished but never got a token
+    assert m.summary()["ttft_under_slo"] == 1.0
+
+
+def test_metrics_prometheus_surface():
+    t = [0.0]
+    m = EngineMetrics(clock=lambda: t[0])
+    m.on_submit(1, prompt_len=4)
+    m.on_admit(1)
+    t[0] = 0.5
+    m.on_first_token(1)
+    m.on_prefill_time(0.1, 32)
+    m.on_decode_time(0.02)
+    t[0] = 1.0
+    m.on_finish(1, new_tokens=3)
+    text = m.prometheus()
+    assert "repro_serve_admitted 1" in text
+    assert "repro_serve_finished 1" in text
+    assert "# TYPE repro_serve_ttft_s histogram" in text
+    assert "# TYPE repro_serve_prefill_dispatch_s histogram" in text
+    assert m.histograms()["decode_dispatch_s"].count == 1
+
+
+# ---------------------------------------------------------------------------
+# engine + session integration: the trace reconstructs the timeline
+# ---------------------------------------------------------------------------
+
+
+def _shared_prompts(n=4, shared_len=37, page=16):
+    rng = np.random.RandomState(0)
+    shared = rng.randint(0, CFG.vocab, size=shared_len).astype(np.int32)
+    out = {}
+    for uid in range(n):
+        tail_len = page if uid == 0 else int(rng.randint(4, 10))
+        tail = rng.randint(0, CFG.vocab, size=tail_len).astype(np.int32)
+        out[uid] = np.concatenate([shared, tail])
+    return out
+
+
+def test_paged_engine_trace_reconstructs_timeline(params):
+    """--trace-out acceptance: a prefix+speculative run must leave
+    admit / prefill-bucket / draft / verify / COW / request-lifetime
+    events, correctly nested and on per-slot tracks."""
+    tr = Tracer()
+    eng = PagedServeEngine(
+        CFG, params, slots=2, max_len=96, page_size=16,
+        prefix_cache=True, speculative=True, draft_len=3, tracer=tr,
+    )
+    for uid, p in _shared_prompts().items():
+        eng.submit(Request(uid, p, max_new_tokens=6))
+    done = eng.run()
+    assert len(done) == 4
+
+    names = {e.name for e in tr.events()}
+    for required in ("admit", "prefill-bucket", "draft", "verify",
+                     "spec-commit", "spec-round", "page-alloc",
+                     "page-free", "cow-copy", "first-token"):
+        assert required in names, f"missing {required} events"
+
+    # request lifetimes: every uid opens (B) and closes (E) on a slot track
+    for uid in range(4):
+        pair = [e for e in tr.events() if e.name == f"req{uid}"]
+        assert [e.ph for e in pair] == ["B", "E"], pair
+        assert pair[0].track == pair[1].track
+        assert pair[0].track.startswith("slot")
+        assert pair[0].ts < pair[1].ts
+        assert pair[1].args["new_tokens"] == 6
+
+    # nesting: draft/verify/spec-commit fall inside their spec-round
+    rounds = tr.spans("spec-round")
+    assert rounds
+    for name in ("draft", "verify", "spec-commit"):
+        for inner in tr.spans(name):
+            assert any(r.ts <= inner.ts
+                       and inner.ts + inner.dur <= r.ts + r.dur + 1e-9
+                       for r in rounds), f"{name} not inside a spec-round"
+
+    # admit span carries queue depth and the admitted count
+    adm = tr.spans("admit")[0]
+    assert adm.args["queued"] == 4 and adm.args["admitted"] == 2
+
+    # chrome export round-trips
+    d = tr.chrome_trace()
+    tracks = {e["args"]["name"] for e in d["traceEvents"]
+              if e["ph"] == "M"}
+    assert {"slot0", "slot1"} <= tracks
+
+
+def test_dense_engine_trace(params):
+    tr = Tracer()
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, tracer=tr)
+    eng.submit(Request(0, np.arange(8, dtype=np.int32) % CFG.vocab,
+                       max_new_tokens=4))
+    eng.run()
+    names = {e.name for e in tr.events()}
+    assert {"prefill", "decode", "req0", "first-token"} <= names
+    assert eng.metrics.admitted == 1
+
+
+def test_untraced_engine_summary_unchanged(params):
+    """Tracing must be a pure observer: counters identical on/off."""
+    prompts = _shared_prompts(n=3)
+
+    def run(tracer):
+        eng = PagedServeEngine(CFG, params, slots=2, max_len=96,
+                               page_size=16, prefix_cache=True,
+                               tracer=tracer)
+        for uid, p in prompts.items():
+            eng.submit(Request(uid, p, max_new_tokens=4))
+        outs = {r.uid: r.output for r in eng.run()}
+        return outs, eng.metrics.summary()
+
+    o_off, s_off = run(None)
+    o_on, s_on = run(Tracer())
+    assert o_off == o_on
+    for k in ("requests", "prefill_calls", "prefill_tokens",
+              "decode_steps", "prefix_cached_tokens", "admitted"
+              if "admitted" in s_off else "requests"):
+        assert s_off[k] == s_on[k], k
+
+
+def test_session_trace_one_span_per_proposal_and_measurement():
+    """launch.tune acceptance: the search trace carries one llm-proposal
+    span per expansion and one oracle-measure span per consumed sample,
+    plus a provenance-carrying compile-task span."""
+    from repro.compiler import CompilerSession
+    from repro.compiler.tasks import gemm_task
+
+    tr = Tracer()
+    sess = CompilerSession(
+        "tpu-v5e", oracle="analytical", proposer="random",
+        method="llm-mcts", budget_policy=6, tracer=tr,
+    )
+    (art,) = sess.compile([gemm_task(64, 64, 64)])
+
+    tasks = tr.spans("compile-task")
+    assert len(tasks) == 1
+    args = tasks[0].args
+    assert args["workload"].startswith("gemm")
+    assert args["platform"] == "tpu-v5e"
+    assert args["method"] == "llm-mcts"
+    assert args["samples"] == art.record.samples
+    assert args["speedup"] == pytest.approx(art.record.speedup, rel=1e-3)
+
+    measures = tr.spans("oracle-measure")
+    assert len(measures) >= art.record.samples
+    assert all("latency_s" in m.args for m in measures)
+    assert len(tr.spans("llm-proposal")) >= 1
+    # every proposal/measure/backprop nests inside the compile-task span
+    t0, t1 = tasks[0].ts, tasks[0].ts + tasks[0].dur
+    for name in ("llm-proposal", "oracle-measure", "backprop"):
+        for sp in tr.spans(name):
+            assert t0 <= sp.ts and sp.ts + sp.dur <= t1 + 1e-9
+
+
+def test_measured_oracle_time_kernel_spans():
+    from repro.compiler.tasks import gemm_tuning_workload
+    from repro.core.oracle import MeasuredOracle
+    from repro.core.schedule import initial_schedule
+
+    tr = Tracer()
+    mo = MeasuredOracle("tpu-v5e", repeats=1, warmup=0,
+                        check_numerics=False, tracer=tr)
+    wl = gemm_tuning_workload(64, 64, 64)
+    mo.measure(initial_schedule(wl))
+    spans = tr.spans("time-kernel")
+    assert len(spans) == 1
+    assert spans[0].args["latency_s"] > 0
+    # cache hit: no second timing span
+    mo.measure(initial_schedule(wl))
+    assert len(tr.spans("time-kernel")) == 1
+
+
+# ---------------------------------------------------------------------------
+# launcher CLI round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_serve_launcher_trace_out(tmp_path, capsys):
+    from repro.launch import serve as serve_cli
+
+    out = tmp_path / "serve.trace.json"
+    serve_cli.main([
+        "--arch", "tinyllama-1.1b", "--smoke", "--requests", "3",
+        "--max-new", "4", "--max-len", "64", "--slots", "2",
+        "--trace-out", str(out),
+    ])
+    assert "trace:" in capsys.readouterr().out
+    d = json.load(open(out))
+    names = {e["name"] for e in d["traceEvents"] if e["ph"] != "M"}
+    assert {"admit", "prefill-bucket", "decode", "page-alloc"} <= names
+
+
+def test_tune_launcher_trace_out(tmp_path, capsys):
+    from repro.launch import tune as tune_cli
+
+    out = tmp_path / "tune.trace.jsonl"
+    rc = tune_cli.main([
+        "--arch", "tinyllama-1.1b", "--budget", "4", "--llm", "random",
+        "--method", "mcts", "--oracle", "analytical", "--no-measure",
+        "--records", str(tmp_path / "records.jsonl"),
+        "--trace-out", str(out),
+    ])
+    assert rc == 0
+    assert "trace:" in capsys.readouterr().out
+    lines = [json.loads(l) for l in open(out)]
+    assert any(l["name"] == "compile-task" for l in lines)
+    assert any(l["name"] == "oracle-measure" for l in lines)
