@@ -7,7 +7,7 @@ runtime shares — the paper's end-to-end protocol at layer granularity.
 """
 from __future__ import annotations
 
-from repro.core.search import compare_efficiency, run_search
+from repro.compiler import CompilerSession
 from repro.core.workloads import end_to_end_llama3_workloads
 
 from .common import BUDGET, PAPER_PLATFORMS, REPEATS, emit, geomean
@@ -22,7 +22,11 @@ def _e2e(platform: str, method: str, budget: int, repeats: int):
         samples = 0
         for w, share in parts:
             b = max(20, int(budget * share))
-            r = run_search(w, platform, method, budget=b, seed=seed)
+            # one-shot session per kernel: the historical run_search
+            # semantics (fresh LLM/oracle, no shared context)
+            session = CompilerSession(target=platform, method=method,
+                                      shared_context=False)
+            r = session.search(w, budget=b, seed=seed)
             inv += share / max(r.best_speedup, 1e-9)
             samples += r.samples
         total_s.append(1.0 / inv)

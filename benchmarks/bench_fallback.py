@@ -7,7 +7,7 @@ reports (10.5% / 17.2% invalid-proposal probability per mention).
 """
 from __future__ import annotations
 
-from repro.core.search import run_search
+from repro.compiler import CompilerSession
 
 from .common import ABLATION_PLATFORM, BUDGET, REPEATS, emit
 
@@ -24,10 +24,14 @@ def run(budget: int = None, repeats: int = None) -> dict:
     for tier in TIERS:
         exp = fb = prop = inv = 0
         for seed in range(repeats):
-            r = run_search(
-                "llama3_8b_attention", ABLATION_PLATFORM, "llm-mcts",
-                budget=budget, seed=seed, llm=tier,
+            # one-shot session per repeat: fresh LLM, fresh oracle, no
+            # shared context (the historical run_search semantics)
+            session = CompilerSession(
+                target=ABLATION_PLATFORM, proposer=tier, method="llm-mcts",
+                shared_context=False,
             )
+            r = session.search("llama3_8b_attention", budget=budget,
+                               seed=seed)
             exp += r.fallback.expansions
             fb += r.fallback.fallbacks
             prop += r.fallback.proposed

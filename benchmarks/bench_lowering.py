@@ -27,9 +27,10 @@ from repro.compiler import CompilerSession
 from repro.core.cost_model import HardwareOracle, get_platform
 from repro.core.lowering import LoweringError
 from repro.core.schedule import ScheduleError, initial_schedule, random_schedule
+from repro.core.surrogate import crossval_rank_predictions
 from repro.core.workloads import attention_workload, matmul_workload
 
-from .common import emit, emit_json
+from .common import emit, emit_json, spearman
 
 PLATFORM = "tpu-v5e"
 
@@ -43,44 +44,16 @@ def _workloads():
     ]
 
 
-def _ranks(xs):
-    """Average ranks (ties share their mean rank)."""
-    order = sorted(range(len(xs)), key=lambda i: xs[i])
-    ranks = [0.0] * len(xs)
-    i = 0
-    while i < len(order):
-        j = i
-        while j + 1 < len(order) and xs[order[j + 1]] == xs[order[i]]:
-            j += 1
-        mean_rank = (i + j) / 2.0
-        for k in range(i, j + 1):
-            ranks[order[k]] = mean_rank
-        i = j + 1
-    return ranks
-
-
-def spearman(xs, ys) -> float:
-    n = len(xs)
-    if n < 2:
-        return 0.0
-    rx, ry = _ranks(xs), _ranks(ys)
-    mx = sum(rx) / n
-    my = sum(ry) / n
-    cov = sum((a - mx) * (b - my) for a, b in zip(rx, ry))
-    vx = sum((a - mx) ** 2 for a in rx) ** 0.5
-    vy = sum((b - my) ** 2 for b in ry) ** 0.5
-    if vx == 0 or vy == 0:
-        return 0.0
-    return cov / (vx * vy)
-
-
 def run(n_schedules: int = None) -> dict:
     n = n_schedules or int(os.environ.get("REPRO_BENCH_LOWERING_N", "16"))
-    analytical = HardwareOracle(get_platform(PLATFORM), noise=False)
+    platform = get_platform(PLATFORM)
+    analytical = HardwareOracle(platform, noise=False)
     session = CompilerSession(target=PLATFORM, oracle="measured",
                               method="mcts", shared_context=False)
     measured = session.oracle
     out: dict = {}
+    spearman_by_backend: dict[str, dict] = {"analytical": {}, "surrogate": {}}
+    advantage: dict[str, float] = {}
     for w in _workloads():
         rng = random.Random(0)
         s0 = initial_schedule(w)
@@ -95,7 +68,8 @@ def run(n_schedules: int = None) -> dict:
             pool.setdefault(s.key(), s)
         xs, ys = [], []
         kinds: dict[str, int] = {}
-        for s in pool.values():
+        scheds = list(pool.values())
+        for s in scheds:
             try:
                 t = measured.measure(s)  # verifies vs kernels/ref.py first
             except LoweringError as e:  # numerics mismatch = hard failure
@@ -105,10 +79,19 @@ def run(n_schedules: int = None) -> dict:
             k = measured.lower(s).kind
             kinds[k] = kinds.get(k, 0) + 1
         rho = spearman(xs, ys)
+        # surrogate rank fidelity on the SAME measured pool, leave-one-out:
+        # each schedule is scored by a model trained on the others, so the
+        # correlation measures generalization, not memorization
+        sur = crossval_rank_predictions(scheds, ys, platform)
+        rho_sur = spearman(sur, ys)
         out[w.name] = rho
+        spearman_by_backend["analytical"][w.name] = round(rho, 4)
+        spearman_by_backend["surrogate"][w.name] = round(rho_sur, 4)
+        advantage[w.name] = round(rho_sur - rho, 4)
         emit(
             f"lowering/{w.name}/spearman", min(ys) * 1e6,
-            f"rho={rho:.3f};n={len(xs)};timed={measured.timed_kernels};"
+            f"rho={rho:.3f};rho_surrogate={rho_sur:.3f};n={len(xs)};"
+            f"timed={measured.timed_kernels};"
             f"kinds={'+'.join(f'{k}:{v}' for k, v in sorted(kinds.items()))}",
         )
     emit("lowering/numerics", 0.0,
@@ -118,6 +101,10 @@ def run(n_schedules: int = None) -> dict:
         "numerics_ok": True,            # a mismatch raised above
         "measurements": measured.measurements,
         "spearman": {k: round(v, 4) for k, v in out.items()},
+        "spearman_by_backend": spearman_by_backend,
+        # the headline the CI band gates: record-trained surrogate must
+        # out-rank the analytical model on every workload (strictly > 0)
+        "surrogate_advantage": advantage,
     })
     return out
 

@@ -84,6 +84,39 @@ def emit_json(table: str, payload: dict) -> str | None:
     return path
 
 
+def _ranks(xs):
+    """Average ranks (ties share their mean rank)."""
+    order = sorted(range(len(xs)), key=lambda i: xs[i])
+    ranks = [0.0] * len(xs)
+    i = 0
+    while i < len(order):
+        j = i
+        while j + 1 < len(order) and xs[order[j + 1]] == xs[order[i]]:
+            j += 1
+        mean_rank = (i + j) / 2.0
+        for k in range(i, j + 1):
+            ranks[order[k]] = mean_rank
+        i = j + 1
+    return ranks
+
+
+def spearman(xs, ys) -> float:
+    """Spearman rank correlation (shared by the lowering-fidelity and
+    surrogate rank-quality benchmarks)."""
+    n = len(xs)
+    if n < 2:
+        return 0.0
+    rx, ry = _ranks(xs), _ranks(ys)
+    mx = sum(rx) / n
+    my = sum(ry) / n
+    cov = sum((a - mx) * (b - my) for a, b in zip(rx, ry))
+    vx = sum((a - mx) ** 2 for a in rx) ** 0.5
+    vy = sum((b - my) ** 2 for b in ry) ** 0.5
+    if vx == 0 or vy == 0:
+        return 0.0
+    return cov / (vx * vy)
+
+
 def geomean(xs) -> float:
     xs = [max(x, 1e-12) for x in xs]
     return statistics.geometric_mean(xs)

@@ -39,6 +39,10 @@ TABLES = {
                                              # rank fidelity vs analytical
     "session": bench_session.run,            # beyond-paper: CompilerSession
                                              # shared-context + artifact smoke
+    "surrogate": bench_sample_efficiency.run_surrogate,
+                                             # beyond-paper: record-trained
+                                             # surrogate pre-screening vs
+                                             # plain compile-and-time
 }
 
 

@@ -10,7 +10,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.search import run_search  # noqa: E402
+from repro.compiler import CompilerSession  # noqa: E402
 
 BUDGET = 150
 GRID = [18, 36, 72, 150]
@@ -22,19 +22,21 @@ def main():
     header = f"{'method':14s}" + "".join(f"  @{g:<5d}" for g in GRID)
     print(header)
     print("-" * len(header))
+    best = None
     for method in ("evolutionary", "mcts", "llm-mcts"):
-        r = run_search("deepseek_r1_moe", "core-i9", method,
-                       budget=BUDGET, seed=0)
+        # one session per method: the session owns the LLM and oracle
+        session = CompilerSession(target="core-i9", method=method,
+                                  shared_context=False)
+        r = session.search("deepseek_r1_moe", budget=BUDGET, seed=0)
         row = f"{method:14s}" + "".join(
             f"  {r.curve.at(g):5.1f}x" for g in GRID
         )
         print(row)
+        best = r
     print("\nbest schedule found by llm-mcts:")
-    r = run_search("deepseek_r1_moe", "core-i9", "llm-mcts",
-                   budget=BUDGET, seed=0)
-    print(r.best_schedule.render())
-    print(f"\n{r.best_speedup:.1f}x over the unoptimized program "
-          f"in {r.samples} samples")
+    print(best.best_schedule.render())
+    print(f"\n{best.best_speedup:.1f}x over the unoptimized program "
+          f"in {best.samples} samples")
 
 
 if __name__ == "__main__":

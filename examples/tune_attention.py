@@ -15,16 +15,27 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.compiler import (  # noqa: E402
+    BudgetPolicy,
+    CompilerSession,
+    attention_task,
+)
 from repro.configs import get_config  # noqa: E402
-from repro.core.autotuner import KernelTuner  # noqa: E402
 from repro.kernels.flash_attention import flash_attention  # noqa: E402
 from repro.kernels.ref import attention_ref  # noqa: E402
 
 
 def main():
     cfg = get_config("tinyllama-1.1b")
-    tuner = KernelTuner(budget=48, cache_path=None)
-    blocks = tuner.tune_attention(cfg.heads, 4096, 4096, cfg.hd)
+    session = CompilerSession(
+        target="tpu-v5e", budget_policy=BudgetPolicy(per_task=48),
+        shared_context=False,
+    )
+    art = session.compile([
+        attention_task(cfg.heads, 4096, 4096, cfg.hd,
+                       label=f"{cfg.name} attention @4k"),
+    ])[0]
+    blocks = art.blocks
     print(f"tuned blocks for {cfg.name} attention @4k: "
           f"block_q={blocks.block_q} block_k={blocks.block_k}")
 

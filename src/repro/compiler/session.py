@@ -133,13 +133,29 @@ class CompilerSession:
         measure_repeats: int = 3,
         seed: int = 0,
         tracer: Optional[Tracer] = None,
+        escalate_topk: int = 1,
+        screen_width: int = 8,
+        screen_factor: int = 4,
     ):
         self.platform = target if isinstance(target, Platform) \
             else get_platform(target)
         self.trace = tracer or NULL_TRACER
+        # records before oracle: a surrogate-tier oracle trains on open
+        # from whatever the session's database has already accumulated
+        if isinstance(records, TuningRecords):
+            self.records = records
+        else:
+            self.records = TuningRecords(records)
         self.oracle = make_oracle(oracle, self.platform)
         if hasattr(self.oracle, "trace"):
             self.oracle.trace = self.trace
+        if hasattr(self.oracle, "train_from_records"):
+            self.oracle.train_from_records(self.records)
+        # screened-expansion knobs (only oracles exposing ``screen`` use
+        # them): pool width per expansion, measurements escalated per pool
+        self.escalate_topk = escalate_topk
+        self.screen_width = screen_width
+        self.screen_factor = screen_factor
         self._proposer_spec = proposer
         if isinstance(proposer, LLMBase):
             self.llm: Optional[LLMBase] = proposer
@@ -156,10 +172,6 @@ class CompilerSession:
         elif isinstance(budget_policy, int):
             budget_policy = BudgetPolicy(per_task=budget_policy)
         self.budget_policy = budget_policy
-        if isinstance(records, TuningRecords):
-            self.records = records
-        else:
-            self.records = TuningRecords(records)
         self.shared_context = shared_context
         self.context = SharedContext()
         self.trace_depth = trace_depth
@@ -208,7 +220,8 @@ class CompilerSession:
         oracle_name = _oracle_name(self.oracle)
 
         if method == "evolutionary":
-            es = EvolutionarySearch(workload, self.oracle, seed=seed)
+            es = EvolutionarySearch(workload, self.oracle, seed=seed,
+                                    screen_factor=self.screen_factor)
             curve = es.search(budget)
             best_t, best_s = es.best
             return SearchResult(
@@ -232,6 +245,8 @@ class CompilerSession:
             else:
                 proposer = LLMProposer(llm, self.platform, trace_depth=td)
 
+        mcts_kwargs.setdefault("screen_width", self.screen_width)
+        mcts_kwargs.setdefault("escalate_topk", self.escalate_topk)
         searcher = MCTS(
             workload, self.oracle, proposer=proposer,
             branching=self.branching if branching is None else branching,
@@ -433,7 +448,13 @@ class CompilerSession:
             oracle=res.oracle,
             budget_granted=grant,
             shared_context=self.shared_context,
+            # replay fidelity for the surrogate's feature extraction:
+            # dtype/epilogue are not recoverable from dims alone
+            dtype_bytes=task.workload.output.dtype_bytes,
+            epilogue=task.workload.epilogue_kind or "none",
         )
+        if hasattr(self.oracle, "surrogate_provenance"):
+            prov["surrogate"] = self.oracle.surrogate_provenance()
         if donor is not None:
             prov["seeded_from"] = donor.workload_name
             prov["donor_speedup"] = round(donor.best_speedup, 3)

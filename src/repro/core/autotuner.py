@@ -24,6 +24,7 @@ New code should use ``CompilerSession`` directly.
 from __future__ import annotations
 
 import os
+import warnings
 from typing import Optional
 
 # Block extraction lives with the artifact layer now (compiler/artifacts
@@ -99,6 +100,11 @@ class KernelTuner:
         rerank_top: int = 3,
         measure_repeats: int = 3,
     ):
+        warnings.warn(
+            "KernelTuner is deprecated; hold a repro.compiler."
+            "CompilerSession and call session.compile instead",
+            DeprecationWarning, stacklevel=2,
+        )
         self.platform = platform
         self.method = method
         self.budget = budget

@@ -45,10 +45,16 @@ class EvolutionarySearch:
         oracle: HardwareOracle,
         config: Optional[EvolutionaryConfig] = None,
         seed: int = 0,
+        screen_factor: int = 4,
     ):
         self.workload = workload
         self.oracle = oracle
         self.cfg = config or EvolutionaryConfig()
+        # Oracles exposing ``screen`` (the surrogate tier): offspring are
+        # oversampled by this factor, the learned model ranks the pool, and
+        # only the predicted-best survivors are evaluated.  Plain oracles
+        # keep the classic evaluate-everything loop (bit-identical search).
+        self.screen_factor = screen_factor
         self.rng = random.Random(seed)
         self.s0 = initial_schedule(workload)
         self.baseline_latency = oracle.measure(self.s0)
@@ -115,24 +121,61 @@ class EvolutionarySearch:
         self.curve.append((self.samples, self.baseline_latency / self.best[0]))
         return t
 
+    def _screened_batch(self, make, need: int) -> list[Schedule]:
+        """Oversample ``need * screen_factor`` candidates from ``make`` and
+        let the oracle's learned model pick the ``need`` predicted-best —
+        unpicked candidates cost zero samples (GOLEM dispatcher split)."""
+        pool: list[Schedule] = []
+        keys: set = set()
+        target = need * self.screen_factor
+        guard = 0
+        while len(pool) < target and guard < target * 8:
+            guard += 1
+            s = make()
+            if s is None:
+                continue
+            k = s.key()
+            if k not in keys:
+                keys.add(k)
+                pool.append(s)
+        if not pool:
+            return []
+        return self.oracle.screen(pool, k=min(need, len(pool)))
+
     # -- main loop ---------------------------------------------------------------
     def search(self, budget_samples: int) -> SearchCurve:
         cfg = self.cfg
-        # init population (guarded: a measured backend can refuse programs
-        # without consuming samples, which must not spin forever)
-        guard = 0
-        while len(self._pop) < cfg.population and self.samples < budget_samples \
-                and guard < cfg.population * 20:
-            guard += 1
+        screened = hasattr(self.oracle, "screen")
+
+        def _init_candidate() -> Optional[Schedule]:
             try:
-                s = random_schedule(
+                return random_schedule(
                     self.rng, self.s0, self.rng.randint(*cfg.init_steps)
                 )
             except ScheduleError:
-                continue
-            t = self._evaluate(s)
-            if t is not None:
-                self._pop.append((t, s))
+                return None
+
+        # init population (guarded: a measured backend can refuse programs
+        # without consuming samples, which must not spin forever)
+        if screened:
+            for s in self._screened_batch(_init_candidate, cfg.population):
+                if self.samples >= budget_samples:
+                    break
+                t = self._evaluate(s)
+                if t is not None:
+                    self._pop.append((t, s))
+        else:
+            guard = 0
+            while len(self._pop) < cfg.population \
+                    and self.samples < budget_samples \
+                    and guard < cfg.population * 20:
+                guard += 1
+                s = _init_candidate()
+                if s is None:
+                    continue
+                t = self._evaluate(s)
+                if t is not None:
+                    self._pop.append((t, s))
 
         stalled = 0
         while self._pop and self.samples < budget_samples and stalled < 3:
@@ -140,20 +183,34 @@ class EvolutionarySearch:
             self._pop.sort(key=lambda x: x[0])
             elites = self._pop[: cfg.elites]
             nxt = list(elites)
-            guard = 0
-            while len(nxt) < cfg.population and self.samples < budget_samples \
-                    and guard < cfg.population * 20:
-                guard += 1
+
+            def _offspring() -> Optional[Schedule]:
                 if self.rng.random() < cfg.crossover_rate and len(elites) >= 2:
                     pa, pb = self.rng.sample(elites, 2)
-                    s = self._crossover(pa[1], pb[1])
-                else:
-                    s = self._mutate(self.rng.choice(elites)[1])
-                if s is None:
-                    continue
-                t = self._evaluate(s)
-                if t is not None:
-                    nxt.append((t, s))
+                    return self._crossover(pa[1], pb[1])
+                return self._mutate(self.rng.choice(elites)[1])
+
+            if screened:
+                for s in self._screened_batch(
+                    _offspring, cfg.population - len(nxt)
+                ):
+                    if self.samples >= budget_samples:
+                        break
+                    t = self._evaluate(s)
+                    if t is not None:
+                        nxt.append((t, s))
+            else:
+                guard = 0
+                while len(nxt) < cfg.population \
+                        and self.samples < budget_samples \
+                        and guard < cfg.population * 20:
+                    guard += 1
+                    s = _offspring()
+                    if s is None:
+                        continue
+                    t = self._evaluate(s)
+                    if t is not None:
+                        nxt.append((t, s))
             self._pop = nxt
             # a generation that evaluated nothing (every candidate refused
             # by a measured backend) cannot make progress; bail out rather

@@ -106,6 +106,8 @@ class MCTS:
         transposition_table: bool = False,
         prior_weight: float = 0.0,
         tracer: Optional[Tracer] = None,
+        screen_width: int = 8,
+        escalate_topk: int = 1,
     ):
         self.workload = workload
         self.oracle = oracle
@@ -119,6 +121,13 @@ class MCTS:
         self.surrogate = surrogate if surrogate is not None else SurrogateModel()
         self.transposition_table = transposition_table
         self.prior_weight = prior_weight
+        # Screened expansion (oracle backends exposing ``screen``, i.e. the
+        # surrogate tier): pool up to ``screen_width`` candidates per
+        # expansion, escalate only the predicted-best ``escalate_topk`` to a
+        # real measurement.  Oracles without ``screen`` keep the exact
+        # one-candidate expansion below (bit-identical search).
+        self.screen_width = screen_width
+        self.escalate_topk = escalate_topk
 
         s0 = initial_schedule(workload)
         self.baseline_latency = oracle.measure(s0)
@@ -145,14 +154,19 @@ class MCTS:
 
     def step(self) -> Optional[Node]:
         leaf = self._select()
-        child = self._expand(leaf)
-        if child is None:
-            return None
-        reward = self._rollout(child)
-        with self.trace.span("backprop", cat="search", reward=reward,
-                             depth=child.depth):
-            self._backprop(child, reward)
-        return child
+        if hasattr(self.oracle, "screen"):
+            children = self._expand_screened(leaf)
+        else:
+            child = self._expand(leaf)
+            children = [] if child is None else [child]
+        last: Optional[Node] = None
+        for child in children:
+            reward = self._rollout(child)
+            with self.trace.span("backprop", cat="search", reward=reward,
+                                 depth=child.depth):
+                self._backprop(child, reward)
+            last = child
+        return last
 
     # -- phases ----------------------------------------------------------------
     def _uct(self, node: Node, parent: Node) -> float:
@@ -220,6 +234,10 @@ class MCTS:
             self._backprop(twin, twin.W / max(1, twin.N))
             return None
 
+        return self._measure_child(node, new_sched)
+
+    def _measure_child(self, node: Node, new_sched: Schedule) -> Optional[Node]:
+        """Measure one candidate (1 sample) and attach it below `node`."""
         try:
             with self.trace.span(
                 "oracle-measure", cat="search", depth=node.depth + 1,
@@ -245,6 +263,70 @@ class MCTS:
             self.best = child
         self.curve.append((self.samples, self.best.speedup))
         return child
+
+    def _expand_screened(self, node: Node) -> list[Node]:
+        """Screened expansion (surrogate oracle tier, GOLEM dispatcher
+        split): pool up to ``screen_width`` candidate variants below
+        ``node`` — the LLM proposal leading, random continuations filling —
+        let the oracle's learned model rank the whole pool, and escalate
+        only the predicted-best ``escalate_topk`` to real measurements.
+        Unescalated candidates cost zero samples."""
+        pool: list[Schedule] = []
+        keys: set = set()
+
+        def admit(s: Schedule) -> None:
+            k = s.key()
+            if k not in self._seen and k not in keys:
+                keys.add(k)
+                pool.append(s)
+
+        if self.proposer is not None:
+            trace = [
+                TraceEntry(n.schedule, n.latency_s, n.speedup)
+                for n in node.ancestors()
+            ]
+            with self.trace.span(
+                "llm-proposal", cat="search", depth=node.depth,
+                trace_len=len(trace),
+            ) as psp:
+                proposal = self.proposer.propose(trace, self.rng)
+                psp.set(
+                    fallback=proposal.fallback if proposal else True,
+                    n_transforms=len(proposal.transforms)
+                    if proposal else 0,
+                )
+            if proposal is not None and not proposal.fallback:
+                s = node.schedule
+                try:
+                    for t in proposal.transforms:
+                        s = t.apply(s)
+                    admit(s)
+                except ScheduleError:
+                    pass
+        tries = 0
+        while len(pool) < self.screen_width and tries < 16 * self.screen_width:
+            tries += 1
+            try:
+                s = node.schedule
+                for _ in range(self.rng.randint(1, 3)):
+                    s = random_transform(self.rng, s).apply(s)
+            except ScheduleError:
+                continue
+            admit(s)
+        if not pool:
+            return []
+        want = min(self.escalate_topk, len(pool))
+        ranked = self.oracle.screen(pool, k=want)
+        ranked_keys = {s.key() for s in ranked}
+        backups = [s for s in pool if s.key() not in ranked_keys]
+        children: list[Node] = []
+        for s in ranked + backups:
+            if len(children) >= want:
+                break
+            child = self._measure_child(node, s)
+            if child is not None:
+                children.append(child)
+        return children
 
     def _rollout(self, node: Node) -> float:
         """Randomized continuation scored by the surrogate (paper Fig. 2b).

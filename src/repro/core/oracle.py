@@ -199,7 +199,7 @@ class HybridOracle:
         return self.measured.speedup(s, baseline)
 
 
-ORACLES = ("analytical", "measured", "hybrid")
+ORACLES = ("analytical", "measured", "hybrid", "surrogate")
 
 
 def make_oracle(
@@ -209,7 +209,13 @@ def make_oracle(
 ):
     """Resolve an oracle knob: an Oracle instance passes through; a name
     from ``ORACLES`` (or None -> analytical) builds the backend on
-    ``platform``."""
+    ``platform``.
+
+    ``"surrogate"`` builds the record-trained pre-screening tier
+    (``core/surrogate.py``) wrapping a measured escalation oracle;
+    ``"surrogate:<backend>"`` picks a different escalation backend
+    (e.g. ``"surrogate:analytical"`` for hardware-free smoke runs).
+    """
     if spec is None or spec == "analytical":
         plat = platform if isinstance(platform, Platform) \
             else get_platform(platform)
@@ -222,6 +228,14 @@ def make_oracle(
         return HybridOracle(
             HardwareOracle(plat), MeasuredOracle(plat, **measured_kwargs)
         )
+    if isinstance(spec, str) and (
+        spec == "surrogate" or spec.startswith("surrogate:")
+    ):
+        from .surrogate import SurrogateOracle
+
+        _, _, esc = spec.partition(":")
+        escalate = make_oracle(esc or "measured", platform, **measured_kwargs)
+        return SurrogateOracle(escalate)
     if hasattr(spec, "measure"):
         return spec
     raise ValueError(f"unknown oracle {spec!r}; known: {ORACLES}")

@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import statistics
+import warnings
 from typing import Optional, Sequence
 
 from .cost_model import HardwareOracle, Platform
@@ -20,6 +21,7 @@ from .llm import FallbackStats
 from .mcts import SearchCurve
 from .oracle import HybridOracle, MeasuredOracle
 from .schedule import Schedule
+from .surrogate import SurrogateOracle
 
 METHODS = ("evolutionary", "mcts", "llm-mcts")
 
@@ -49,6 +51,8 @@ class SearchResult:
 
 
 def _oracle_name(oracle) -> str:
+    if isinstance(oracle, SurrogateOracle):
+        return f"surrogate:{_oracle_name(oracle.escalate)}"
     if isinstance(oracle, HybridOracle):
         return "hybrid"
     if isinstance(oracle, MeasuredOracle):
@@ -82,9 +86,35 @@ def run_search(
     ``oracle`` selects the objective backend: ``"analytical"`` (default,
     the machine model), ``"measured"`` (every node reward is a timed
     kernel execution via core/lowering.py), ``"hybrid"`` (measured node
-    rewards, analytical rollouts — the paper's cost split), or any
-    ``core.oracle.Oracle`` instance.
+    rewards, analytical rollouts — the paper's cost split),
+    ``"surrogate"`` (record-trained pre-screening, escalating top-k to
+    measured), or any ``core.oracle.Oracle`` instance.
     """
+    warnings.warn(
+        "run_search is deprecated; hold a repro.compiler.CompilerSession "
+        "and call session.search/session.compile instead",
+        DeprecationWarning, stacklevel=2,
+    )
+    return _one_shot_search(
+        workload, platform=platform, method=method, budget=budget,
+        seed=seed, llm=llm, trace_depth=trace_depth, branching=branching,
+        oracle=oracle, **mcts_kwargs,
+    )
+
+
+def _one_shot_search(
+    workload,
+    platform: str | Platform = "core-i9",
+    method: str = "llm-mcts",
+    budget: int = 200,
+    seed: int = 0,
+    llm: str = "gpt-4o-mini",
+    trace_depth: int = 2,
+    branching: int = 2,
+    oracle=None,
+    **mcts_kwargs,
+) -> SearchResult:
+    """One-shot session search (the body ``run_search`` shims over)."""
     from ..compiler.session import CompilerSession
 
     session = CompilerSession(
@@ -107,7 +137,7 @@ def repeat_search(
 ) -> tuple[list, list[SearchResult]]:
     """Paper protocol: repeat with different seeds, report the mean curve."""
     results = [
-        run_search(workload, platform, method, budget, seed=seed, **kw)
+        _one_shot_search(workload, platform, method, budget, seed=seed, **kw)
         for seed in range(repeats)
     ]
     grid = grid or default_grid(budget)

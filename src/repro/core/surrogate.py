@@ -1,0 +1,591 @@
+"""Record-trained surrogate oracle tier: learned pre-screening for search.
+
+``BENCH_lowering.json`` showed the analytical machine model *anti-correlates*
+with measured kernel latency (Spearman −0.51 attn / −0.56 gemm): exactly
+where reward fidelity matters most, the search ranks candidates wrongly.
+This module converts that defect into a sample-efficiency win, following the
+LLM-compiler line of work (learned models predicting optimization outcomes)
+and the GOLEM ``SurrogateDispatcher`` split: a cheap learned fitness model
+sits in front of expensive evaluation, every proposal is *ranked* for free,
+and only the top-k escalate to compile-and-time.
+
+Three layers, cheapest first:
+
+* ``featurize_schedule`` — a fixed-length, workload-agnostic feature vector
+  (log tile-band shapes, VMEM footprint vs the platform's scratch, compute
+  location, cache read/write modes, dtype, fused-epilogue kind, arch dims).
+  Unlike ``cost_model.featurize`` (whose length varies per workload), every
+  schedule of every workload maps into the SAME space, so rows pooled from
+  a whole ``TuningRecords`` database train one model.
+* ``RecordSurrogate`` — numpy-only ridge regression over log-latency with
+  per-workload-family label centering (a family's constant baseline offset
+  carries no ranking information and would otherwise dominate the fit).
+  Trains from accumulated ``TuningRecords`` rows (the winning transform
+  trace is replayed into a concrete ``Schedule``) and sharpens online as
+  escalated measurements stream back in.  The model carries a version stamp
+  tied to the records schema + feature schema; rows from a different
+  records schema are skipped (staleness guard).
+* ``SurrogateOracle`` — the fourth ``make_oracle`` backend: wraps any
+  escalation oracle (``MeasuredOracle`` by default), exposes ``screen`` so
+  MCTS expansion and evolutionary offspring scoring can rank whole
+  candidate pools before spending hardware time, and feeds every escalated
+  measurement back as a training row.
+
+Dependency-free by design (numpy only): the surrogate must stay cheap
+enough that ranking a candidate costs microseconds, not milliseconds.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..obs import NULL_TRACER, Tracer
+from .cost_model import Platform, intra_extent
+from .schedule import (
+    CacheRead,
+    CacheWrite,
+    ComputeLocation,
+    Layout,
+    Parallel,
+    Schedule,
+    ScheduleError,
+    TileSize,
+    Transform,
+    Unroll,
+    Vectorize,
+    initial_schedule,
+)
+from .workloads import Workload, attention_workload, matmul_workload
+
+# Bump when the feature vector changes shape/meaning: a model trained on a
+# different feature schema must never score candidates silently.
+FEATURE_VERSION = 1
+
+
+def _log2(x: float) -> float:
+    return math.log2(max(float(x), 1.0))
+
+
+def featurize_schedule(s: Schedule, platform: Platform) -> np.ndarray:
+    """Fixed-length structural features of (schedule, platform).
+
+    Workload-agnostic on purpose: rows from an attention sweep and a GEMM
+    sweep land in the same space, so one model pools the whole records
+    database.  Everything is cheap arithmetic over the schedule state — no
+    oracle internals, no lowering.
+    """
+    w = s.workload
+    spatial = w.spatial_loops
+    reduction = w.reduction_loops
+    tm = s.tile_map
+    feats: list[float] = []
+
+    # -- iteration-space shape ------------------------------------------------
+    feats.append(_log2(math.prod(l.extent for l in spatial)))
+    feats.append(_log2(math.prod((l.extent for l in reduction), start=1)))
+    feats.append(float(len(spatial)))
+    feats.append(float(len(reduction)))
+
+    # -- tile-band structure (grid / parallel / vmem / reg) -------------------
+    for band in range(4):
+        feats.append(_log2(math.prod(tm[l.name][band] for l in spatial)))
+    for band in range(2):
+        feats.append(_log2(math.prod(
+            (tm[l.name][band] for l in reduction), start=1)))
+
+    # -- innermost-tile alignment (MXU lanes / SIMD) --------------------------
+    out_axis = w.output.axes[-1]
+    inner = tm[out_axis][-1]
+    feats.append(_log2(inner))
+    feats.append(1.0 if inner % 128 == 0 else 0.0)
+    feats.append(1.0 if inner % 8 == 0 else 0.0)
+
+    # -- annotations ----------------------------------------------------------
+    feats.append(_log2(s.vector_width))
+    feats.append(float(s.parallel_levels))
+    feats.append(_log2(math.prod((f for _, f in s.unroll), start=1)))
+    feats.append(float(s.compute_location))
+    feats.append(1.0 if s.compute_location >= 0 else 0.0)   # epilogue fused
+    feats.append(1.0 if s.cache_write else 0.0)
+    n_inputs = max(1, sum(1 for o in w.operands if not o.is_output))
+    feats.append(len(s.cache_reads) / n_inputs)
+    feats.append(float(sum(1 for _, o in s.layouts if o == "col")))
+
+    # -- VMEM-band footprint vs the platform's scratch ------------------------
+    foot = 0.0
+    for o in w.operands:
+        b = float(o.dtype_bytes)
+        for a in o.axes:
+            b *= intra_extent(s, a, 2)
+        foot += b
+    feats.append(_log2(foot))
+    feats.append(_log2(foot) - _log2(platform.scratch_bytes))
+    feats.append(1.0 if foot > platform.scratch_bytes else 0.0)
+
+    # -- dtype + epilogue kind ------------------------------------------------
+    feats.append(float(w.output.dtype_bytes))
+    kind = w.epilogue_kind or "none"
+    feats.append(1.0 if kind == "softmax" else 0.0)
+    feats.append(1.0 if kind == "swiglu" else 0.0)
+
+    # -- intensity + parallel-task shape vs arch dims -------------------------
+    total_bytes = sum(
+        o.dtype_bytes * math.prod(w.loop_map[a].extent for a in o.axes)
+        for o in w.operands
+    )
+    feats.append(_log2(w.flops + w.epilogue_flops) - _log2(total_bytes))
+    tasks = math.prod(tm[l.name][0] for l in spatial)
+    feats.append(_log2(tasks))
+    feats.append(_log2(tasks) - _log2(platform.cores))
+
+    # -- arch dims ------------------------------------------------------------
+    feats.append(_log2(platform.cores))
+    feats.append(_log2(platform.mem_bw_gbs))
+    feats.append(_log2(platform.scratch_bytes))
+    feats.append(1.0 if platform.mxu else 0.0)
+
+    return np.asarray(feats, dtype=np.float64)
+
+
+# Feature dimensionality, probed once at import (any drift between this and
+# featurize_schedule is a schema change that must bump FEATURE_VERSION).
+N_FEATURES = len(featurize_schedule(
+    initial_schedule(matmul_workload("_probe", 8, 8, 8)),
+    Platform(name="_probe", kind="cpu", cores=1, freq_ghz=1.0, simd_bytes=16,
+             fma_pipes=1, fma_latency=1, cache_bytes=1 << 16,
+             scratch_bytes=1 << 14, mem_bw_gbs=1.0),
+))
+
+
+def workload_family(w: Workload, platform: str) -> str:
+    """The label-centering group: same operator, same non-sequence dims.
+
+    Mirrors ``compiler.tasks.Task.family_key`` — siblings of a context-
+    length sweep share a family, so their baseline latency offset (which
+    carries no ranking information) cancels out of the training labels.
+    """
+    dims = {l.name: l.extent for l in w.loops}
+    if w.epilogue_kind == "softmax" and set(dims) >= {"h", "i", "j", "k"}:
+        return f"{platform}/attention/h{dims['h']}/d{dims['k']}"
+    if {"i", "j", "k"} <= set(dims):
+        return f"{platform}/gemm/{w.epilogue_kind or 'none'}/" \
+               f"n{dims['j']}/k{dims['k']}"
+    return f"{platform}/{w.name}"
+
+
+# ---------------------------------------------------------------------------
+# Record replay: winning transform trace -> concrete Schedule
+# ---------------------------------------------------------------------------
+
+_DESC_RE = re.compile(r"^(\w+)\((.*)\)$")
+
+
+def parse_transform_desc(desc: str) -> Optional[Transform]:
+    """Parse one ``Transform.describe()`` string back into a Transform.
+
+    The describe() grammar is the provenance format ``TuningRecord.history``
+    persists; this is its exact inverse (None for anything unparseable —
+    the caller quarantines that record from the training set).
+    """
+    m = _DESC_RE.match(desc.strip())
+    if not m:
+        return None
+    kind, body = m.group(1), m.group(2)
+    try:
+        if kind == "TileSize":
+            axis, _, rest = body.partition(",")
+            nums = re.search(r"\[([\d,\s]*)\]", rest)
+            if not nums:
+                return None
+            decision = tuple(int(x) for x in nums.group(1).split(","))
+            return TileSize(axis.strip(), decision)
+        if kind == "Parallel":
+            return Parallel(int(body.split("=")[1]))
+        if kind == "Vectorize":
+            return Vectorize(int(body.split("=")[1]))
+        if kind == "Unroll":
+            axis, _, rest = body.partition(",")
+            return Unroll(axis.strip(), int(rest.split("=")[1]))
+        if kind == "ComputeLocation":
+            return ComputeLocation(int(body.split("=")[1]))
+        if kind == "CacheWrite":
+            return CacheWrite(body.split("=")[1].strip() == "True")
+        if kind == "CacheRead":
+            return CacheRead(body.strip())
+        if kind == "Layout":
+            op, _, rest = body.partition(",")
+            return Layout(op.strip(), rest.split("=")[1].strip())
+    except (IndexError, ValueError):
+        return None
+    return None
+
+
+def workload_from_record(rec) -> Optional[Workload]:
+    """Rebuild the tuning workload a record was searched on (best effort).
+
+    Dims come from the record's ``dims`` map; dtype and epilogue kind come
+    from provenance when present (stamped by sessions since the surrogate
+    tier landed), else from the tuning-workload conventions
+    (``compiler.tasks``: tuning shapes are 2-byte, plain ``gemm`` has no
+    epilogue).
+    """
+    dims = dict(rec.dims or {})
+    prov = rec.provenance or {}
+    dtype = int(prov.get("dtype_bytes", 0)) or None
+    if rec.kind == "attention" and {"h", "i", "j", "k"} <= set(dims):
+        return attention_workload(
+            rec.workload or "attn", heads=dims["h"], seq_q=dims["i"],
+            seq_kv=dims["j"], head_dim=dims["k"], dtype_bytes=dtype or 2,
+        )
+    if rec.kind == "gemm" and {"i", "j", "k"} <= set(dims):
+        return matmul_workload(
+            rec.workload or "gemm", m=dims["i"], n=dims["j"], k=dims["k"],
+            batch=dims.get("b", 1), dtype_bytes=dtype or 2,
+            epilogue=prov.get("epilogue", "none") or "none",
+        )
+    return None
+
+
+def replay_record(rec) -> Optional[Schedule]:
+    """Winning transform trace -> the concrete winning ``Schedule``.
+
+    Deterministic: the describe() strings in ``history`` carry every
+    decision parameter, so replay needs no random sampling.  Returns None
+    when the workload cannot be rebuilt or any trace step fails to parse
+    or apply — corrupt/legacy records never poison the training set.
+    """
+    w = workload_from_record(rec)
+    if w is None:
+        return None
+    s = initial_schedule(w)
+    for desc in rec.history:
+        t = parse_transform_desc(desc)
+        if t is None:
+            return None
+        try:
+            s = t.apply(s)
+        except ScheduleError:
+            return None
+    return s
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+class RecordSurrogate:
+    """Ridge regression over log-latency with per-family label centering.
+
+    Rows come from two sources, kept in separate centering groups because
+    their labels live on different scales:
+
+    * record rows — label ``-log(speedup)`` (log-latency relative to the
+      family's constant baseline, which centering absorbs);
+    * online rows — label ``log(latency_s)`` of an escalated measurement.
+
+    ``predict_rel`` returns a family-relative log-latency score (all that
+    ranking needs); ``predict_latency`` re-anchors onto the measured scale
+    via the family's online mean when one exists.
+    """
+
+    def __init__(self, l2: float = 1.0, min_rows: int = 8,
+                 retrain_every: int = 8):
+        self.l2 = l2
+        self.min_rows = min_rows
+        self.retrain_every = retrain_every
+        self._xs: list[np.ndarray] = []
+        self._ys: list[float] = []
+        self._groups: list[str] = []
+        self._w: Optional[np.ndarray] = None
+        self._mu: Optional[np.ndarray] = None
+        self._sd: Optional[np.ndarray] = None
+        self._anchors: dict[str, tuple[float, int]] = {}  # group -> (mean, n)
+        self._pending = 0
+        self.retrains = 0
+        self.skipped_rows = 0
+
+    # -- identity ------------------------------------------------------------
+    @property
+    def version(self) -> str:
+        """Staleness/version stamp: model revision + feature schema + the
+        records schema the training rows were drawn from."""
+        from ..compiler.records import SCHEMA_VERSION
+
+        return f"ridge-v1/f{FEATURE_VERSION}x{N_FEATURES}/r{SCHEMA_VERSION}"
+
+    def __len__(self) -> int:
+        return len(self._ys)
+
+    @property
+    def trained(self) -> bool:
+        return len(self._ys) >= self.min_rows
+
+    # -- rows ----------------------------------------------------------------
+    def add_row(self, s: Schedule, platform: Platform, y_log: float,
+                group: str) -> None:
+        self._xs.append(featurize_schedule(s, platform))
+        self._ys.append(float(y_log))
+        self._groups.append(group)
+        self._pending += 1
+
+    def observe(self, s: Schedule, platform: Platform,
+                latency_s: float) -> None:
+        """One escalated measurement flowing back as a training row."""
+        group = "live|" + workload_family(s.workload, platform.name)
+        self.add_row(s, platform, math.log(max(latency_s, 1e-12)), group)
+
+    def train_from_records(self, records, platform: Platform) -> int:
+        """Adopt every replayable record row (train-on-open).
+
+        Rows from a different records schema are skipped (staleness guard:
+        a schema bump may change what ``history``/``dims`` mean), as are
+        records whose trace does not replay — both count into
+        ``skipped_rows`` so callers can report coverage.
+        """
+        from ..compiler.records import SCHEMA_VERSION
+
+        added = 0
+        for rec in records.all():
+            if rec.schema != SCHEMA_VERSION or rec.speedup <= 0:
+                self.skipped_rows += 1
+                continue
+            s = replay_record(rec)
+            if s is None:
+                self.skipped_rows += 1
+                continue
+            w = s.workload
+            group = "rec|" + workload_family(w, rec.platform)
+            self.add_row(s, platform, -math.log(rec.speedup), group)
+            added += 1
+        return added
+
+    # -- fitting -------------------------------------------------------------
+    def _centered_labels(self) -> np.ndarray:
+        y = np.asarray(self._ys)
+        out = np.empty_like(y)
+        self._anchors = {}
+        groups = np.asarray(self._groups)
+        for g in set(self._groups):
+            idx = groups == g
+            mean = float(y[idx].mean())
+            self._anchors[g] = (mean, int(idx.sum()))
+            out[idx] = y[idx] - mean
+        return out
+
+    def fit(self) -> None:
+        X = np.stack(self._xs)
+        y = self._centered_labels()
+        self._mu = X.mean(axis=0)
+        self._sd = X.std(axis=0) + 1e-9
+        Xn = (X - self._mu) / self._sd
+        Xn = np.concatenate([Xn, np.ones((len(Xn), 1))], axis=1)
+        d = Xn.shape[1]
+        A = Xn.T @ Xn + self.l2 * np.eye(d)
+        self._w = np.linalg.solve(A, Xn.T @ y)
+        self._pending = 0
+        self.retrains += 1
+
+    def _ensure_fit(self) -> bool:
+        if not self.trained:
+            return False
+        if self._w is None or self._pending >= self.retrain_every:
+            self.fit()
+        return True
+
+    # -- prediction ----------------------------------------------------------
+    def predict_rel(self, s: Schedule, platform: Platform) -> Optional[float]:
+        """Family-relative log-latency score (lower = predicted faster);
+        None while undertrained."""
+        if not self._ensure_fit():
+            return None
+        x = (featurize_schedule(s, platform) - self._mu) / self._sd
+        x = np.concatenate([x, [1.0]])
+        return float(np.clip(x @ self._w, -50.0, 50.0))
+
+    def predict_latency(self, s: Schedule,
+                        platform: Platform) -> Optional[float]:
+        """Predicted latency in seconds on the *measured* scale, using the
+        family's online anchor; None without one (relative scores cannot be
+        re-anchored honestly)."""
+        rel = self.predict_rel(s, platform)
+        if rel is None:
+            return None
+        group = "live|" + workload_family(s.workload, platform.name)
+        anchor = self._anchors.get(group)
+        if anchor is None:
+            return None
+        return math.exp(min(50.0, rel + anchor[0]))
+
+
+def crossval_rank_predictions(
+    schedules: Sequence[Schedule],
+    latencies: Sequence[float],
+    platform: Platform,
+    l2: float = 1.0,
+) -> list[float]:
+    """Leave-one-out surrogate scores for a measured pool (rank-fidelity
+    eval, ``benchmarks/bench_lowering.py``): each schedule is scored by a
+    model trained on every *other* (schedule, latency) row, so the Spearman
+    against the held-out truths measures generalization, not memorization.
+    """
+    n = len(schedules)
+    X = np.stack([featurize_schedule(s, platform) for s in schedules])
+    y = np.asarray([math.log(max(t, 1e-12)) for t in latencies])
+    preds: list[float] = []
+    for i in range(n):
+        keep = np.arange(n) != i
+        Xi, yi = X[keep], y[keep]
+        yi = yi - yi.mean()
+        mu = Xi.mean(axis=0)
+        sd = Xi.std(axis=0) + 1e-9
+        Xn = np.concatenate(
+            [(Xi - mu) / sd, np.ones((len(Xi), 1))], axis=1)
+        A = Xn.T @ Xn + l2 * np.eye(Xn.shape[1])
+        w = np.linalg.solve(A, Xn.T @ yi)
+        x = np.concatenate([(X[i] - mu) / sd, [1.0]])
+        preds.append(float(x @ w))
+    return preds
+
+
+# ---------------------------------------------------------------------------
+# The oracle tier
+# ---------------------------------------------------------------------------
+
+class SurrogateOracle:
+    """Learned pre-screening in front of an escalation oracle.
+
+    The GOLEM ``SurrogateDispatcher`` split: ``screen`` ranks whole
+    candidate pools for free and returns only the top-k worth escalating;
+    ``measure`` is the escalation path (compile-and-time through the
+    wrapped oracle) and feeds every new measurement back as a training
+    row, so the model sharpens as the session runs.
+
+    Counters tell the sample-efficiency story benchmarks gate on:
+    ``proposals`` (candidates ranked), ``escalations`` (measure calls that
+    reached the wrapped oracle), and the model's ``retrains``.
+    """
+
+    def __init__(
+        self,
+        escalate,
+        *,
+        min_rows: int = 8,
+        retrain_every: int = 8,
+        l2: float = 1.0,
+        tracer: Optional[Tracer] = None,
+    ):
+        self.escalate = escalate
+        self.model = RecordSurrogate(
+            l2=l2, min_rows=min_rows, retrain_every=retrain_every)
+        self._trace = tracer or getattr(escalate, "trace", None) \
+            or NULL_TRACER
+        self._cache: dict[tuple, float] = {}
+        self.proposals = 0
+        self.escalations = 0
+        self.predictions = 0
+        self.trained_from_records = 0
+
+    # -- oracle protocol ------------------------------------------------------
+    @property
+    def platform(self) -> Platform:
+        return self.escalate.platform
+
+    @property
+    def trace(self) -> Tracer:
+        return self._trace
+
+    @trace.setter
+    def trace(self, tracer: Tracer) -> None:
+        self._trace = tracer
+        if hasattr(self.escalate, "trace"):
+            self.escalate.trace = tracer
+
+    def measure(self, s: Schedule) -> float:
+        """Escalate to compile-and-time; the result becomes a training row."""
+        key = s.key()
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        with self._trace.span(
+            "escalate", cat="oracle", workload=s.workload.name,
+            trained_rows=len(self.model),
+        ) as sp:
+            t = self.escalate.measure(s)
+            sp.set(latency_s=t)
+        self.escalations += 1
+        self._cache[key] = t
+        pending_fit = (self.model._pending + 1 >= self.model.retrain_every
+                       or self.model._w is None)
+        self.model.observe(s, self.platform, t)
+        if self.model.trained and pending_fit:
+            with self._trace.span(
+                "surrogate-retrain", cat="oracle", rows=len(self.model),
+                version=self.model.version,
+            ):
+                self.model.fit()
+        return t
+
+    def speedup(self, s: Schedule, baseline: Optional[Schedule] = None) -> float:
+        base = baseline or initial_schedule(s.workload)
+        return self.measure(base) / self.measure(s)
+
+    # -- the dispatcher split --------------------------------------------------
+    def predict(self, s: Schedule) -> Optional[float]:
+        """Free family-relative score (lower = predicted faster); None
+        while the model is undertrained."""
+        self.predictions += 1
+        return self.model.predict_rel(s, self.platform)
+
+    def screen(self, candidates: Sequence[Schedule],
+               k: int = 1) -> list[Schedule]:
+        """Rank a candidate pool by predicted latency; return the top-k
+        worth escalating.  Undertrained model -> pool order (the caller's
+        own priority, e.g. the LLM proposal first) so behavior degrades to
+        the unscreened policy, never to noise."""
+        cands = list(candidates)
+        self.proposals += len(cands)
+        k = max(1, min(k, len(cands)))
+        with self._trace.span(
+            "surrogate-predict", cat="oracle", n_candidates=len(cands),
+            k=k, trained_rows=len(self.model),
+        ) as sp:
+            scores = [self.model.predict_rel(s, self.platform)
+                      for s in cands]
+            if any(sc is None for sc in scores):
+                sp.set(screened=False)
+                return cands[:k]
+            order = sorted(range(len(cands)), key=lambda i: scores[i])
+            sp.set(screened=True)
+            return [cands[i] for i in order[:k]]
+
+    def rollout_measure(self, s: Schedule) -> Optional[float]:
+        """Free rollout scoring on the measured scale (the MCTS rollout
+        hook), available once the live family has an anchor."""
+        return self.model.predict_latency(s, self.platform)
+
+    # -- training + provenance -------------------------------------------------
+    def train_from_records(self, records) -> int:
+        """Train-on-open from a session's records database."""
+        added = self.model.train_from_records(records, self.platform)
+        self.trained_from_records += added
+        if added and self.model.trained:
+            with self._trace.span(
+                "surrogate-retrain", cat="oracle", rows=len(self.model),
+                version=self.model.version, source="records",
+            ):
+                self.model.fit()
+        return added
+
+    def surrogate_provenance(self) -> dict:
+        """What a session stamps into each persisted ``TuningRecord``."""
+        return {
+            "version": self.model.version,
+            "train_rows": len(self.model),
+            "from_records": self.trained_from_records,
+            "proposals": self.proposals,
+            "escalations": self.escalations,
+            "retrains": self.model.retrains,
+        }

@@ -48,7 +48,7 @@ def set_default_backend(name: str) -> None:
     _DEFAULT_BACKEND = name
 
 
-_TUNER = None  # lazy read handle on the default tuning-record store
+_RECORDS = None  # lazy read handle on the default tuning-record store
 
 
 def tuned_attention_blocks(
@@ -59,30 +59,35 @@ def tuned_attention_blocks(
     tp: int = 1,
 ) -> tuple[int, int]:
     """(block_q, block_k) for an ``ArchConfig``'s attention launch, from
-    the tuning cache.
+    the tuning records.
 
     ``tp`` selects the post-SPMD per-device head extents via the SAME
     ``local_attention_dims`` helper ``launch/tune.py`` stores entries
     under (head padding + replication rules included), so the lookup key
     agrees with the tune-time key by construction — a TP-sharded model
     gets the block specs tuned for the local shapes the Pallas kernel
-    will actually see.  Read-only: a cache miss returns the kernel
-    defaults instead of launching a search.
+    will actually see.  Read-only: a probe straight into the default
+    JSONL record store; a miss returns the kernel defaults instead of
+    launching a search.
     """
-    from ..core.autotuner import (
-        AttentionBlocks,
-        KernelTuner,
+    from ..compiler.artifacts import AttentionBlocks, default_records
+    from ..compiler.records import record_key
+    from ..compiler.tasks import (
+        attention_tuning_workload,
         local_attention_dims,
     )
 
-    global _TUNER
-    if _TUNER is None:
-        _TUNER = KernelTuner()
+    global _RECORDS
+    if _RECORDS is None:
+        _RECORDS = default_records()
 
     heads, kv_heads = local_attention_dims(cfg, tp)
-    blocks = _TUNER.lookup_attention(
+    w = attention_tuning_workload(
         heads, seq_q, seq_kv, cfg.hd, kv_heads=kv_heads
-    ) or AttentionBlocks()
+    )
+    rec = _RECORDS.get(record_key("tpu-v5e", w))
+    blocks = AttentionBlocks.from_params(rec.params) if rec \
+        else AttentionBlocks()
     return blocks.block_q, blocks.block_k
 
 

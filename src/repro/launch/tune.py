@@ -89,10 +89,23 @@ def main(argv=None):
                     choices=["llm-mcts", "mcts", "evolutionary"])
     ap.add_argument("--llm", default="gpt-4o-mini")
     ap.add_argument("--oracle", default="analytical",
-                    choices=["analytical", "measured", "hybrid"],
+                    choices=["analytical", "measured", "hybrid",
+                             "surrogate", "surrogate:analytical",
+                             "surrogate:hybrid"],
                     help="search-time objective backend (core/oracle.py); "
                          "measured/hybrid time real kernel executions per "
-                         "sample (interpret mode off-TPU)")
+                         "sample (interpret mode off-TPU); surrogate "
+                         "pre-screens candidates with the record-trained "
+                         "model and escalates only the top-k to "
+                         "compile-and-time (surrogate:<backend> picks the "
+                         "escalation backend, default measured)")
+    ap.add_argument("--escalate-topk", type=int, default=1,
+                    help="with --oracle surrogate*: measurements escalated "
+                         "per screened candidate pool (the rest are "
+                         "rejected for free by the surrogate)")
+    ap.add_argument("--screen-width", type=int, default=8,
+                    help="with --oracle surrogate*: candidate pool size "
+                         "ranked per MCTS expansion")
     ap.add_argument("--measure", default=True,
                     action=argparse.BooleanOptionalAction,
                     help="re-rank the search winners by real timed kernel "
@@ -147,6 +160,8 @@ def main(argv=None):
         shared_context=args.shared,
         measure=args.measure,
         tracer=tracer,
+        escalate_topk=args.escalate_topk,
+        screen_width=args.screen_width,
     )
     artifacts = session.compile(tasks)
     for art in artifacts:
@@ -161,6 +176,12 @@ def main(argv=None):
           f"{session.cache_hits} cache-hits, "
           f"{session.samples_spent} samples, "
           f"{session.seeds_played} cross-task seeds")
+    if hasattr(session.oracle, "surrogate_provenance"):
+        sp = session.oracle.surrogate_provenance()
+        print(f"surrogate: {sp['version']}, {sp['train_rows']} rows "
+              f"({sp['from_records']} from records), "
+              f"{sp['proposals']} proposals screened, "
+              f"{sp['escalations']} escalated to compile-and-time")
     print(f"records: {records.path} ({len(records)} entries)")
     if tracer is not None:
         tracer.write(args.trace_out)

@@ -3,6 +3,7 @@ import os
 import tempfile
 
 from repro.core import schedule as S
+from repro.compiler.records import TuningRecords
 from repro.core.autotuner import (
     AttentionBlocks,
     GemmBlocks,
@@ -127,7 +128,8 @@ def test_attention_block_uses_tp_local_tuned_blocks(tmp_path, monkeypatch):
     cache = os.path.join(tmp_path, "tc.json")
     tuner = KernelTuner(budget=12, cache_path=cache)
     tuned = tuner.tune_attention(hq, 128, 128, cfg.hd, kv_heads=hkv)
-    monkeypatch.setattr(ops, "_TUNER", KernelTuner(cache_path=cache))
+    monkeypatch.setattr(
+        ops, "_RECORDS", TuningRecords(None, legacy_json=cache))
 
     seen = {}
     real_attention = ops.attention
@@ -177,7 +179,8 @@ def test_ops_tuned_lookup_defaults(tmp_path, monkeypatch):
     cache = os.path.join(tmp_path, "tc.json")
     t = KernelTuner(budget=12, cache_path=cache)
     tuned = t.tune_attention(hq, 256, 256, cfg.hd, kv_heads=hkv)
-    monkeypatch.setattr(ops, "_TUNER", KernelTuner(cache_path=cache))
+    monkeypatch.setattr(
+        ops, "_RECORDS", TuningRecords(None, legacy_json=cache))
     bq, bk = ops.tuned_attention_blocks(cfg, 256, 256, tp=4)
     assert (bq, bk) == (tuned.block_q, tuned.block_k)
     assert json.load(open(cache))  # persisted

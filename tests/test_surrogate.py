@@ -1,0 +1,439 @@
+"""Surrogate oracle tier: featurization, record replay, screening, shims.
+
+Covers the acceptance surface of the record-trained surrogate
+(``core/surrogate.py``): fixed-length featurization across workloads,
+deterministic replay of persisted transform traces, training-set hygiene
+over corrupt/legacy/concurrent record stores, the ``screen``/escalate
+dispatcher split through MCTS and evolutionary search, session
+train-on-open + provenance stamping, and the legacy-entry-point
+deprecation shims.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import random
+import re
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.compiler import BudgetPolicy, CompilerSession, attention_task, gemm_task
+from repro.compiler.records import SCHEMA_VERSION, TuningRecord, TuningRecords
+from repro.core.cost_model import HardwareOracle, get_platform
+from repro.core.oracle import ORACLES, MeasuredOracle, make_oracle
+from repro.core.schedule import initial_schedule, random_schedule
+from repro.core.surrogate import (
+    N_FEATURES,
+    RecordSurrogate,
+    SurrogateOracle,
+    crossval_rank_predictions,
+    featurize_schedule,
+    parse_transform_desc,
+    replay_record,
+    workload_family,
+)
+from repro.core.workloads import attention_workload, matmul_workload
+
+PLATFORM = get_platform("tpu-v5e")
+
+
+def _pool(w, n, seed=0):
+    rng = random.Random(seed)
+    s0 = initial_schedule(w)
+    pool = {s0.key(): s0}
+    guard = 0
+    while len(pool) < n and guard < n * 60:
+        guard += 1
+        try:
+            s = random_schedule(rng, s0, rng.randint(1, 6))
+        except Exception:
+            continue
+        pool.setdefault(s.key(), s)
+    return list(pool.values())
+
+
+def _record_for(s, platform="tpu-v5e", speedup=2.0, **over):
+    w = s.workload
+    d = dict(
+        key=f"{platform}:{w.name}[test]",
+        kind="attention" if w.epilogue_kind == "softmax" else "gemm",
+        params={"bm": 8, "bn": 8, "bk": 8},
+        speedup=speedup,
+        samples=4,
+        method="mcts",
+        platform=platform,
+        workload=w.name,
+        dims={l.name: l.extent for l in w.loops},
+        history=tuple(s.history),
+        provenance={"dtype_bytes": w.output.dtype_bytes,
+                    "epilogue": w.epilogue_kind or "none"},
+    )
+    d.update(over)
+    return TuningRecord(**d)
+
+
+def _spearman(xs, ys):
+    rx = np.argsort(np.argsort(xs)).astype(float)
+    ry = np.argsort(np.argsort(ys)).astype(float)
+    if rx.std() == 0 or ry.std() == 0:
+        return 0.0
+    return float(np.corrcoef(rx, ry)[0, 1])
+
+
+# ---------------------------------------------------------------------------
+# featurization
+# ---------------------------------------------------------------------------
+
+def test_featurize_fixed_length_across_workloads():
+    """One feature space for every workload kind: rows pool into one model."""
+    ws = [
+        matmul_workload("g", 64, 128, 128, dtype_bytes=4, epilogue="swiglu"),
+        matmul_workload("g2", 32, 64, 64),
+        attention_workload("a", heads=2, seq_q=128, seq_kv=128, head_dim=64),
+    ]
+    for w in ws:
+        for s in _pool(w, 4):
+            x = featurize_schedule(s, PLATFORM)
+            assert x.shape == (N_FEATURES,)
+            assert np.all(np.isfinite(x))
+
+
+def test_featurize_distinguishes_schedules():
+    w = matmul_workload("g", 64, 128, 128)
+    pool = _pool(w, 8, seed=3)
+    keys = {tuple(featurize_schedule(s, PLATFORM)) for s in pool}
+    assert len(keys) > 1, "featurization collapsed distinct schedules"
+
+
+# ---------------------------------------------------------------------------
+# record replay (describe() inverse)
+# ---------------------------------------------------------------------------
+
+def test_parse_transform_desc_round_trip():
+    w = attention_workload("a", heads=2, seq_q=64, seq_kv=64, head_dim=64)
+    for s in _pool(w, 12, seed=1):
+        for desc in s.history:
+            parsed = parse_transform_desc(desc)
+            assert parsed is not None, desc
+            assert parsed.describe() == desc
+    for junk in ("", "garbage", "TileSize(i)", "Frobnicate(x=1)"):
+        assert parse_transform_desc(junk) is None
+
+
+@pytest.mark.parametrize("w", [
+    matmul_workload("gemm_t", 64, 128, 128, dtype_bytes=2, epilogue="swiglu"),
+    attention_workload("attn_t", heads=2, seq_q=64, seq_kv=64, head_dim=64,
+                       dtype_bytes=2),
+])
+def test_replay_record_reproduces_winning_schedule(w):
+    """The persisted transform trace replays into the exact Schedule."""
+    for s in _pool(w, 6, seed=2):
+        rec = _record_for(s)
+        replayed = replay_record(rec)
+        assert replayed is not None
+        assert replayed.key() == s.key()
+
+
+def test_replay_record_rejects_unreplayable():
+    w = matmul_workload("g", 64, 128, 128)
+    s = _pool(w, 2, seed=4)[-1]
+    assert replay_record(_record_for(s, history=("Frobnicate(x=1)",))) is None
+    assert replay_record(_record_for(s, kind="unknown", dims={})) is None
+
+
+# ---------------------------------------------------------------------------
+# training-set hygiene over the records store
+# ---------------------------------------------------------------------------
+
+def test_featurization_deterministic_for_fixed_records_file(tmp_path):
+    """Same JSONL file -> bit-identical training matrix and predictions."""
+    path = str(tmp_path / "records.jsonl")
+    store = TuningRecords(path)
+    w = matmul_workload("g", 64, 128, 128, dtype_bytes=2)
+    pool = _pool(w, 10, seed=5)
+    for i, s in enumerate(pool):
+        store.add(_record_for(s, speedup=1.0 + 0.2 * i,
+                              key=f"tpu-v5e:g[{i}]"))
+
+    models = []
+    for _ in range(2):
+        m = RecordSurrogate(min_rows=4)
+        added = m.train_from_records(TuningRecords(path), PLATFORM)
+        assert added == len(pool)
+        assert m.skipped_rows == 0
+        m.fit()
+        models.append(m)
+    assert np.array_equal(np.stack(models[0]._xs), np.stack(models[1]._xs))
+    probe = pool[3]
+    p0 = models[0].predict_rel(probe, PLATFORM)
+    p1 = models[1].predict_rel(probe, PLATFORM)
+    assert p0 is not None and p0 == p1
+
+
+def test_train_from_records_skips_stale_and_unreplayable():
+    w = matmul_workload("g", 64, 128, 128, dtype_bytes=2)
+    good, other = _pool(w, 2, seed=6)
+    records = TuningRecords(None)
+    records.add(_record_for(good, key="k1"))
+    records.add(_record_for(other, key="k2", schema=SCHEMA_VERSION + 1))
+    records.add(_record_for(other, key="k3", history=("Frobnicate(x=1)",)))
+    records.add(_record_for(other, key="k4", speedup=0.0))
+    m = RecordSurrogate(min_rows=1)
+    assert m.train_from_records(records, PLATFORM) == 1
+    assert m.skipped_rows == 3
+
+
+def test_corrupt_lines_quarantined_without_poisoning_training(tmp_path):
+    """Corrupt/legacy JSONL lines are quarantined on load and never reach
+    the training set; the good rows still train."""
+    path = str(tmp_path / "records.jsonl")
+    w = matmul_workload("g", 64, 128, 128, dtype_bytes=2)
+    pool = _pool(w, 4, seed=7)
+    seed_store = TuningRecords(None)
+    lines = []
+    for i, s in enumerate(pool):
+        lines.append(_record_for(s, key=f"tpu-v5e:g[{i}]").to_json())
+    lines.insert(1, "{truncated-append")
+    lines.insert(3, json.dumps({"not": "a record"}))
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        store = TuningRecords(path)
+    assert store.quarantined == 2
+    assert len(store) == len(pool)
+    assert os.path.exists(path + ".quarantined")
+
+    m = RecordSurrogate(min_rows=2)
+    assert m.train_from_records(store, PLATFORM) == len(pool)
+    assert m.skipped_rows == 0
+    assert m.trained
+
+
+def test_concurrent_appends_merge_into_training_set(tmp_path):
+    """Two handles on one store path append-interleave; reload folds both
+    writers' rows into one training set."""
+    path = str(tmp_path / "records.jsonl")
+    a, b = TuningRecords(path), TuningRecords(path)
+    w = matmul_workload("g", 64, 128, 128, dtype_bytes=2)
+    s1, s2 = _pool(w, 2, seed=8)
+    a.add(_record_for(s1, key="tpu-v5e:g[a]"))
+    b.add(_record_for(s2, key="tpu-v5e:g[b]"))
+    assert len(a) == 1 and len(b) == 1
+    a.reload()
+    assert len(a) == 2
+
+    m = RecordSurrogate(min_rows=1)
+    assert m.train_from_records(a, PLATFORM) == 2
+    # and a third handle opening fresh sees the same two lines
+    m2 = RecordSurrogate(min_rows=1)
+    assert m2.train_from_records(TuningRecords(path), PLATFORM) == 2
+
+
+# ---------------------------------------------------------------------------
+# the model + LOO rank quality
+# ---------------------------------------------------------------------------
+
+def test_surrogate_ranks_analytical_pool():
+    """LOO-crossval surrogate scores rank an analytical-labeled pool
+    positively (generalization across held-out schedules)."""
+    w = matmul_workload("g", 64, 256, 256, dtype_bytes=4, epilogue="swiglu")
+    oracle = HardwareOracle(PLATFORM, noise=False)
+    pool = _pool(w, 16, seed=9)
+    ys = [oracle.measure(s) for s in pool]
+    preds = crossval_rank_predictions(pool, ys, PLATFORM)
+    assert len(preds) == len(pool)
+    assert _spearman(preds, ys) > 0.3
+
+
+def test_predict_latency_needs_live_anchor():
+    w = matmul_workload("g", 64, 128, 128, dtype_bytes=2)
+    pool = _pool(w, 10, seed=10)
+    m = RecordSurrogate(min_rows=4)
+    records = TuningRecords(None)
+    for i, s in enumerate(pool):
+        records.add(_record_for(s, key=f"k{i}", speedup=1.0 + 0.1 * i))
+    m.train_from_records(records, PLATFORM)
+    m.fit()
+    s = pool[0]
+    assert m.predict_rel(s, PLATFORM) is not None
+    # record rows only: no measured-scale anchor for this family yet
+    assert m.predict_latency(s, PLATFORM) is None
+    m.observe(s, PLATFORM, 1e-4)
+    m.fit()
+    lat = m.predict_latency(s, PLATFORM)
+    assert lat is not None and lat > 0
+
+
+# ---------------------------------------------------------------------------
+# the oracle tier
+# ---------------------------------------------------------------------------
+
+def test_make_oracle_surrogate_variants():
+    assert "surrogate" in ORACLES
+    o = make_oracle("surrogate", "tpu-v5e")
+    assert isinstance(o, SurrogateOracle)
+    assert isinstance(o.escalate, MeasuredOracle)
+    o2 = make_oracle("surrogate:analytical", "tpu-v5e")
+    assert isinstance(o2, SurrogateOracle)
+    assert isinstance(o2.escalate, HardwareOracle)
+    assert o2.platform.name == "tpu-v5e"
+
+
+def test_screen_undertrained_preserves_pool_order():
+    """Undertrained model degrades to the caller's own priority order
+    (e.g. LLM proposal first), never to noise."""
+    o = SurrogateOracle(HardwareOracle(PLATFORM, noise=False), min_rows=10 ** 6)
+    w = matmul_workload("g", 64, 128, 128)
+    pool = _pool(w, 6, seed=11)
+    assert o.screen(pool, k=2) == pool[:2]
+    assert o.proposals == len(pool)
+    assert o.escalations == 0
+
+
+def test_screen_trained_prefers_predicted_fast_and_counts():
+    o = SurrogateOracle(HardwareOracle(PLATFORM, noise=False),
+                        min_rows=6, retrain_every=4)
+    w = matmul_workload("g", 64, 256, 256, dtype_bytes=4)
+    pool = _pool(w, 14, seed=12)
+    for s in pool[:8]:
+        o.measure(s)  # escalations double as training rows
+    assert o.escalations == 8
+    assert o.model.trained
+    picked = o.screen(pool[8:], k=2)
+    assert len(picked) == 2 and all(p in pool[8:] for p in picked)
+    scores = {s.key(): o.model.predict_rel(s, PLATFORM) for s in pool[8:]}
+    best_key = min(scores, key=scores.get)
+    assert picked[0].key() == best_key
+    prov = o.surrogate_provenance()
+    assert prov["escalations"] == 8
+    assert prov["proposals"] == len(pool) - 8
+    assert prov["version"].startswith("ridge-v1/f")
+    assert prov["retrains"] == o.model.retrains >= 1
+
+
+def test_measure_cached_escalates_once():
+    o = SurrogateOracle(HardwareOracle(PLATFORM, noise=False), min_rows=4)
+    w = matmul_workload("g", 64, 128, 128)
+    s = initial_schedule(w)
+    t1, t2 = o.measure(s), o.measure(s)
+    assert t1 == t2
+    assert o.escalations == 1
+
+
+def test_workload_family_groups_siblings():
+    a1 = attention_workload("x", heads=8, seq_q=1024, seq_kv=1024,
+                            head_dim=128)
+    a2 = attention_workload("y", heads=8, seq_q=256, seq_kv=256,
+                            head_dim=128)
+    g = matmul_workload("z", 64, 256, 256, epilogue="swiglu")
+    assert workload_family(a1, "tpu-v5e") == workload_family(a2, "tpu-v5e")
+    assert workload_family(a1, "tpu-v5e") != workload_family(g, "tpu-v5e")
+
+
+# ---------------------------------------------------------------------------
+# search + session integration
+# ---------------------------------------------------------------------------
+
+def test_session_mcts_screened_provenance(tmp_path):
+    """MCTS with the surrogate tier: fewer escalations than proposals, and
+    the persisted record carries surrogate + dtype/epilogue provenance."""
+    path = str(tmp_path / "records.jsonl")
+    session = CompilerSession(
+        target="tpu-v5e", oracle="surrogate:analytical", method="mcts",
+        records=path, shared_context=False,
+        budget_policy=BudgetPolicy(per_task=10, early_stop=False),
+        escalate_topk=1, screen_width=6,
+    )
+    arts = session.compile([
+        gemm_task(32, 64, 64, epilogue="swiglu", label="t"),
+    ], force=True)
+    rec = arts[0].record
+    sp = rec.provenance.get("surrogate")
+    assert sp, "surrogate provenance missing from persisted record"
+    assert sp["escalations"] <= sp["proposals"]
+    assert sp["version"].startswith("ridge-v1/")
+    assert rec.provenance["dtype_bytes"] == 2
+    assert rec.provenance["epilogue"] == "swiglu"
+    assert rec.speedup >= 1.0
+
+
+def test_session_trains_on_open_from_records(tmp_path):
+    path = str(tmp_path / "records.jsonl")
+    first = CompilerSession(
+        target="tpu-v5e", oracle="surrogate:analytical", method="mcts",
+        records=path, shared_context=False,
+        budget_policy=BudgetPolicy(per_task=8, early_stop=False),
+    )
+    first.compile([gemm_task(32, 64, 64, label="t")], force=True)
+    assert len(TuningRecords(path)) >= 1
+
+    second = CompilerSession(
+        target="tpu-v5e", oracle="surrogate:analytical", method="mcts",
+        records=path, shared_context=False,
+    )
+    assert isinstance(second.oracle, SurrogateOracle)
+    assert second.oracle.trained_from_records >= 1
+
+
+def test_evolutionary_screened_runs(tmp_path):
+    session = CompilerSession(
+        target="tpu-v5e", oracle="surrogate:analytical",
+        method="evolutionary", records=str(tmp_path / "r.jsonl"),
+        shared_context=False,
+    )
+    r = session.search(
+        matmul_workload("evo_t", 32, 64, 64), budget=16, seed=0)
+    assert r.best_speedup >= 1.0
+    assert session.oracle.proposals > session.oracle.escalations > 0
+
+
+def test_non_surrogate_paths_have_no_screen():
+    """The screened expansion is gated on the oracle exposing ``screen``:
+    plain backends must not grow one (seeded-identity contract)."""
+    for spec in ("analytical", "measured", "hybrid"):
+        o = make_oracle(spec, "tpu-v5e")
+        assert not hasattr(o, "screen"), spec
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_run_search_warns_deprecation():
+    from repro.core.search import run_search
+
+    with pytest.warns(DeprecationWarning, match="run_search is deprecated"):
+        r = run_search("llama3_8b_attention", budget=4, seed=0,
+                       method="mcts")
+    assert r.best_speedup >= 1.0
+
+
+def test_kernel_tuner_warns_deprecation(tmp_path):
+    from repro.core.autotuner import KernelTuner
+
+    with pytest.warns(DeprecationWarning, match="KernelTuner is deprecated"):
+        KernelTuner(cache_path=str(tmp_path / "cache.json"))
+
+
+def test_no_internal_deprecated_callers_in_src():
+    """run_search/KernelTuner survive only as shims: no call sites left
+    anywhere in src/ (kernels/ops.py now probes the record store)."""
+    root = os.path.join(os.path.dirname(__file__), "..", "src")
+    offenders = []
+    for dirpath, _, files in os.walk(root):
+        for fn in files:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            for i, line in enumerate(open(path).read().splitlines(), 1):
+                stripped = line.split("#")[0]
+                if re.search(r"\b(?:run_search|KernelTuner)\s*\(", stripped) \
+                        and "def run_search" not in stripped \
+                        and "class KernelTuner" not in stripped \
+                        and "warnings.warn" not in stripped:
+                    offenders.append(f"{path}:{i}: {line.strip()}")
+    assert not offenders, "\n".join(offenders)
