@@ -3,10 +3,19 @@
 Stronger / instruction-tuned models converge with fewer samples; small open
 models still beat uninformed search; a `random` proposal engine collapses to
 plain MCTS — confirming the reasoning, not the plumbing, drives the gap.
+
+Runs through the session API (``repro.compiler.CompilerSession``) via the
+``sweep_proposer`` harness, which accepts any proposer spec — a tier name
+from ``MODEL_TIERS`` *or* a ``pool:`` spec — so the proposer-pool ablation
+(``bench_sample_efficiency.run_proposers``) shares the exact same
+measurement path as the single-tier sweep here.
 """
 from __future__ import annotations
 
-from repro.core.search import repeat_search
+import os
+
+from repro.compiler import CompilerSession
+from repro.core.search import mean_curve
 
 from .common import ABLATION_PLATFORM, BUDGET, REPEATS, emit, grid_upto
 
@@ -17,6 +26,41 @@ TIERS = [
 WORKLOADS = [
     "llama3_8b_attention", "deepseek_r1_moe", "flux_attention", "flux_conv",
 ]
+ORACLE = os.environ.get("REPRO_BENCH_ORACLE", "analytical")
+
+
+def sweep_proposer(
+    spec: str,
+    workloads,
+    budget: int,
+    repeats: int,
+    grid,
+    summaries: list = None,
+) -> dict:
+    """One proposer spec (tier name or ``pool:...``) over a workload set.
+
+    One session per repeat owns the proposer (and, for pools, the routing
+    + hit-rate state) across all workloads — the deployment shape.  Returns
+    ``{workload: (mean_curve, results)}``; each session's end-of-sweep
+    ``proposer_summary()`` rows are appended to ``summaries`` when given.
+    """
+    sessions = [
+        CompilerSession(
+            target=ABLATION_PLATFORM, oracle=ORACLE, method="llm-mcts",
+            proposer=spec, shared_context=False,
+        )
+        for _ in range(repeats)
+    ]
+    out = {}
+    for wname in workloads:
+        results = [
+            s.search(wname, budget=budget, seed=seed)
+            for seed, s in enumerate(sessions)
+        ]
+        out[wname] = (mean_curve([r.curve for r in results], grid), results)
+    if summaries is not None:
+        summaries.extend(s.proposer_summary() for s in sessions)
+    return out
 
 
 def run(budget: int = None, repeats: int = None) -> dict:
@@ -24,12 +68,9 @@ def run(budget: int = None, repeats: int = None) -> dict:
     repeats = repeats or REPEATS
     grid = grid_upto(budget)
     out = {}
-    for wname in WORKLOADS:
-        for tier in TIERS:
-            curve, results = repeat_search(
-                wname, ABLATION_PLATFORM, "llm-mcts", budget,
-                repeats=repeats, grid=grid, llm=tier,
-            )
+    for tier in TIERS:
+        swept = sweep_proposer(tier, WORKLOADS, budget, repeats, grid)
+        for wname, (curve, results) in swept.items():
             out[(wname, tier)] = curve
             best_t = min(r.best_latency_s for r in results)
             derived = ";".join(f"@{s}={v:.2f}x" for s, v in curve)

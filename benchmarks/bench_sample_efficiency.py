@@ -244,5 +244,164 @@ def run_surrogate(budget: int = None) -> dict:
     return arms
 
 
+POOL_SPEC = os.environ.get(
+    "REPRO_BENCH_POOL",
+    "pool:gpt-4o-mini+llama3.1-8b:reviewer=o1-mini:route=bandit")
+POOL_WORKLOADS = ["llama3_8b_attention", "flux_attention"]
+
+
+def run_proposers(budget: int = None, repeats: int = None) -> dict:
+    """Proposer-pool ablation: pool vs. best/worst single member.
+
+    Three-way comparison over the same workloads, budget, and measurement
+    harness (``bench_llm_ablation.sweep_proposer``): the routed pool
+    (``REPRO_BENCH_POOL``) against each of its members running alone.
+    Reported — and band-gated by ``BENCH_proposers.json`` — are the
+    ``ge``-gated sample-efficiency claim (the pool reaches the single-best
+    member's speedup in no more samples), the per-proposer hit-rate
+    counters, the reviewer's veto rate, and the record-provenance gate: a
+    pool compile persists ``TuningRecords`` rows whose ``proposer`` field
+    names >= 2 distinct drafters.
+    """
+    from repro.compiler import parse_pool_spec
+
+    from .bench_llm_ablation import sweep_proposer
+
+    budget = budget or int(os.environ.get("REPRO_BENCH_PROPOSERS_BUDGET",
+                                          "48"))
+    repeats = repeats or int(os.environ.get("REPRO_BENCH_PROPOSERS_REPEATS",
+                                            "2"))
+    # the full budget is always a grid point: the reach comparison targets
+    # each arm's speedup at the END of the sample budget
+    grid = sorted(set(grid_upto(budget) + [budget]))
+    ps = parse_pool_spec(POOL_SPEC)
+    arms = {"pool": POOL_SPEC, **{m: m for m in ps.members}}
+
+    curves: dict[str, dict] = {}
+    summaries: dict[str, list] = {}
+    for arm, spec in arms.items():
+        rows: list = []
+        curves[arm] = sweep_proposer(spec, POOL_WORKLOADS, budget, repeats,
+                                     grid, summaries=rows)
+        summaries[arm] = rows
+
+    # per-workload: the strongest/weakest single member's final speedup,
+    # and the samples each arm takes to reach the single-best level
+    singles = list(ps.members)
+    reach: dict[str, dict] = {}
+    final: dict[str, dict] = {}
+    pool_le_best = 0
+    for wname in POOL_WORKLOADS:
+        finals = {arm: curves[arm][wname][0][-1][1]
+                  for arm in arms}
+        best_single = max(singles, key=lambda m: finals[m])
+        worst_single = min(singles, key=lambda m: finals[m])
+        target = finals[best_single]
+        arm_reach = {}
+        for arm in ("pool", best_single, worst_single):
+            _, results = curves[arm][wname]
+            rs = [r.curve.samples_to_reach(target * 0.999) for r in results]
+            got = [s for s in rs if s is not None]
+            arm_reach[arm] = round(sum(got) / len(got), 1) if got else None
+        ok = arm_reach["pool"] is not None and (
+            arm_reach[best_single] is None
+            or arm_reach["pool"] <= arm_reach[best_single])
+        pool_le_best += bool(ok)
+        reach[wname] = {
+            "target_speedup": round(target, 4),
+            "best_single": best_single,
+            "worst_single": worst_single,
+            "pool_samples": arm_reach["pool"],
+            "best_single_samples": arm_reach[best_single],
+            "worst_single_final": round(finals[worst_single], 4),
+            "pool_final": round(finals["pool"], 4),
+            "pool_reaches_in_no_more_samples": bool(ok),
+        }
+        final[wname] = {a: round(v, 4) for a, v in finals.items()}
+        emit(
+            f"proposers/{wname}", 0.0,
+            f"pool={finals['pool']:.2f}x@{arm_reach['pool']};"
+            f"best_single={best_single}={target:.2f}x"
+            f"@{arm_reach[best_single]};"
+            f"worst_single={worst_single}={finals[worst_single]:.2f}x;"
+            f"pool_le_best={ok}",
+        )
+
+    # per-proposer routing/hit-rate counters (summed over the pool arm's
+    # sessions) + the reviewer's outcome mix
+    proposers: dict[str, dict] = {}
+    reviewer: dict = {}
+    for rows in summaries["pool"]:
+        for row in rows:
+            if "reviewer" in row:
+                for k in ("reviews", "accepted", "refined", "replaced",
+                          "vetoed"):
+                    reviewer[k] = reviewer.get(k, 0) + row[k]
+                reviewer["name"] = row["reviewer"]
+            else:
+                agg = proposers.setdefault(
+                    row["proposer"],
+                    {"cost": row["cost"], "drafted": 0, "measured": 0,
+                     "hits": 0},
+                )
+                for k in ("drafted", "measured", "hits"):
+                    agg[k] += row[k]
+    for name, agg in proposers.items():
+        agg["hit_rate"] = round(agg["hits"] / max(agg["drafted"], 1), 4)
+        emit(f"proposers/hit_rate/{name}", 0.0,
+             f"drafted={agg['drafted']};hits={agg['hits']};"
+             f"hit_rate={agg['hit_rate']}")
+    if reviewer:
+        reviewer["veto_rate"] = round(
+            reviewer["vetoed"] / max(reviewer["reviews"], 1), 4)
+        emit("proposers/reviewer", 0.0,
+             f"name={reviewer['name']};reviews={reviewer['reviews']};"
+             f"veto_rate={reviewer['veto_rate']}")
+
+    # record-provenance gate: a pool compile persists rows whose
+    # ``proposer`` field names the drafter (>= 2 distinct across tasks)
+    # round-robin drafting here regardless of the ablation's route policy:
+    # the gate checks the provenance *plumbing* (every member's drafts can
+    # win records), not the routing preference
+    rr_spec = ("pool:" + "+".join(ps.members)
+               + (f":reviewer={ps.reviewer}" if ps.reviewer else ""))
+    with tempfile.TemporaryDirectory() as tmp:
+        session = CompilerSession(
+            target=ABLATION_PLATFORM, oracle=ORACLE, proposer=rr_spec,
+            records=os.path.join(tmp, "records.jsonl"),
+            budget_policy=BudgetPolicy(per_task=budget, early_stop=False),
+        )
+        session.compile([
+            attention_task(8, 512, 512, 128, kv_heads=2, priority=10),
+            attention_task(8, 256, 256, 128, kv_heads=2, priority=5),
+            gemm_task(512, 1024, 1024, epilogue="swiglu", priority=1),
+        ], force=True)
+        names = {r.proposer for r in session.records.all() if r.proposer}
+        schema2 = sum(1 for r in session.records.all() if r.schema >= 2)
+    emit("proposers/provenance", 0.0,
+         f"distinct_proposers={len(names)};names={sorted(names)};"
+         f"schema2_rows={schema2}")
+
+    payload = {
+        "pool_spec": POOL_SPEC,
+        "budget": budget,
+        "repeats": repeats,
+        "final_speedup": final,
+        "reach": reach,
+        "pool_le_best_workloads": pool_le_best,
+        "proposers": proposers,
+        # flat aggregates for the regression rules (member names contain
+        # dots, so per-member dotted rule paths would not resolve)
+        "min_hit_rate": min(
+            (a["hit_rate"] for a in proposers.values()), default=0.0),
+        "total_drafted": sum(a["drafted"] for a in proposers.values()),
+        "reviewer": reviewer,
+        "distinct_proposers_in_records": len(names),
+        "schema2_rows": schema2,
+    }
+    emit_json("proposers", payload)
+    return payload
+
+
 if __name__ == "__main__":
     run()

@@ -43,6 +43,10 @@ TABLES = {
                                              # beyond-paper: record-trained
                                              # surrogate pre-screening vs
                                              # plain compile-and-time
+    "proposers": bench_sample_efficiency.run_proposers,
+                                             # beyond-paper: routed proposer
+                                             # pool vs best/worst single
+                                             # member (compiler/proposers)
 }
 
 

@@ -29,6 +29,15 @@ from .artifacts import (
     default_records,
 )
 from .context import SeededProposer, SharedContext, TaskOutcome, adapt_history
+from .proposers import (
+    PooledProposer,
+    PoolProposer,
+    ProposerPool,
+    ReviewTier,
+    build_pool,
+    is_pool_spec,
+    parse_pool_spec,
+)
 from .records import (
     DEFAULT_RECORDS_PATH,
     LEGACY_JSON_PATH,
@@ -58,6 +67,10 @@ __all__ = [
     "DEFAULT_RECORDS_PATH",
     "GemmBlocks",
     "LEGACY_JSON_PATH",
+    "PoolProposer",
+    "PooledProposer",
+    "ProposerPool",
+    "ReviewTier",
     "SCHEMA_VERSION",
     "SeededProposer",
     "SharedContext",
@@ -71,7 +84,10 @@ __all__ = [
     "bind_artifacts",
     "attention_tuning_workload",
     "blocks_from_record",
+    "build_pool",
     "default_records",
+    "is_pool_spec",
+    "parse_pool_spec",
     "gemm_task",
     "gemm_tuning_workload",
     "local_attention_dims",

@@ -1,0 +1,38 @@
+"""Routed multi-LLM proposer pools for the reasoning compiler.
+
+The paper's search asks ONE LLM for transform proposals at every MCTS
+expansion.  This package generalizes the proposal side to a *pool*:
+several tier-tagged proposers share the search tree, a deterministic
+routing policy (``routing.py``) decides who drafts each expansion, and an
+optional review tier (``review.py``) escalates drafts at promising nodes
+to a strong model that may refine, replace, or veto them before the
+oracle spends a sample.
+
+Select a pool anywhere a proposer spec is accepted::
+
+    CompilerSession(proposer="pool:gpt-4o-mini+llama3.1-8b:reviewer=o1-mini")
+    repro-tune --proposer pool:llama3.1-8b+deepseek-r1-distill-7b \
+               --route bandit
+
+A pool of size 1 with no reviewer is RNG-identical to the plain
+single-proposer search path.
+"""
+from .pool import PooledProposer, PoolProposer, ProposerPool, tier_cost
+from .review import ReviewTier
+from .routing import ROUTE_POLICIES, Router, make_router
+from .spec import PoolSpec, build_pool, is_pool_spec, parse_pool_spec
+
+__all__ = [
+    "PooledProposer",
+    "PoolProposer",
+    "ProposerPool",
+    "ReviewTier",
+    "Router",
+    "ROUTE_POLICIES",
+    "PoolSpec",
+    "build_pool",
+    "is_pool_spec",
+    "make_router",
+    "parse_pool_spec",
+    "tier_cost",
+]

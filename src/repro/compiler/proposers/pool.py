@@ -1,0 +1,237 @@
+"""The proposer pool: N tier-tagged LLMs sharing one search tree.
+
+PAPERS.md's LiteCoOp observation: several lightweight proposer LLMs
+sharing a single MCTS tree — with a routing policy deciding who drafts at
+each expansion and a strong reviewer escalated at promising nodes — beat
+any single proposer at equal cost.  ``ProposerPool`` holds the members
+(each a ``PooledProposer``: one ``LLMBase`` plus per-proposer
+``FallbackStats``, a cost weight derived from its ``TierSpec``, and a
+rolling hit-rate), a ``Router`` policy, and an optional ``ReviewTier``.
+
+``PoolProposer`` is the per-search adapter: it subclasses
+``SeededProposer`` so cross-task donor traces (``SharedContext``) replay
+exactly as they do for a single proposer, and overrides the completion
+seam (``LLMProposer._query``) to route each draft through the pool.  The
+pool object itself outlives individual searches — a ``CompilerSession``
+builds it once, so routing statistics and hit-rates accumulate across
+every task the session compiles.
+
+RNG discipline: routing is deterministic (``routing.py``) and a pool of
+size 1 with no reviewer performs exactly one ``complete`` + one
+``parse_response`` per expansion — the same draws as a plain
+``LLMProposer`` — so single-member pools are RNG-identical to the
+pre-pool code path (asserted in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from collections import deque
+from typing import Optional, Sequence
+
+from ...core.llm import (
+    ALL_DIAGNOSES,
+    MODEL_TIERS,
+    FallbackStats,
+    LLMBase,
+    Prompt,
+    Proposal,
+    TierSpec,
+    TraceEntry,
+    parse_response,
+)
+from ...obs import NULL_TRACER
+from ..context import SeededProposer
+from .review import ReviewTier
+from .routing import Router, make_router
+
+__all__ = ["PooledProposer", "PoolProposer", "ProposerPool", "tier_cost"]
+
+
+def tier_cost(spec: Optional[TierSpec]) -> float:
+    """Relative per-call cost of a proposal model, derived from its
+    capability profile: context actually consumed, reasoning passes run,
+    and plan length emitted.  Normalized so the strongest registered
+    tier costs ~1.0 and the weakest ~0.3; unknown models (API adapters,
+    custom ``LLMBase``) default to 1.0."""
+    if spec is None:
+        return 1.0
+    return round(
+        0.4 * (spec.context_depth + 1) / 5
+        + 0.4 * len(spec.diagnoses) / len(ALL_DIAGNOSES)
+        + 0.2 * spec.plan_len / 6,
+        4,
+    )
+
+
+@dataclasses.dataclass
+class PooledProposer:
+    """One pool member: an LLM, its tier tag, and its attribution state."""
+
+    llm: LLMBase
+    tier: Optional[TierSpec] = None
+    cost: float = 0.0
+    stats: FallbackStats = None
+    drafted: int = 0     # expansions routed to this member
+    measured: int = 0    # drafts that survived screening -> oracle sample
+    hits: int = 0        # measured drafts that improved on their parent
+    window: deque = None  # rolling outcomes (1 = hit), drives the bandit
+
+    def __post_init__(self):
+        if self.tier is None:
+            self.tier = MODEL_TIERS.get(self.llm.name)
+        if not self.cost:
+            self.cost = tier_cost(self.tier)
+        if self.stats is None:
+            self.stats = FallbackStats(name=self.llm.name)
+        if self.window is None:
+            self.window = deque(maxlen=64)
+
+    @property
+    def name(self) -> str:
+        return self.llm.name
+
+    @property
+    def hit_rate(self) -> float:
+        """Rolling fraction of drafts that survived oracle/surrogate
+        screening AND improved their node's reward."""
+        return sum(self.window) / len(self.window) if self.window else 0.0
+
+    @property
+    def lifetime_hit_rate(self) -> float:
+        return self.hits / self.drafted if self.drafted else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "proposer": self.name,
+            "cost": self.cost,
+            "drafted": self.drafted,
+            "measured": self.measured,
+            "hits": self.hits,
+            "hit_rate": round(self.lifetime_hit_rate, 4),
+            "rolling_hit_rate": round(self.hit_rate, 4),
+            "fallback_rate": round(self.stats.fallback_rate, 4),
+            "invalid_rate": round(self.stats.invalid_rate, 4),
+            "expansions": self.stats.expansions,
+        }
+
+
+class ProposerPool:
+    """N tier-tagged proposers + a routing policy + an optional reviewer.
+
+    Built once per ``CompilerSession`` (``proposer="pool:..."``); state —
+    per-member draft counts, hit-rate windows, review outcomes — survives
+    across the tasks the session compiles, so the bandit router keeps
+    learning where cross-task seeding left off.
+    """
+
+    def __init__(self, members: Sequence[PooledProposer],
+                 router: Router, reviewer: Optional[ReviewTier] = None,
+                 tracer=None):
+        if not members:
+            raise ValueError("a proposer pool needs at least one member")
+        names = [m.name for m in members]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate pool members: {names}")
+        self.members = list(members)
+        self.router = router
+        self.reviewer = reviewer
+        self.trace = tracer or NULL_TRACER
+
+    @property
+    def name(self) -> str:
+        spec = "pool:" + "+".join(m.name for m in self.members)
+        if self.reviewer is not None:
+            spec += f":reviewer={self.reviewer.name}"
+        if self.router.name != "round-robin":
+            spec += f":route={self.router.name}"
+        return spec
+
+    def member(self, name: str) -> Optional[PooledProposer]:
+        for m in self.members:
+            if m.name == name:
+                return m
+        return None
+
+    # -- the draft -> review pipeline ---------------------------------------
+    def propose(
+        self, prompt: Prompt, trace: Sequence[TraceEntry],
+        rng: random.Random,
+    ) -> Proposal:
+        """Route one expansion: pick the drafter, complete + parse, then
+        (at promising nodes, with a reviewer configured) escalate."""
+        single = len(self.members) == 1 and self.reviewer is None
+        m = self.members[self.router.pick(self.members)]
+        if not single:
+            self.trace.instant("route", cat="pool", proposer=m.name,
+                               policy=self.router.name)
+        m.drafted += 1
+        with self.trace.span("draft", cat="pool", proposer=m.name):
+            text = m.llm.complete(prompt, rng)
+            prop = parse_response(text, trace[0].schedule, rng)
+        prop.proposer = m.name
+        m.stats.absorb(prop)
+        if self.reviewer is not None:
+            self.reviewer.observe(trace[0].speedup)
+            if prop.fallback or self.reviewer.promising(trace[0].speedup):
+                with self.trace.span(
+                    "review", cat="pool", proposer=m.name,
+                    reviewer=self.reviewer.name,
+                ) as rsp:
+                    prop = self.reviewer.review(prompt, trace, prop, rng)
+                    rsp.set(action=prop.review_action)
+                if prop.review_action == "veto":
+                    self.trace.instant("veto", cat="pool",
+                                       proposer=m.name,
+                                       reviewer=self.reviewer.name)
+        return prop
+
+    # -- screening feedback (MCTS calls through PoolProposer) ---------------
+    def feedback(self, proposal: Proposal, improved: bool) -> None:
+        """One drafted proposal survived screening and was measured:
+        credit (or debit) its drafter's rolling hit-rate."""
+        m = self.member(proposal.proposer) if proposal.proposer else None
+        if m is None:
+            return
+        m.measured += 1
+        if improved:
+            m.hits += 1
+        m.window.append(1 if improved else 0)
+
+    # -- reporting -----------------------------------------------------------
+    def stats_by_proposer(self) -> dict[str, FallbackStats]:
+        out = {m.name: m.stats for m in self.members}
+        return out
+
+    def summary(self) -> list[dict]:
+        rows = [m.summary() for m in self.members]
+        if self.reviewer is not None:
+            rows.append(self.reviewer.summary())
+        return rows
+
+
+class PoolProposer(SeededProposer):
+    """Per-search adapter: the ``LLMProposer`` interface over a shared
+    ``ProposerPool``.  Donor seeding (cross-task ``SharedContext``) and
+    prompt hints come from ``SeededProposer``; the completion seam routes
+    through the pool.  Aggregate ``stats`` keep the legacy single-counter
+    view (``SearchResult.fallback``) consistent."""
+
+    def __init__(self, pool: ProposerPool, platform, trace_depth: int = 2,
+                 donor=None, workload=None, max_seeds: int = 3):
+        super().__init__(None, platform, trace_depth=trace_depth,
+                         donor=donor, workload=workload,
+                         max_seeds=max_seeds)
+        self.pool = pool
+        self.stats = FallbackStats(name=pool.name)
+
+    def _query(self, prompt, trace, rng) -> Proposal:
+        prop = self.pool.propose(prompt, trace, rng)
+        self.stats.absorb(prop)
+        return prop
+
+    def feedback(self, proposal: Proposal, improved: bool) -> None:
+        self.pool.feedback(proposal, improved)
+
+    def stats_by_proposer(self) -> dict[str, FallbackStats]:
+        return self.pool.stats_by_proposer()

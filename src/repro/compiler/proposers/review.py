@@ -1,0 +1,159 @@
+"""The review tier: a strong model audits drafts at promising nodes.
+
+Two-tier draft-then-review routing (the govproposal bridge idiom, the
+LiteCoOp escalation protocol): cheap pool members draft at every MCTS
+expansion, and only at *promising* nodes — node value above a rolling
+quantile of the values this search has surfaced — does the designated
+strong reviewer spend a completion.  The reviewer may
+
+  * ``accept``  — its own proposal agrees with (or has no opinion on)
+    the draft; the draft proceeds unchanged,
+  * ``refine``  — it proposes an overlapping but different sequence; the
+    reviewer's transforms replace the draft's,
+  * ``replace`` — the draft was invalid (fallback) or entirely off-axis;
+    the reviewer's proposal substitutes wholesale,
+  * ``veto``    — every drafted family sits in the trace's avoid set
+    (ancestor evidence says those moves regressed here) and the reviewer
+    has nothing better: the draft dies *before the oracle spends a
+    sample* and the expansion falls back to the default policy.
+
+Every outcome is counted (``veto_rate`` is CI-gated in
+``BENCH_proposers.json``) and stamped into the proposal's provenance.
+"""
+from __future__ import annotations
+
+import bisect
+from collections import deque
+from typing import Optional, Sequence
+
+from ...core.llm import LLMBase, Prompt, Proposal, TraceEntry, parse_response
+
+__all__ = ["ReviewTier"]
+
+
+def _trace_avoid(trace: Sequence[TraceEntry]) -> set:
+    """Transform families the visible ancestor trace says regressed:
+    the same (transform, delta) credit assignment the reasoning tiers
+    run internally, recomputed here so any reviewer LLM can veto."""
+    avoid: set = set()
+    prefer: set = set()
+    for child, parent in zip(trace[:-1], trace[1:]):
+        new = child.schedule.history[len(parent.schedule.history):]
+        delta = parent.latency_s - child.latency_s  # >0 == improvement
+        for desc in new:
+            fam = desc.split("(")[0]
+            if delta > 0.02 * parent.latency_s:
+                prefer.add(fam)
+            elif delta < -0.02 * parent.latency_s:
+                avoid.add(fam)
+    return avoid - prefer
+
+
+class ReviewTier:
+    """Escalation wrapper around one strong reviewer LLM.
+
+    ``quantile``: a node is promising when its speedup is at or above
+    this quantile of the node values the pool has observed so far in the
+    current search context.  ``min_obs`` observations gate the quantile
+    (an empty window reviews nothing, so short searches stay cheap).
+    """
+
+    def __init__(self, llm: LLMBase, quantile: float = 0.7,
+                 min_obs: int = 8, window: int = 256):
+        self.llm = llm
+        self.name = llm.name
+        self.quantile = quantile
+        self.min_obs = min_obs
+        self._values: deque[float] = deque(maxlen=window)
+        # outcome counters (reported via summary(), gated in CI)
+        self.reviews = 0
+        self.accepted = 0
+        self.refined = 0
+        self.replaced = 0
+        self.vetoed = 0
+
+    # -- promising-node detection -----------------------------------------
+    def observe(self, speedup: float) -> None:
+        self._values.append(speedup)
+
+    def promising(self, speedup: float) -> bool:
+        if len(self._values) < self.min_obs:
+            return False
+        ordered = sorted(self._values)
+        idx = bisect.bisect_left(ordered, speedup)
+        return idx / len(ordered) >= self.quantile
+
+    @property
+    def veto_rate(self) -> float:
+        return self.vetoed / self.reviews if self.reviews else 0.0
+
+    # -- the review itself --------------------------------------------------
+    def review(
+        self, prompt: Prompt, trace: Sequence[TraceEntry],
+        draft: Proposal, rng,
+    ) -> Proposal:
+        """Audit ``draft`` for the node ``trace[0]``; returns the proposal
+        the expansion should actually spend its sample on."""
+        self.reviews += 1
+        schedule = trace[0].schedule
+        own = parse_response(self.llm.complete(prompt, rng), schedule, rng)
+        avoid = _trace_avoid(trace)
+
+        draft_fams = {t.name for t in draft.transforms}
+        if not draft.fallback and draft_fams and draft_fams <= avoid \
+                and own.fallback:
+            # ancestor evidence says every drafted family regresses here
+            # and the reviewer offers nothing better: kill the draft so
+            # no oracle sample is spent on it
+            self.vetoed += 1
+            return Proposal(
+                [], f"review veto by {self.name}: drafted families "
+                    f"{sorted(draft_fams)} all regressed in the visible "
+                    f"trace", draft.raw_text, draft.n_proposed,
+                draft.n_proposed, proposer=draft.proposer,
+                reviewer=self.name, review_action="veto",
+            )
+        if own.fallback:
+            # reviewer has no (valid) opinion: the draft stands
+            self.accepted += 1
+            return self._stamp(draft, "accept")
+        if draft.fallback:
+            # invalid draft, valid review: wholesale substitution
+            self.replaced += 1
+            return self._adopt(own, draft, "replace")
+        own_descr = [t.describe() for t in own.transforms]
+        if own_descr == [t.describe() for t in draft.transforms]:
+            self.accepted += 1
+            return self._stamp(draft, "accept")
+        own_fams = {t.name for t in own.transforms}
+        if own_fams & draft_fams:
+            self.refined += 1
+            return self._adopt(own, draft, "refine")
+        self.replaced += 1
+        return self._adopt(own, draft, "replace")
+
+    def _stamp(self, draft: Proposal, action: str) -> Proposal:
+        draft.reviewer = self.name
+        draft.review_action = action
+        return draft
+
+    def _adopt(self, own: Proposal, draft: Proposal,
+               action: str) -> Proposal:
+        """The reviewer's transforms win; drafting credit stays with the
+        drafter (its prompt bought the context) but the review outcome
+        and reviewer name ride along in provenance."""
+        own.proposer = draft.proposer
+        own.reviewer = self.name
+        own.review_action = action
+        return own
+
+    def summary(self) -> dict:
+        return {
+            "reviewer": self.name,
+            "reviews": self.reviews,
+            "accepted": self.accepted,
+            "refined": self.refined,
+            "replaced": self.replaced,
+            "vetoed": self.vetoed,
+            "veto_rate": round(self.veto_rate, 4),
+        }

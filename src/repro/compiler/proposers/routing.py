@@ -1,0 +1,105 @@
+"""Routing policies: which pool member drafts at each MCTS expansion.
+
+All policies are DETERMINISTIC — they never draw from the search rng —
+so adding or swapping a router cannot perturb the random stream a search
+consumes.  That invariant is what keeps a pool of size 1 RNG-identical
+to the plain single-proposer path (asserted in tests/test_proposers.py).
+
+  * ``round-robin``   — cycle through the members in declaration order.
+  * ``cost-weighted`` — smooth weighted round-robin on 1/cost: cheaper
+    tiers draft proportionally more often, every member still drafts.
+  * ``bandit``        — UCB1 over observed hit-rate-per-unit-cost: the
+    exploit term is each member's rolling screened-and-improved rate
+    divided by its tier cost, the explore bonus decays with drafts.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+__all__ = ["ROUTE_POLICIES", "Router", "make_router"]
+
+
+class Router:
+    """Base: ``pick(members) -> index``; stateful across calls."""
+
+    name = "router"
+
+    def pick(self, members: Sequence) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    name = "round-robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def pick(self, members: Sequence) -> int:
+        i = self._next % len(members)
+        self._next = i + 1
+        return i
+
+
+class CostWeightedRouter(Router):
+    """Smooth weighted round-robin (nginx-style): each pick adds every
+    member's weight (1/cost) to its credit, the highest credit drafts and
+    pays the total weight back.  Deterministic, no starvation, and the
+    draft shares converge to the 1/cost proportions."""
+
+    name = "cost-weighted"
+
+    def __init__(self):
+        self._credit: list[float] = []
+
+    def pick(self, members: Sequence) -> int:
+        if len(self._credit) != len(members):
+            self._credit = [0.0] * len(members)
+        weights = [1.0 / max(m.cost, 1e-6) for m in members]
+        for i, w in enumerate(weights):
+            self._credit[i] += w
+        best = max(range(len(members)), key=lambda i: (self._credit[i], -i))
+        self._credit[best] -= sum(weights)
+        return best
+
+
+class UCBRouter(Router):
+    """UCB1 bandit over hit-rate-per-unit-cost.
+
+    score_i = hit_rate_i / cost_i + c * sqrt(ln(T + 1) / (n_i + 1))
+
+    ``hit_rate`` is the member's rolling rate of drafts that survived
+    oracle/surrogate screening AND improved on their parent node
+    (``PooledProposer.hit_rate``); ``n_i`` its draft count, ``T`` the
+    pool total.  Ties break toward the earlier member, so the policy is
+    deterministic.
+    """
+
+    name = "bandit"
+
+    def __init__(self, c: float = 0.5):
+        self.c = c
+
+    def pick(self, members: Sequence) -> int:
+        total = sum(m.drafted for m in members)
+        scores = [
+            m.hit_rate / max(m.cost, 1e-6)
+            + self.c * math.sqrt(math.log(total + 1.0) / (m.drafted + 1.0))
+            for m in members
+        ]
+        return max(range(len(members)), key=lambda i: (scores[i], -i))
+
+
+ROUTE_POLICIES = ("round-robin", "cost-weighted", "bandit")
+
+
+def make_router(name: str) -> Router:
+    if name == "round-robin":
+        return RoundRobinRouter()
+    if name == "cost-weighted":
+        return CostWeightedRouter()
+    if name == "bandit":
+        return UCBRouter()
+    raise KeyError(
+        f"unknown route policy {name!r}; known: {ROUTE_POLICIES}"
+    )

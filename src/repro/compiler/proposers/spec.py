@@ -1,0 +1,85 @@
+"""Pool spec strings: ``"pool:<a>+<b>[:reviewer=<c>][:route=<policy>]"``.
+
+One string selects the whole proposer configuration, so the same value
+flows unmodified from ``launch/tune.py --proposer`` through
+``CompilerSession(proposer=...)`` into benchmark configs and record
+provenance:
+
+    pool:gpt-4o-mini+llama3.1-8b
+    pool:llama3.1-8b+deepseek-r1-distill-7b:reviewer=o1-mini
+    pool:gpt-4o-mini+llama3.1-8b:reviewer=o1-mini:route=bandit
+
+Members are any ``core/llm.make_llm`` spec — tier names, ``random``,
+``api:<model>`` (the embedded colon is handled) — joined with ``+``.
+Options may appear in either order; ``route`` defaults to round-robin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ...core.llm import make_llm
+from .pool import PooledProposer, ProposerPool
+from .review import ReviewTier
+from .routing import ROUTE_POLICIES, make_router
+
+__all__ = ["PoolSpec", "build_pool", "is_pool_spec", "parse_pool_spec"]
+
+_OPTION_KEYS = ("reviewer", "route")
+
+
+def is_pool_spec(spec) -> bool:
+    return isinstance(spec, str) and spec.startswith("pool:")
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    members: tuple[str, ...]
+    reviewer: Optional[str] = None
+    route: str = "round-robin"
+
+
+def parse_pool_spec(spec: str) -> PoolSpec:
+    if not is_pool_spec(spec):
+        raise ValueError(f"not a pool spec: {spec!r}")
+    body = spec[len("pool:"):]
+    # ':'-separated segments; a segment that is not 'reviewer=' / 'route='
+    # continues the preceding value (member and reviewer specs may embed
+    # colons: 'api:<model>')
+    segments = body.split(":")
+    members_part = segments[0]
+    opts: dict[str, str] = {}
+    current: Optional[str] = None
+    for seg in segments[1:]:
+        key, _, value = seg.partition("=")
+        if key in _OPTION_KEYS and "=" in seg:
+            if key in opts:
+                raise ValueError(f"duplicate {key!r} in pool spec {spec!r}")
+            opts[key] = value
+            current = key
+        elif current is not None:
+            opts[current] += ":" + seg
+        else:
+            members_part += ":" + seg
+    members = tuple(n for n in members_part.split("+") if n)
+    if not members:
+        raise ValueError(f"pool spec {spec!r} names no members")
+    if len(set(members)) != len(members):
+        raise ValueError(f"duplicate members in pool spec {spec!r}")
+    route = opts.get("route", "round-robin")
+    if route not in ROUTE_POLICIES:
+        raise ValueError(
+            f"unknown route policy {route!r} in {spec!r}; "
+            f"known: {ROUTE_POLICIES}"
+        )
+    return PoolSpec(members, opts.get("reviewer"), route)
+
+
+def build_pool(spec: str | PoolSpec, tracer=None) -> ProposerPool:
+    """Materialize a pool spec: one LLM per member (+ reviewer), the
+    routing policy, fresh routing/hit-rate state."""
+    ps = parse_pool_spec(spec) if isinstance(spec, str) else spec
+    members = [PooledProposer(make_llm(name)) for name in ps.members]
+    reviewer = ReviewTier(make_llm(ps.reviewer)) if ps.reviewer else None
+    return ProposerPool(members, make_router(ps.route), reviewer=reviewer,
+                        tracer=tracer)

@@ -32,7 +32,11 @@ import time
 import warnings
 from typing import Iterable, Optional
 
-SCHEMA_VERSION = 1
+# 1 -> 2: proposer/reviewer/review_action provenance (proposer pools,
+# compiler/proposers).  v1 rows load unchanged — the fields default to
+# None — and v2 rows are self-describing for old readers that filter
+# unknown keys (``from_dict`` has always done so).
+SCHEMA_VERSION = 2
 
 # Default on-disk store, next to the arch configs like the v0 JSON cache.
 DEFAULT_RECORDS_PATH = os.path.join(
@@ -99,6 +103,12 @@ class TuningRecord:
     workload: str = ""
     dims: dict = dataclasses.field(default_factory=dict)
     llm: Optional[str] = None
+    # pool provenance (schema 2): which pool member drafted the winning
+    # node (nearest drafted ancestor), who reviewed it, what the review
+    # did.  None for pre-pool records and non-LLM methods.
+    proposer: Optional[str] = None
+    reviewer: Optional[str] = None
+    review_action: Optional[str] = None
     oracle: str = "analytical"        # search-time objective backend
     measured: bool = False            # True iff a real timed execution ranked it
     measured_latency_s: Optional[float] = None

@@ -41,6 +41,7 @@ from .artifacts import (
     blocks_from_record,
 )
 from .context import SeededProposer, SharedContext, TaskOutcome
+from .proposers import PoolProposer, ProposerPool, build_pool, is_pool_spec
 from .records import TuningRecord, TuningRecords, record_key
 from .tasks import Task
 
@@ -157,13 +158,26 @@ class CompilerSession:
         self.screen_width = screen_width
         self.screen_factor = screen_factor
         self._proposer_spec = proposer
-        if isinstance(proposer, LLMBase):
-            self.llm: Optional[LLMBase] = proposer
-        elif method == "llm-mcts":
+        self.pool: Optional[ProposerPool] = None
+        if isinstance(proposer, ProposerPool):
+            self.pool = proposer
+            self.pool.trace = self.trace
+            self.llm: Optional[LLMBase] = None
+        elif isinstance(proposer, LLMBase):
+            self.llm = proposer
+        elif is_pool_spec(proposer) and method == "llm-mcts":
+            self.pool = build_pool(proposer, tracer=self.trace)
+            self.llm = None
+        elif isinstance(proposer, str) and not is_pool_spec(proposer) \
+                and method == "llm-mcts":
             self.llm = make_llm(proposer)
         else:
             self.llm = None  # built on first llm-mcts search (_ensure_llm)
-        self.llm_name = self.llm.name if self.llm is not None else None
+        self.llm_name = self.pool.name if self.pool is not None \
+            else (self.llm.name if self.llm is not None else None)
+        # session-lifetime per-proposer expansion statistics, merged from
+        # every search this session runs (proposer_summary)
+        self.proposer_stats: dict = {}
         if method not in METHODS:
             raise ValueError(f"unknown method {method!r}; known: {METHODS}")
         self.method = method
@@ -235,15 +249,24 @@ class CompilerSession:
 
         proposer: Optional[LLMProposer] = None
         if method == "llm-mcts":
-            llm = self._ensure_llm()
             td = self.trace_depth if trace_depth is None else trace_depth
-            if donor is not None:
+            pool = self._ensure_pool()
+            if pool is not None:
+                # pool state (routing, hit-rates, review counters) lives on
+                # the session and survives across tasks; the PoolProposer is
+                # the per-search adapter carrying donor seeds + hints
+                proposer = PoolProposer(
+                    pool, self.platform, trace_depth=td,
+                    donor=donor, workload=workload,
+                )
+            elif donor is not None:
                 proposer = SeededProposer(
-                    llm, self.platform, trace_depth=td,
+                    self._ensure_llm(), self.platform, trace_depth=td,
                     donor=donor, workload=workload,
                 )
             else:
-                proposer = LLMProposer(llm, self.platform, trace_depth=td)
+                proposer = LLMProposer(self._ensure_llm(), self.platform,
+                                       trace_depth=td)
 
         mcts_kwargs.setdefault("screen_width", self.screen_width)
         mcts_kwargs.setdefault("escalate_topk", self.escalate_topk)
@@ -256,6 +279,17 @@ class CompilerSession:
                             min_samples=min_samples)
         if isinstance(proposer, SeededProposer):
             self.seeds_played += proposer.seeds_played
+        by_proposer = None
+        if proposer is not None:
+            by_proposer = proposer.stats_by_proposer()
+            self._merge_proposer_stats(by_proposer)
+        # credit for the winner: the drafter of the best node (or of its
+        # nearest LLM-drafted ancestor — the draft that steered the search
+        # into the winning subtree)
+        prov = next(
+            (n for n in searcher.best.ancestors() if n.proposer is not None),
+            None,
+        ) if proposer is not None else None
         return SearchResult(
             workload.name, self.platform.name, method, curve,
             searcher.best.speedup, searcher.best.schedule,
@@ -266,6 +300,11 @@ class CompilerSession:
             oracle=oracle_name,
             top_schedules=tuple(searcher.top_schedules()),
             family_stats=_family_stats(searcher),
+            fallback_by_proposer=by_proposer,
+            proposer=prov.proposer if prov else None,
+            reviewer=prov.reviewer if prov else None,
+            review_action=prov.review_action if prov else None,
+            pool_stats=self.pool.summary() if self.pool is not None else None,
         )
 
     def _ensure_llm(self) -> LLMBase:
@@ -277,6 +316,43 @@ class CompilerSession:
             self.llm = spec if isinstance(spec, LLMBase) else make_llm(spec)
             self.llm_name = self.llm.name
         return self.llm
+
+    def _ensure_pool(self) -> Optional[ProposerPool]:
+        """The session's proposer pool (None for single-proposer specs),
+        built lazily like ``_ensure_llm`` when the constructor deferred."""
+        if self.pool is None and is_pool_spec(self._proposer_spec):
+            self.pool = build_pool(self._proposer_spec, tracer=self.trace)
+            self.llm_name = self.pool.name
+        return self.pool
+
+    def _merge_proposer_stats(self, by_proposer: dict) -> None:
+        """Fold one search's per-proposer counters into session totals.
+        Pool members share live ``FallbackStats`` objects across searches,
+        so those replace rather than accumulate; per-search proposers
+        (plain ``LLMProposer``) merge."""
+        from ..core.llm import FallbackStats
+
+        for name, stats in by_proposer.items():
+            if self.pool is not None and self.pool.member(name) is not None:
+                self.proposer_stats[name] = stats
+                continue
+            cur = self.proposer_stats.setdefault(
+                name, FallbackStats(name=name))
+            cur.merge(stats)
+
+    def proposer_summary(self) -> list[dict]:
+        """Per-proposer rows for the session so far: pool members carry
+        routing + hit-rate columns (``ProposerPool.summary``), a plain
+        single proposer reports its aggregate Appendix-G statistics."""
+        if self.pool is not None:
+            return self.pool.summary()
+        return [
+            dict(proposer=name, expansions=s.expansions,
+                 fallback_rate=round(s.fallback_rate, 4),
+                 invalid_rate=round(s.invalid_rate, 4),
+                 proposed=s.proposed, invalid=s.invalid)
+            for name, s in sorted(self.proposer_stats.items())
+        ]
 
     @staticmethod
     def _drive(searcher: MCTS, budget: int, *,
@@ -471,6 +547,9 @@ class CompilerSession:
             workload=task.workload.name,
             dims={l.name: l.extent for l in task.workload.loops},
             llm=res.llm,
+            proposer=res.proposer,
+            reviewer=res.reviewer,
+            review_action=res.review_action,
             oracle=res.oracle,
             measured=measured is not None,
             measured_latency_s=measured["measured_latency_s"]

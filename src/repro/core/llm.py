@@ -34,6 +34,8 @@ import math
 import os
 import random
 import re
+import time
+import urllib.error
 import urllib.request
 from typing import Optional, Sequence
 
@@ -159,13 +161,23 @@ def build_prompt(
 
 @dataclasses.dataclass
 class Proposal:
-    """Validated result of one LLM expansion query."""
+    """Validated result of one LLM expansion query.
+
+    ``proposer``/``reviewer``/``review_action`` are per-call provenance:
+    which pool member drafted the proposal, and — when a review tier
+    escalated it — who reviewed it and what the review did
+    (``accept``/``refine``/``replace``/``veto``).  A plain single-proposer
+    search stamps ``proposer`` only.
+    """
 
     transforms: list[Transform]
     reasoning: str
     raw_text: str
     n_proposed: int
     n_invalid: int
+    proposer: Optional[str] = None
+    reviewer: Optional[str] = None
+    review_action: Optional[str] = None
 
     @property
     def fallback(self) -> bool:
@@ -827,24 +839,38 @@ class APILLM(LLMBase):
     Reads OPENAI_BASE_URL / OPENAI_API_KEY / REPRO_LLM_MODEL from the
     environment.  Never invoked in CI (this container is offline); the
     HeuristicReasonerLLM substitutes behind the same interface.
+
+    Transient transport failures retry with bounded exponential backoff
+    (+ jitter drawn from the caller's rng, so deployments stay
+    reproducible given a seed): a proposer pool multiplies API calls, and
+    one dropped connection must not poison a whole MCTS expansion.
+    Client errors other than 429 fail immediately — retrying a 400 burns
+    the budget without ever succeeding.  Each retry emits an obs instant
+    (``llm-retry``) so traces show exactly where wall-time went.
     """
 
-    def __init__(self, model: Optional[str] = None, timeout_s: float = 60.0):
+    def __init__(self, model: Optional[str] = None, timeout_s: float = 60.0,
+                 max_attempts: int = 3, backoff_s: float = 0.5,
+                 backoff_mult: float = 2.0, jitter: float = 0.25,
+                 tracer=None):
+        from ..obs import NULL_TRACER
+
         self.model = model or os.environ.get("REPRO_LLM_MODEL", "gpt-4o-mini")
         self.base = os.environ.get(
             "OPENAI_BASE_URL", "https://api.openai.com/v1"
         )
         self.key = os.environ.get("OPENAI_API_KEY", "")
         self.timeout_s = timeout_s
+        self.max_attempts = max(1, max_attempts)
+        self.backoff_s = backoff_s
+        self.backoff_mult = backoff_mult
+        self.jitter = jitter
+        self.trace = tracer or NULL_TRACER
+        self._sleep = time.sleep  # injectable (tests)
+        self.retries = 0
         self.name = f"api:{self.model}"
 
-    def complete(self, prompt: Prompt, rng: random.Random) -> str:
-        body = json.dumps({
-            "model": self.model,
-            "messages": [{"role": "user", "content": prompt.text}],
-            "temperature": 0.7,
-            "seed": rng.randrange(2**31),
-        }).encode()
+    def _request(self, body: bytes) -> str:
         req = urllib.request.Request(
             f"{self.base}/chat/completions",
             data=body,
@@ -856,6 +882,37 @@ class APILLM(LLMBase):
         with urllib.request.urlopen(req, timeout=self.timeout_s) as r:
             out = json.load(r)
         return out["choices"][0]["message"]["content"]
+
+    @staticmethod
+    def _retryable(e: Exception) -> bool:
+        if isinstance(e, urllib.error.HTTPError):
+            return e.code == 429 or e.code >= 500
+        return isinstance(e, (urllib.error.URLError, TimeoutError, OSError))
+
+    def complete(self, prompt: Prompt, rng: random.Random) -> str:
+        body = json.dumps({
+            "model": self.model,
+            "messages": [{"role": "user", "content": prompt.text}],
+            "temperature": 0.7,
+            "seed": rng.randrange(2**31),
+        }).encode()
+        delay = self.backoff_s
+        for attempt in range(1, self.max_attempts + 1):
+            try:
+                return self._request(body)
+            except Exception as e:  # noqa: BLE001 — classified below
+                if attempt >= self.max_attempts or not self._retryable(e):
+                    raise
+                sleep_s = delay * (1.0 + self.jitter * rng.random())
+                self.retries += 1
+                self.trace.instant(
+                    "llm-retry", cat="llm", model=self.model,
+                    attempt=attempt, sleep_s=round(sleep_s, 3),
+                    error=type(e).__name__,
+                )
+                self._sleep(sleep_s)
+                delay *= self.backoff_mult
+        raise RuntimeError("unreachable")  # pragma: no cover
 
 
 def make_llm(name: str) -> LLMBase:
@@ -875,10 +932,18 @@ def make_llm(name: str) -> LLMBase:
 
 @dataclasses.dataclass
 class FallbackStats:
+    """Appendix-G expansion statistics, attributable to ONE proposer tier.
+
+    ``name`` identifies the proposer the counts belong to, so invalid-name
+    and fallback rates stay per-tier when several proposers share a search
+    tree (``repro.compiler.proposers``) — Table 8 needs the attribution.
+    """
+
     expansions: int = 0
     fallbacks: int = 0
     proposed: int = 0
     invalid: int = 0
+    name: str = ""
 
     @property
     def fallback_rate(self) -> float:
@@ -888,6 +953,20 @@ class FallbackStats:
     def invalid_rate(self) -> float:
         return self.invalid / self.proposed if self.proposed else 0.0
 
+    def absorb(self, prop: Proposal) -> None:
+        """Count one expansion's outcome."""
+        self.expansions += 1
+        self.proposed += prop.n_proposed
+        self.invalid += prop.n_invalid
+        if prop.fallback:
+            self.fallbacks += 1
+
+    def merge(self, other: "FallbackStats") -> None:
+        self.expansions += other.expansions
+        self.fallbacks += other.fallbacks
+        self.proposed += other.proposed
+        self.invalid += other.invalid
+
 
 class LLMProposer:
     """Prompt -> LLM -> parse -> validate, with Appendix-G fallback stats."""
@@ -896,22 +975,32 @@ class LLMProposer:
         self.llm = llm
         self.platform = platform
         self.trace_depth = trace_depth
-        self.stats = FallbackStats()
+        self.stats = FallbackStats(name=llm.name if llm is not None else "")
 
     def _build_prompt(self, trace: Sequence[TraceEntry]) -> Prompt:
         """Prompt-construction seam; a session's SeededProposer overrides
         this to weave cross-task context into every prompt."""
         return build_prompt(trace, self.platform, self.trace_depth)
 
+    def _query(
+        self, prompt: Prompt, trace: Sequence[TraceEntry], rng: random.Random
+    ) -> Proposal:
+        """Completion seam: one LLM call + parse + stats bookkeeping.
+        ``compiler.proposers.PoolProposer`` overrides this to route the
+        draft across a tiered proposer pool."""
+        text = self.llm.complete(prompt, rng)
+        prop = parse_response(text, trace[0].schedule, rng)
+        prop.proposer = self.llm.name
+        self.stats.absorb(prop)
+        return prop
+
     def propose(
         self, trace: Sequence[TraceEntry], rng: random.Random
     ) -> Proposal:
         prompt = self._build_prompt(trace)
-        text = self.llm.complete(prompt, rng)
-        prop = parse_response(text, trace[0].schedule, rng)
-        self.stats.expansions += 1
-        self.stats.proposed += prop.n_proposed
-        self.stats.invalid += prop.n_invalid
-        if prop.fallback:
-            self.stats.fallbacks += 1
-        return prop
+        return self._query(prompt, trace, rng)
+
+    def stats_by_proposer(self) -> dict[str, FallbackStats]:
+        """Per-tier attribution of the Appendix-G statistics.  A single
+        proposer owns all of them; a pool reports one entry per member."""
+        return {self.stats.name: self.stats}

@@ -50,6 +50,12 @@ class Node:
     N: int = 0
     children: list = dataclasses.field(default_factory=list)
     prior: float = 0.0
+    # per-node proposal provenance (None when the node came from the
+    # default random expansion policy): which pool member drafted the
+    # transforms that produced it, and any review-tier outcome
+    proposer: Optional[str] = None
+    reviewer: Optional[str] = None
+    review_action: Optional[str] = None
 
     @property
     def depth(self) -> int:
@@ -203,16 +209,19 @@ class MCTS:
                 )
 
         new_sched: Optional[Schedule] = None
+        derived = False  # True iff new_sched came from the LLM proposal
         if proposal is not None and not proposal.fallback:
             s = node.schedule
             try:
                 for t in proposal.transforms:
                     s = t.apply(s)
                 new_sched = s
+                derived = True
             except ScheduleError:
                 new_sched = None
         if new_sched is None or new_sched.key() in self._seen:
             # default expansion policy (also the Appendix-G fallback path)
+            derived = False
             for _ in range(16):
                 try:
                     s = node.schedule
@@ -234,10 +243,19 @@ class MCTS:
             self._backprop(twin, twin.W / max(1, twin.N))
             return None
 
-        return self._measure_child(node, new_sched)
+        return self._measure_child(node, new_sched,
+                                   proposal=proposal if derived else None)
 
-    def _measure_child(self, node: Node, new_sched: Schedule) -> Optional[Node]:
-        """Measure one candidate (1 sample) and attach it below `node`."""
+    def _measure_child(
+        self, node: Node, new_sched: Schedule,
+        proposal: Optional[Proposal] = None,
+    ) -> Optional[Node]:
+        """Measure one candidate (1 sample) and attach it below `node`.
+
+        ``proposal`` is set only when ``new_sched`` is the proposal's own
+        transform sequence applied to ``node`` — the child then carries
+        the drafting proposer's provenance, and a pool proposer gets its
+        hit-rate feedback (did the measured draft beat its parent?)."""
         try:
             with self.trace.span(
                 "oracle-measure", cat="search", depth=node.depth + 1,
@@ -252,6 +270,13 @@ class MCTS:
         self.samples += 1
         speedup = self.baseline_latency / latency
         child = Node(new_sched, node, latency, speedup)
+        if proposal is not None:
+            child.proposer = proposal.proposer
+            child.reviewer = proposal.reviewer
+            child.review_action = proposal.review_action
+            feedback = getattr(self.proposer, "feedback", None)
+            if feedback is not None:
+                feedback(proposal, improved=latency < node.latency_s)
         if self.prior_weight:
             pred = self.surrogate.predict(new_sched)
             if pred is not None:
@@ -273,6 +298,8 @@ class MCTS:
         Unescalated candidates cost zero samples."""
         pool: list[Schedule] = []
         keys: set = set()
+        proposal: Optional[Proposal] = None
+        prop_key = None  # key of the proposal-derived candidate, if any
 
         def admit(s: Schedule) -> None:
             k = s.key()
@@ -301,6 +328,7 @@ class MCTS:
                     for t in proposal.transforms:
                         s = t.apply(s)
                     admit(s)
+                    prop_key = s.key()
                 except ScheduleError:
                     pass
         tries = 0
@@ -323,7 +351,10 @@ class MCTS:
         for s in ranked + backups:
             if len(children) >= want:
                 break
-            child = self._measure_child(node, s)
+            child = self._measure_child(
+                node, s,
+                proposal=proposal if s.key() == prop_key else None,
+            )
             if child is not None:
                 children.append(child)
         return children

@@ -48,6 +48,18 @@ class SearchResult:
     # plateau statistics cross-task context distills into prefer/avoid
     # hints (repro.compiler.context).  None for tree-less methods.
     family_stats: Optional[dict] = None
+    # Per-tier Appendix-G statistics ({name: FallbackStats}), so invalid
+    # and fallback rates stay attributable when a proposer pool shares
+    # the tree (repro.compiler.proposers).  A single proposer reports one
+    # entry.  None for non-LLM methods.
+    fallback_by_proposer: Optional[dict] = None
+    # Credit for the best node found: the pool member that drafted it (or
+    # the nearest LLM-drafted ancestor), plus any review-tier outcome.
+    proposer: Optional[str] = None
+    reviewer: Optional[str] = None
+    review_action: Optional[str] = None
+    # Pool routing/hit-rate snapshot at search end (ProposerPool.summary())
+    pool_stats: Optional[list] = None
 
 
 def _oracle_name(oracle) -> str:

@@ -72,6 +72,46 @@ def _tasks(cfg, seqs: list[int], tp: int, all_kernels: bool):
     return tasks
 
 
+def _proposer_spec(args) -> str:
+    """Merge --llm/--reviewer/--route into one canonical proposer spec
+    (``compiler/proposers/spec.py``); plain single-tier specs pass
+    through untouched so the pre-pool CLI behaves identically."""
+    spec = args.llm
+    if "+" in spec and not spec.startswith("pool:"):
+        spec = "pool:" + spec
+    if args.reviewer or args.route:
+        if not spec.startswith("pool:"):
+            spec = "pool:" + spec
+        if args.reviewer and ":reviewer=" not in spec:
+            spec += f":reviewer={args.reviewer}"
+        if args.route and ":route=" not in spec:
+            spec += f":route={args.route}"
+    return spec
+
+
+def _print_proposer_table(rows: list) -> None:
+    """Per-proposer session summary: drafts, hit-rates, review outcomes."""
+    if not rows:
+        return
+    print("proposers:")
+    for row in rows:
+        if "reviewer" in row:
+            print(f"  {row['reviewer']:>28}  reviewer: "
+                  f"{row['reviews']} reviews "
+                  f"({row['accepted']} accept / {row['refined']} refine / "
+                  f"{row['replaced']} replace / {row['vetoed']} veto)")
+        elif "drafted" in row:
+            print(f"  {row['proposer']:>28}  cost={row['cost']:<6} "
+                  f"drafted={row['drafted']:<5} hits={row['hits']:<4} "
+                  f"hit-rate={row['hit_rate']:.2f} "
+                  f"fallback-rate={row['fallback_rate']:.2f}")
+        else:
+            print(f"  {row['proposer']:>28}  "
+                  f"expansions={row['expansions']:<5} "
+                  f"fallback-rate={row['fallback_rate']:.2f} "
+                  f"invalid-rate={row['invalid_rate']:.2f}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -87,7 +127,19 @@ def main(argv=None):
                          "from converged tasks to stragglers)")
     ap.add_argument("--method", default="llm-mcts",
                     choices=["llm-mcts", "mcts", "evolutionary"])
-    ap.add_argument("--llm", default="gpt-4o-mini")
+    ap.add_argument("--llm", "--proposer", dest="llm", default="gpt-4o-mini",
+                    help="proposal model: a tier name (core/llm.MODEL_TIERS),"
+                         " 'random', 'api:<model>', or a pool spec "
+                         "'pool:a+b[:reviewer=c][:route=policy]' "
+                         "(compiler/proposers); 'a+b' shorthand builds a "
+                         "pool too")
+    ap.add_argument("--reviewer", default=None,
+                    help="strong review-tier model escalated at promising "
+                         "nodes (implies a pool; merged into the pool spec)")
+    ap.add_argument("--route", default=None,
+                    choices=["round-robin", "cost-weighted", "bandit"],
+                    help="pool routing policy: which member drafts each "
+                         "expansion (default round-robin)")
     ap.add_argument("--oracle", default="analytical",
                     choices=["analytical", "measured", "hybrid",
                              "surrogate", "surrogate:analytical",
@@ -152,7 +204,7 @@ def main(argv=None):
     session = CompilerSession(
         target="tpu-v5e",
         oracle=args.oracle,
-        proposer=args.llm,
+        proposer=_proposer_spec(args),
         method=args.method,
         budget_policy=BudgetPolicy(per_task=args.budget,
                                    reallocate=args.shared),
@@ -176,6 +228,7 @@ def main(argv=None):
           f"{session.cache_hits} cache-hits, "
           f"{session.samples_spent} samples, "
           f"{session.seeds_played} cross-task seeds")
+    _print_proposer_table(session.proposer_summary())
     if hasattr(session.oracle, "surrogate_provenance"):
         sp = session.oracle.surrogate_provenance()
         print(f"surrogate: {sp['version']}, {sp['train_rows']} rows "

@@ -1,12 +1,15 @@
 """LLM interface: prompt construction, parsing, validation, fallback
 (paper §3.1, Appendix A/G)."""
+import dataclasses
 import random
+import urllib.error
 
 import pytest
 
 from repro.core import schedule as S
 from repro.core.cost_model import get_platform
 from repro.core.llm import (
+    _FAKE_NAMES,
     MODEL_TIERS,
     APILLM,
     HeuristicReasonerLLM,
@@ -155,3 +158,163 @@ def test_tier_registry_matches_paper_models():
         "gpt-4o-mini", "o1-mini", "llama3.3-70b",
         "deepseek-r1-distill-32b", "llama3.1-8b", "deepseek-r1-distill-7b",
     }
+
+
+# ---------------------------------------------------------------------------
+# Adversarial completions: parse_response must degrade, never raise
+# ---------------------------------------------------------------------------
+
+ADVERSARIAL_COMPLETIONS = [
+    "",                                         # empty completion
+    "Reasoning: truncated mid-sent",            # cut off before the plan
+    "Transformations to apply:",                # empty plan section
+    "Transformations to apply: " + ", ".join(_FAKE_NAMES),
+    "%%% garbage {not a proposal} <<<>>>",
+    "Reasoning: x.\nTransformations to apply: "
+    + ", ".join(_FAKE_NAMES) + ".",
+]
+
+
+@pytest.mark.parametrize("text", ADVERSARIAL_COMPLETIONS)
+def test_adversarial_completion_degrades_to_fallback(text):
+    w = get_workload("deepseek_r1_moe")
+    s = S.initial_schedule(w)
+    prop = parse_response(text, s, random.Random(0))
+    assert prop.fallback
+    assert prop.transforms == []
+
+
+@pytest.mark.parametrize("tier", sorted(MODEL_TIERS))
+def test_fully_sloppy_tier_never_raises(tier):
+    """Every tier pushed to max param_sloppiness (all families emitted
+    parameterless): the proposer samples defaults or falls back — it
+    never raises, and every surviving transform applies cleanly."""
+    llm = HeuristicReasonerLLM(tier)
+    llm.spec = dataclasses.replace(llm.spec, param_sloppiness=1.0)
+    plat = get_platform("core-i9")
+    prop = LLMProposer(llm, plat)
+    rng = random.Random(1)
+    trace = _trace()
+    for _ in range(50):
+        p = prop.propose(trace, rng)
+        s = trace[0].schedule
+        for t in p.transforms:
+            s = t.apply(s)  # raises ScheduleError on an invalid survivor
+    assert prop.stats.expansions == 50
+    assert prop.stats.name == tier
+
+
+@pytest.mark.parametrize("tier", sorted(MODEL_TIERS))
+def test_fake_name_storm_per_tier(tier):
+    """Every tier forced to emit ONLY unknown transform names: each
+    expansion degrades to the Appendix-G fallback without raising."""
+    llm = HeuristicReasonerLLM(tier)
+    llm.spec = dataclasses.replace(
+        llm.spec, invalid_name_rate=1.0, param_sloppiness=1.0)
+    prop = LLMProposer(llm, get_platform("core-i9"))
+    rng = random.Random(2)
+    trace = _trace()
+    for _ in range(30):
+        p = prop.propose(trace, rng)
+        if p.n_proposed:
+            # only real families survive validation
+            assert all(t.name not in _FAKE_NAMES for t in p.transforms)
+    assert prop.stats.invalid > 0
+
+
+# ---------------------------------------------------------------------------
+# APILLM retry-with-backoff (satellite: bounded attempts, jitter, obs)
+# ---------------------------------------------------------------------------
+
+
+def _retry_llm(**kw):
+    llm = APILLM("test-model", backoff_s=0.01, **kw)
+    llm._sleep = lambda s: llm.__dict__.setdefault("_slept", []).append(s)
+    return llm
+
+
+def _prompt():
+    return build_prompt(_trace(), get_platform("core-i9"), trace_depth=2)
+
+
+def test_api_llm_retries_transient_then_succeeds():
+    llm = _retry_llm(max_attempts=3)
+    calls = []
+
+    def req(body):
+        calls.append(body)
+        if len(calls) < 3:
+            raise urllib.error.URLError("connection reset")
+        return "Reasoning: ok.\nTransformations to apply: Vectorize(width=8)."
+
+    llm._request = req
+    out = llm.complete(_prompt(), random.Random(0))
+    assert out.startswith("Reasoning:")
+    assert llm.retries == 2
+    sleeps = llm.__dict__["_slept"]
+    assert len(sleeps) == 2
+    # exponential: second delay base doubles; jitter <= 25% cannot mask it
+    assert sleeps[1] > sleeps[0]
+    # one request body for all attempts: the rng seed is drawn exactly once
+    assert calls[0] == calls[1] == calls[2]
+
+
+def test_api_llm_client_error_fails_immediately():
+    llm = _retry_llm(max_attempts=5)
+    llm._request = lambda body: (_ for _ in ()).throw(
+        urllib.error.HTTPError("u", 400, "bad request", None, None))
+    with pytest.raises(urllib.error.HTTPError):
+        llm.complete(_prompt(), random.Random(0))
+    assert llm.retries == 0
+
+
+def test_api_llm_rate_limit_is_retryable():
+    llm = _retry_llm(max_attempts=2)
+    attempts = []
+
+    def req(body):
+        attempts.append(1)
+        if len(attempts) == 1:
+            raise urllib.error.HTTPError("u", 429, "slow down", None, None)
+        return "Reasoning: ok.\nTransformations to apply: Parallel(levels=1)."
+
+    llm._request = req
+    assert llm.complete(_prompt(), random.Random(0))
+    assert llm.retries == 1
+
+
+def test_api_llm_bounded_attempts_then_raises():
+    llm = _retry_llm(max_attempts=3)
+    n = []
+
+    def req(body):
+        n.append(1)
+        raise urllib.error.URLError("down")
+
+    llm._request = req
+    with pytest.raises(urllib.error.URLError):
+        llm.complete(_prompt(), random.Random(0))
+    assert len(n) == 3  # bounded: exactly max_attempts requests
+    assert llm.retries == 2
+
+
+def test_api_llm_retry_emits_obs_instants():
+    from repro.obs import Tracer
+
+    tracer = Tracer()
+    llm = APILLM("test-model", backoff_s=0.0, max_attempts=2, tracer=tracer)
+    llm._sleep = lambda s: None
+    flaky = []
+
+    def req(body):
+        flaky.append(1)
+        if len(flaky) == 1:
+            raise TimeoutError("slow")
+        return "Reasoning: ok.\nTransformations to apply: Unroll(factor=2)."
+
+    llm._request = req
+    llm.complete(_prompt(), random.Random(0))
+    retries = [e for e in tracer.events() if e.name == "llm-retry"]
+    assert len(retries) == 1
+    assert retries[0].args["error"] == "TimeoutError"
+    assert retries[0].args["attempt"] == 1

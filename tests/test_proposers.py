@@ -1,0 +1,438 @@
+"""Routed multi-LLM proposer pools (``repro.compiler.proposers``):
+spec parsing, deterministic routing, the review tier's action matrix,
+RNG-identity of a pool of one, and provenance through records."""
+import json
+import random
+
+import pytest
+
+from repro.compiler import (
+    BudgetPolicy,
+    CompilerSession,
+    ProposerPool,
+    ReviewTier,
+    TuningRecords,
+    attention_task,
+    build_pool,
+    gemm_task,
+    is_pool_spec,
+    parse_pool_spec,
+)
+from repro.compiler.proposers.pool import PooledProposer, tier_cost
+from repro.compiler.proposers.review import _trace_avoid
+from repro.compiler.proposers.routing import make_router
+from repro.core import schedule as S
+from repro.core.llm import (
+    MODEL_TIERS,
+    LLMBase,
+    TraceEntry,
+    make_llm,
+)
+from repro.core.workloads import get_workload
+from repro.obs import Tracer
+
+WORKLOAD = "llama3_8b_attention"
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+
+
+def test_is_pool_spec():
+    assert is_pool_spec("pool:gpt-4o-mini")
+    assert not is_pool_spec("gpt-4o-mini")
+    assert not is_pool_spec(None)
+
+
+def test_parse_members_reviewer_route():
+    ps = parse_pool_spec(
+        "pool:gpt-4o-mini+llama3.1-8b:reviewer=o1-mini:route=bandit")
+    assert ps.members == ("gpt-4o-mini", "llama3.1-8b")
+    assert ps.reviewer == "o1-mini"
+    assert ps.route == "bandit"
+
+
+def test_parse_defaults():
+    ps = parse_pool_spec("pool:llama3.1-8b")
+    assert ps.members == ("llama3.1-8b",)
+    assert ps.reviewer is None
+    assert ps.route == "round-robin"
+
+
+def test_parse_api_members_with_colons():
+    ps = parse_pool_spec("pool:api:gpt-4o+llama3.1-8b:reviewer=api:o1")
+    assert ps.members == ("api:gpt-4o", "llama3.1-8b")
+    assert ps.reviewer == "api:o1"
+
+
+def test_parse_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        parse_pool_spec("gpt-4o-mini")
+    with pytest.raises(ValueError):
+        parse_pool_spec("pool:")
+    with pytest.raises(ValueError):
+        parse_pool_spec("pool:a+a")
+    with pytest.raises(ValueError):
+        parse_pool_spec("pool:gpt-4o-mini:route=nonsense")
+    with pytest.raises(ValueError):
+        parse_pool_spec("pool:gpt-4o-mini:route=bandit:route=bandit")
+
+
+def test_build_pool_and_name_round_trip():
+    spec = "pool:gpt-4o-mini+llama3.1-8b:reviewer=o1-mini:route=bandit"
+    pool = build_pool(spec)
+    assert [m.name for m in pool.members] == ["gpt-4o-mini", "llama3.1-8b"]
+    assert pool.reviewer.name == "o1-mini"
+    assert pool.name == spec
+    # round-robin (the default) is omitted from the canonical name
+    assert build_pool("pool:llama3.1-8b").name == "pool:llama3.1-8b"
+
+
+def test_pool_rejects_duplicates_and_empty():
+    with pytest.raises(ValueError):
+        ProposerPool([], make_router("round-robin"))
+    m = PooledProposer(make_llm("gpt-4o-mini"))
+    m2 = PooledProposer(make_llm("gpt-4o-mini"))
+    with pytest.raises(ValueError):
+        ProposerPool([m, m2], make_router("round-robin"))
+
+
+# ---------------------------------------------------------------------------
+# cost model + routers (all deterministic: no rng anywhere)
+# ---------------------------------------------------------------------------
+
+
+def test_tier_cost_ordering_matches_capability():
+    costs = {name: tier_cost(spec) for name, spec in MODEL_TIERS.items()}
+    assert costs["gpt-4o-mini"] == 1.0  # strongest profile normalizes to 1
+    assert costs["llama3.1-8b"] < costs["llama3.3-70b"]
+    assert costs["deepseek-r1-distill-7b"] < costs["gpt-4o-mini"]
+    assert tier_cost(None) == 1.0  # unknown models (api adapters)
+
+
+def _members(*names):
+    return [PooledProposer(make_llm(n)) for n in names]
+
+
+def test_round_robin_cycles_in_order():
+    r = make_router("round-robin")
+    ms = _members("gpt-4o-mini", "llama3.1-8b", "o1-mini")
+    assert [r.pick(ms) for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_cost_weighted_prefers_cheap_members():
+    r = make_router("cost-weighted")
+    ms = _members("gpt-4o-mini", "deepseek-r1-distill-7b")
+    picks = [r.pick(ms) for _ in range(100)]
+    share_cheap = picks.count(1) / len(picks)
+    want = (1 / ms[1].cost) / (1 / ms[0].cost + 1 / ms[1].cost)
+    assert abs(share_cheap - want) < 0.05  # smooth WRR tracks 1/cost
+    assert 0 in picks  # no starvation
+
+
+def test_bandit_exploits_the_hitting_member():
+    r = make_router("bandit")
+    ms = _members("gpt-4o-mini", "llama3.1-8b")
+    for i in range(40):
+        j = r.pick(ms)
+        ms[j].drafted += 1
+        # member 1 always hits, member 0 never does
+        ms[j].window.append(1 if j == 1 else 0)
+    late = [r.pick(ms) for _ in range(10)]  # stateless reads
+    assert late.count(1) == 10
+
+
+def test_routers_are_deterministic():
+    for policy in ("round-robin", "cost-weighted", "bandit"):
+        a, b = make_router(policy), make_router(policy)
+        ms = _members("gpt-4o-mini", "llama3.1-8b")
+        assert [a.pick(ms) for _ in range(20)] == \
+            [b.pick(ms) for _ in range(20)]
+
+
+def test_make_router_rejects_unknown():
+    with pytest.raises(KeyError):
+        make_router("thompson")
+
+
+# ---------------------------------------------------------------------------
+# RNG-identity: pool of 1 == plain single proposer
+# ---------------------------------------------------------------------------
+
+
+def test_pool_of_one_is_rng_identical_to_single():
+    single = CompilerSession(target="core-i9", proposer="gpt-4o-mini",
+                             shared_context=False)
+    pooled = CompilerSession(target="core-i9", proposer="pool:gpt-4o-mini",
+                             shared_context=False)
+    r1 = single.search(WORKLOAD, budget=30, seed=7)
+    r2 = pooled.search(WORKLOAD, budget=30, seed=7)
+    assert r1.curve.points == r2.curve.points
+    assert r1.best_speedup == r2.best_speedup
+    assert r1.best_schedule.key() == r2.best_schedule.key()
+    # provenance still flows in the pooled arm
+    assert r2.proposer == "gpt-4o-mini"
+
+
+def test_pool_of_two_changes_nothing_structural():
+    pooled = CompilerSession(
+        target="core-i9", proposer="pool:gpt-4o-mini+llama3.1-8b",
+        shared_context=False)
+    res = pooled.search(WORKLOAD, budget=30, seed=7)
+    assert res.best_speedup > 1.0
+    assert res.llm == "pool:gpt-4o-mini+llama3.1-8b"
+    # round-robin: both members drafted
+    drafted = {m.name: m.drafted for m in pooled.pool.members}
+    assert all(v > 0 for v in drafted.values())
+
+
+# ---------------------------------------------------------------------------
+# review tier: the accept / refine / replace / veto action matrix
+# ---------------------------------------------------------------------------
+
+
+class ScriptedLLM(LLMBase):
+    """Replays a fixed completion (review-matrix control)."""
+
+    def __init__(self, name, text):
+        self.name = name
+        self.text = text
+
+    def complete(self, prompt, rng):
+        return self.text
+
+
+GOOD = "Reasoning: r.\nTransformations to apply: TileSize."
+GARBAGE = "no plan here"
+
+
+def _review_fixture(draft_text, review_text, history_delta=0.0):
+    """A two-node trace + a drafted proposal + a reviewer around
+    ``review_text``.  ``history_delta`` > 0 makes the drafted family a
+    regression in the visible trace (feeds the veto path)."""
+    from repro.core.llm import parse_response
+
+    w = get_workload(WORKLOAD)
+    s0 = S.initial_schedule(w)
+    rng = random.Random(0)
+    t = S.parse_transform("Parallel", s0, rng)
+    s1 = t.apply(s0)
+    lat1 = 1.0 + history_delta  # child slower than parent => regression
+    trace = [TraceEntry(s1, lat1, 1.0 / lat1), TraceEntry(s0, 1.0, 1.0)]
+    draft = parse_response(draft_text, s1, random.Random(1))
+    draft.proposer = "drafter"
+    tier = ReviewTier(ScriptedLLM("reviewer", review_text))
+    return tier, trace, draft
+
+
+def test_trace_avoid_flags_regressing_family():
+    _, trace, _ = _review_fixture(GOOD, GOOD, history_delta=0.5)
+    assert "Parallel" in _trace_avoid(trace)
+    _, trace, _ = _review_fixture(GOOD, GOOD, history_delta=-0.5)
+    assert "Parallel" not in _trace_avoid(trace)
+
+
+def test_review_accept_when_reviewer_has_no_opinion():
+    tier, trace, draft = _review_fixture(GOOD, GARBAGE)
+    from repro.core.llm import build_prompt
+
+    from repro.core.cost_model import get_platform
+
+    prompt = build_prompt(trace, get_platform("core-i9"), 2)
+    out = tier.review(prompt, trace, draft, random.Random(2))
+    assert out.review_action == "accept"
+    assert out.reviewer == "reviewer"
+    assert out.proposer == "drafter"
+    assert [t.describe() for t in out.transforms] == \
+        [t.describe() for t in draft.transforms]
+    assert tier.accepted == 1
+
+
+def test_review_replace_invalid_draft():
+    tier, trace, draft = _review_fixture(GARBAGE, GOOD)
+    from repro.core.cost_model import get_platform
+    from repro.core.llm import build_prompt
+
+    prompt = build_prompt(trace, get_platform("core-i9"), 2)
+    assert draft.fallback
+    out = tier.review(prompt, trace, draft, random.Random(2))
+    assert out.review_action == "replace"
+    assert not out.fallback
+    assert out.proposer == "drafter"  # drafting credit stays
+    assert tier.replaced == 1
+
+
+def test_review_refine_overlapping_families():
+    tier, trace, draft = _review_fixture(
+        GOOD,
+        "Reasoning: tighter.\nTransformations to apply: TileSize, Unroll.",
+    )
+    from repro.core.cost_model import get_platform
+    from repro.core.llm import build_prompt
+
+    prompt = build_prompt(trace, get_platform("core-i9"), 2)
+    out = tier.review(prompt, trace, draft, random.Random(2))
+    assert out.review_action == "refine"
+    assert {t.name for t in out.transforms} >= {"TileSize"}
+    assert tier.refined == 1
+
+
+def test_review_replace_disjoint_families():
+    tier, trace, draft = _review_fixture(
+        GOOD, "Reasoning: other axis.\nTransformations to apply: Unroll.")
+    from repro.core.cost_model import get_platform
+    from repro.core.llm import build_prompt
+
+    prompt = build_prompt(trace, get_platform("core-i9"), 2)
+    out = tier.review(prompt, trace, draft, random.Random(2))
+    assert out.review_action == "replace"
+    assert {t.name for t in out.transforms} == {"Unroll"}
+
+
+def test_review_veto_kills_regressing_draft():
+    # the draft proposes ONLY the family the visible trace says regressed,
+    # and the reviewer has nothing better: the draft dies pre-oracle
+    tier, trace, draft = _review_fixture(
+        "Reasoning: d.\nTransformations to apply: Parallel.",
+        GARBAGE, history_delta=0.5)
+    from repro.core.cost_model import get_platform
+    from repro.core.llm import build_prompt
+
+    prompt = build_prompt(trace, get_platform("core-i9"), 2)
+    out = tier.review(prompt, trace, draft, random.Random(2))
+    assert out.review_action == "veto"
+    assert out.fallback  # empty transforms -> default expansion policy
+    assert out.proposer == "drafter"
+    assert tier.vetoed == 1 and tier.veto_rate == 1.0
+
+
+def test_promising_quantile_window():
+    tier = ReviewTier(ScriptedLLM("r", GARBAGE), quantile=0.7, min_obs=8)
+    assert not tier.promising(99.0)  # under min_obs: review nothing
+    for v in range(10):
+        tier.observe(float(v))
+    assert tier.promising(9.0)
+    assert not tier.promising(1.0)
+
+
+# ---------------------------------------------------------------------------
+# provenance: SearchResult, records, schema compat
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_by_proposer_in_search_result():
+    session = CompilerSession(
+        target="core-i9", proposer="pool:gpt-4o-mini+llama3.1-8b",
+        shared_context=False)
+    res = session.search(WORKLOAD, budget=24, seed=0)
+    assert set(res.fallback_by_proposer) == {"gpt-4o-mini", "llama3.1-8b"}
+    for name, stats in res.fallback_by_proposer.items():
+        assert stats.name == name
+        assert stats.expansions > 0
+    assert res.pool_stats is not None
+    # single-proposer searches report one attributed entry
+    single = CompilerSession(target="core-i9", proposer="gpt-4o-mini",
+                             shared_context=False)
+    r1 = single.search(WORKLOAD, budget=24, seed=0)
+    assert set(r1.fallback_by_proposer) == {"gpt-4o-mini"}
+    assert r1.pool_stats is None
+
+
+def test_records_carry_pool_provenance(tmp_path):
+    path = str(tmp_path / "records.jsonl")
+    session = CompilerSession(
+        target="core-i9", proposer="pool:gpt-4o-mini+llama3.1-8b",
+        records=path, budget_policy=BudgetPolicy(per_task=48,
+                                                 early_stop=False))
+    session.compile([
+        attention_task(8, 512, 512, 128, kv_heads=2, priority=10),
+        attention_task(8, 256, 256, 128, kv_heads=2, priority=5),
+        gemm_task(512, 1024, 1024, epilogue="swiglu", priority=1),
+    ], force=True)
+    recs = session.records.all()
+    assert len(recs) == 3
+    names = {r.proposer for r in recs if r.proposer}
+    assert len(names) >= 2  # both members drafted winning nodes
+    assert all(r.schema >= 2 for r in recs)
+    assert all(r.llm == "pool:gpt-4o-mini+llama3.1-8b" for r in recs)
+    # the JSONL on disk round-trips the new fields
+    reloaded = TuningRecords(path)
+    assert {r.proposer for r in reloaded.all() if r.proposer} == names
+
+
+def test_legacy_schema1_rows_still_load(tmp_path):
+    path = str(tmp_path / "records.jsonl")
+    legacy = {
+        "key": "core-i9:attn[i=128]", "kind": "attention",
+        "params": {"block_q": 64, "block_k": 64}, "speedup": 2.0,
+        "samples": 8, "method": "llm-mcts", "platform": "core-i9",
+        "workload": "attn", "schema": 1, "created_at": 1.0,
+    }
+    with open(path, "w") as f:
+        f.write(json.dumps(legacy) + "\n")
+    store = TuningRecords(path)
+    rec = store.get("core-i9:attn[i=128]")
+    assert rec is not None and rec.schema == 1
+    assert rec.proposer is None and rec.reviewer is None
+    assert rec.review_action is None
+    assert store.quarantined == 0
+
+
+# ---------------------------------------------------------------------------
+# session integration: shared pool state, summaries, obs spans
+# ---------------------------------------------------------------------------
+
+
+def test_pool_state_survives_across_tasks():
+    session = CompilerSession(
+        target="core-i9", proposer="pool:gpt-4o-mini+llama3.1-8b",
+        budget_policy=BudgetPolicy(per_task=16, early_stop=False))
+    pool = session.pool
+    assert pool is not None
+    session.compile([attention_task(8, 256, 256, 128, kv_heads=2)],
+                    force=True)
+    after_one = sum(m.drafted for m in pool.members)
+    session.compile([attention_task(8, 512, 512, 128, kv_heads=2)],
+                    force=True)
+    after_two = sum(m.drafted for m in pool.members)
+    assert session.pool is pool  # same object all session
+    assert after_one > 0 and after_two > after_one
+
+
+def test_proposer_summary_shapes():
+    session = CompilerSession(
+        target="core-i9",
+        proposer="pool:gpt-4o-mini+llama3.1-8b:reviewer=o1-mini",
+        shared_context=False)
+    session.search(WORKLOAD, budget=24, seed=0)
+    rows = session.proposer_summary()
+    assert [r.get("proposer") for r in rows[:2]] == \
+        ["gpt-4o-mini", "llama3.1-8b"]
+    assert rows[-1]["reviewer"] == "o1-mini"
+    assert {"reviews", "vetoed", "veto_rate"} <= set(rows[-1])
+    # single-proposer summary accumulates across searches
+    single = CompilerSession(target="core-i9", proposer="gpt-4o-mini",
+                             shared_context=False)
+    single.search(WORKLOAD, budget=12, seed=0)
+    single.search(WORKLOAD, budget=12, seed=1)
+    (row,) = single.proposer_summary()
+    assert row["proposer"] == "gpt-4o-mini"
+    assert row["expansions"] > 12
+
+
+def test_pool_emits_obs_spans():
+    tracer = Tracer()
+    session = CompilerSession(
+        target="core-i9",
+        proposer="pool:gpt-4o-mini+llama3.1-8b:reviewer=o1-mini",
+        shared_context=False, tracer=tracer)
+    session.search(WORKLOAD, budget=24, seed=0)
+    events = tracer.events()
+    drafts = [e for e in events if e.name == "draft" and e.cat == "pool"]
+    routes = [e for e in events if e.name == "route" and e.cat == "pool"]
+    assert drafts and routes
+    assert {e.args["proposer"] for e in routes} == \
+        {"gpt-4o-mini", "llama3.1-8b"}
+    reviews = [e for e in events if e.name == "review" and e.cat == "pool"]
+    assert all(e.args.get("reviewer") == "o1-mini" for e in reviews)

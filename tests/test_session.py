@@ -6,6 +6,7 @@ import re
 import pytest
 
 from repro.compiler import (
+    SCHEMA_VERSION,
     ArtifactSet,
     BudgetPolicy,
     CompilerSession,
@@ -45,7 +46,7 @@ def test_records_roundtrip_and_dedup(tmp_path):
     assert fresh.get("tpu-v5e:gemm[i=64,j=128,k=128]").speedup == 5.0
     # provenance is stamped on every record
     for rec in fresh.all():
-        assert rec.schema == 1
+        assert rec.schema == SCHEMA_VERSION
         assert rec.provenance.get("cost_model")
     assert [r.kind for r in fresh.query(kind="gemm")] == ["gemm", "gemm"]
 
