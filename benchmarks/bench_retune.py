@@ -1,0 +1,166 @@
+"""Retune ablation: restart-free pickup of retuned kernels (§Retune).
+
+The serve→compile loop end to end, CI-sized: a ``PagedServeEngine`` bound
+to an isolated ``ArtifactRegistry`` serves a seeded greedy stream, the
+``BackgroundRetuner`` runs one synchronous cycle over the observed shape
+distribution (fresh ``TuningRecords`` — every hot shape compiles for
+real), and the engine hot-swaps to the published epoch at its next step
+boundary.  A control engine with no registry serves the identical stream
+for the exactness check.
+
+Gated in ``BENCH_retune.json`` (deterministic counters only — wall-clock
+is never gated directly):
+
+  * ``swap_count >= 1``        — the engine adopted a retuned epoch live;
+  * ``token_mismatches == 0``  — greedy outputs bit-identical across the
+    swap (vs the no-swap control, both phases);
+  * ``hot_shape_tuned``        — the hottest observed attention shape has
+    a record in the registry's store after the cycle;
+  * ``post_latency_ok``        — the post-swap steady-state latency floor
+    (min step wall, excluding the first 2 re-trace steps) is within an
+    internal 1.25x tolerance of the pre-swap floor.  The min is the
+    stable estimator here — medians over ~9 steps of 2-4ms jitter too
+    much to gate on; both are emitted, only the floor is rated.
+
+Env knobs (CI defaults in parens): REPRO_RETUNE_ARCH (tinyllama-1.1b),
+REPRO_RETUNE_SLOTS (2), REPRO_RETUNE_MAX_NEW (12), REPRO_RETUNE_MAX_LEN
+(64), REPRO_RETUNE_BUDGET (8: search samples per retuned task).
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import time
+
+import numpy as np
+
+from .common import emit, emit_json
+
+WARMUP_STEPS = 2       # steps dropped from each phase's median (jit trace)
+POST_TOL = 1.25        # internal tolerance for post_latency_ok
+
+
+def _env(name: str, default: int) -> int:
+    return int(os.environ.get(name, str(default)))
+
+
+def _drive(engine, prompts, uid0, max_new):
+    """Submit one slot-filling batch and step to drain, timing each
+    step; returns (outputs-by-offset-uid, per-step walls)."""
+    from repro.serve import Request
+
+    for i, p in enumerate(prompts):
+        engine.submit(Request(uid0 + i, p, max_new_tokens=max_new))
+    walls, done = [], []
+    while engine.queue or engine.active or engine.prefilling:
+        t0 = time.perf_counter()
+        done.extend(engine.step())
+        walls.append(time.perf_counter() - t0)
+    return {r.uid - uid0: list(r.output) for r in done}, walls
+
+
+def _steady(walls):
+    """(median, floor) over the post-warmup steps."""
+    steady = walls[WARMUP_STEPS:]
+    if not steady:
+        return float("nan"), float("nan")
+    return statistics.median(steady), min(steady)
+
+
+def run():
+    import jax
+
+    from repro.compiler import ArtifactRegistry, local_attention_dims
+    from repro.compiler.records import TuningRecords, record_key
+    from repro.compiler.tasks import attention_tuning_workload
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.obs import Tracer
+    from repro.serve import BackgroundRetuner, PagedServeEngine
+
+    arch = os.environ.get("REPRO_RETUNE_ARCH", "tinyllama-1.1b")
+    slots = _env("REPRO_RETUNE_SLOTS", 2)
+    max_new = _env("REPRO_RETUNE_MAX_NEW", 12)
+    max_len = _env("REPRO_RETUNE_MAX_LEN", 64)
+    budget = _env("REPRO_RETUNE_BUDGET", 8)
+
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    records = TuningRecords(None)                # isolated: all shapes fresh
+    registry = ArtifactRegistry(records, platform="core-i9")
+    tracer = Tracer()
+    engine = PagedServeEngine(cfg, params, slots=slots, max_len=max_len,
+                              backend="jax", registry=registry,
+                              tracer=tracer)
+    control = PagedServeEngine(cfg, params, slots=slots, max_len=max_len,
+                               backend="jax")
+
+    rng = np.random.RandomState(11)
+    prompts = [rng.randint(4, cfg.vocab, size=int(rng.randint(5, 9)))
+               .astype(np.int32) for _ in range(slots)]
+
+    # phase 1: pre-swap serving (epoch 0, default blocks)
+    out_pre, walls_pre = _drive(engine, prompts, uid0=0, max_new=max_new)
+    ctl_pre, _ = _drive(control, prompts, uid0=0, max_new=max_new)
+
+    # one synchronous retune cycle over the observed distribution
+    (hot_attn, _w), = engine.metrics.shapes.top_k("attention", 1)
+    t0 = time.perf_counter()
+    retuner = BackgroundRetuner(engine, top_k=4, budget=budget)
+    cycle = retuner.run_once()
+    cycle_s = time.perf_counter() - t0
+    hq, hkv = local_attention_dims(cfg, 1)
+    hot_key = record_key("core-i9", attention_tuning_workload(
+        hq, hot_attn[0], hot_attn[1], cfg.hd, kv_heads=hkv))
+    hot_shape_tuned = records.get(hot_key) is not None
+
+    # phase 2: identical stream; the first step adopts the new epoch
+    out_post, walls_post = _drive(engine, prompts, uid0=100,
+                                  max_new=max_new)
+    ctl_post, _ = _drive(control, prompts, uid0=100, max_new=max_new)
+
+    mismatches = sum(out_pre[u] != ctl_pre[u] for u in ctl_pre) \
+        + sum(out_post[u] != ctl_post[u] for u in ctl_post) \
+        + sum(out_pre[u] != out_post[u] for u in out_pre)
+    pre_med, pre_min = _steady(walls_pre)
+    post_med, post_min = _steady(walls_post)
+    swap_count = engine.metrics.artifact_swaps
+    metrics = {
+        "swap_count": swap_count,
+        "published_epoch": cycle["epoch"] or 0,
+        "fresh_records": cycle["fresh"],
+        "retuned_tasks": cycle["tasks"],
+        "token_mismatches": int(mismatches),
+        "hot_shape_tuned": bool(hot_shape_tuned),
+        "post_latency_ok": bool(post_min <= pre_min * POST_TOL),
+        "pre_swap_decode_ms": round(pre_med * 1e3, 3),
+        "post_swap_decode_ms": round(post_med * 1e3, 3),
+        "pre_swap_floor_ms": round(pre_min * 1e3, 3),
+        "post_swap_floor_ms": round(post_min * 1e3, 3),
+        "retune_cycle_s": round(cycle_s, 3),
+        "steady_steps": {"pre": len(walls_pre) - WARMUP_STEPS,
+                         "post": len(walls_post) - WARMUP_STEPS},
+        "workload": {"arch": arch, "slots": slots, "max_new": max_new,
+                     "max_len": max_len, "budget": budget},
+    }
+    emit("retune/pre_swap", pre_med * 1e6,
+         f"epoch0 decode median ({metrics['steady_steps']['pre']} steps)")
+    emit("retune/post_swap", post_med * 1e6,
+         f"epoch{metrics['published_epoch']} decode median "
+         f"(swaps={swap_count} fresh={cycle['fresh']} "
+         f"mismatches={mismatches})")
+    emit("retune/cycle", cycle_s * 1e6,
+         f"1 cycle: {cycle['tasks']} tasks, {cycle['fresh']} fresh, "
+         f"hot_shape_tuned={hot_shape_tuned}")
+    out_dir = os.environ.get("REPRO_BENCH_JSON", "")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tracer.write(os.path.join(out_dir, "retune.trace.json"))
+    emit_json("retune", metrics)
+    assert mismatches == 0, "greedy outputs diverged across the swap"
+    assert swap_count >= 1, "engine never adopted the published epoch"
+    return metrics
+
+
+if __name__ == "__main__":
+    run()

@@ -17,6 +17,7 @@ from . import (
     bench_llm_ablation,
     bench_lowering,
     bench_platforms,
+    bench_retune,
     bench_sample_efficiency,
     bench_serving,
     bench_session,
@@ -47,6 +48,9 @@ TABLES = {
                                              # beyond-paper: routed proposer
                                              # pool vs best/worst single
                                              # member (compiler/proposers)
+    "retune": bench_retune.run,              # beyond-paper: serve→compile
+                                             # loop — live shape retune +
+                                             # hot epoch swap (serve/retune)
 }
 
 

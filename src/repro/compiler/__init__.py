@@ -11,14 +11,17 @@ One front door for search, tuning records, and deploy-time artifacts:
 The session owns one LLM, one oracle (with its caches), and one
 ``TuningRecords`` database for its lifetime, and compiles related shapes
 through a shared search context (cross-task trace seeding + budget
-reallocation).  Deploy-time consumers resolve an ``ArtifactSet`` at engine
-construction (``artifacts_for_config``) and thread it through ``cfg``
-instead of module globals.
+reallocation).  Deploy-time consumers bind an immutable ``ArtifactSet``
+epoch through ``ArtifactRegistry.bind(cfg, mesh=...)`` — the single
+binding entry point — and engines hot-swap to newly ``publish()``-ed
+epochs at step boundaries (``serve/retune.py`` closes that loop).
 
-Legacy entry points (``core.search.run_search``,
-``core.autotuner.KernelTuner``) are deprecation shims over this package.
+``artifacts_for_config`` / ``bind_artifacts`` /
+``ArchConfig.with_artifacts`` are thin one-release deprecation aliases
+over the registry.
 """
 from .artifacts import (
+    ArtifactRegistry,
     ArtifactSet,
     AttentionBlocks,
     CompiledArtifact,
@@ -27,6 +30,7 @@ from .artifacts import (
     bind_artifacts,
     blocks_from_record,
     default_records,
+    default_registry,
 )
 from .context import SeededProposer, SharedContext, TaskOutcome, adapt_history
 from .proposers import (
@@ -56,9 +60,11 @@ from .tasks import (
     gemm_tuning_workload,
     local_attention_dims,
     tasks_for_config,
+    tasks_for_shapes,
 )
 
 __all__ = [
+    "ArtifactRegistry",
     "ArtifactSet",
     "AttentionBlocks",
     "BudgetPolicy",
@@ -86,6 +92,7 @@ __all__ = [
     "blocks_from_record",
     "build_pool",
     "default_records",
+    "default_registry",
     "is_pool_spec",
     "parse_pool_spec",
     "gemm_task",
@@ -94,4 +101,5 @@ __all__ = [
     "migrate_json_cache",
     "record_key",
     "tasks_for_config",
+    "tasks_for_shapes",
 ]

@@ -4,17 +4,20 @@
 the extracted kernel block parameters, the persisted provenance record,
 and (on request) the lowered Pallas kernel itself.
 
-``ArtifactSet`` is the *resolution* object that replaces the old
-module-global plumbing (``models.layers.set_active_tp`` + a raw JSON
-dict): an engine resolves one at construction against its mesh's TP
-degree and threads it through ``cfg`` (``ArchConfig.with_artifacts``), so
-every traced attention launch reads its tuned blocks from an explicit,
-engine-owned object instead of whatever another engine last wrote into a
-global.
+``ArtifactSet`` is the *resolution* object: an immutable epoch snapshot
+of the record store at (platform, tp degree).  ``ArtifactRegistry``
+versions those epochs — ``bind(cfg, mesh=...)`` is the one engine-binding
+entry point, ``publish()``/``current()`` atomically swap in newly tuned
+epochs — so every traced attention launch reads its blocks from an
+explicit, engine-owned object, and a background retuner
+(``serve/retune.py``) can hand a *running* engine fresh kernels between
+decode steps without restart.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import warnings
 from typing import Optional
 
 from ..core.lowering import _band_extent, _quantize_block
@@ -135,7 +138,7 @@ class CompiledArtifact:
 
 
 # ---------------------------------------------------------------------------
-# deploy-time resolution
+# deploy-time resolution: immutable epochs + the registry that swaps them
 # ---------------------------------------------------------------------------
 
 _DEFAULT_RECORDS: Optional[TuningRecords] = None
@@ -154,24 +157,43 @@ def default_records() -> TuningRecords:
 
 
 class ArtifactSet:
-    """Tuned-block resolver bound to (record store, platform, tp degree).
+    """One immutable artifact *epoch*: a point-in-time tuned-block
+    resolver for (records snapshot, platform, tp degree).
 
-    Read-only: a miss returns kernel defaults, never launches a search.
-    Engines hold one per constructed model (``cfg.with_artifacts``), so
-    two engines serving differently-sharded models in one process resolve
-    against their *own* TP degree — the race the old ``set_active_tp``
-    module global could not express.
+    Frozen at construction — the resolver captures the record store's
+    contents when built, so a set threaded through an engine's ``cfg``
+    can never change underneath a traced kernel launch.  Newly tuned
+    records become visible only as a NEW epoch
+    (``ArtifactRegistry.publish()``), which engines adopt atomically at a
+    step boundary.  A miss resolves to kernel defaults, never a search.
     """
 
-    def __init__(self, records: Optional[TuningRecords] = None, *,
-                 tp: int = 1, platform: str = "tpu-v5e"):
-        self.records = records if records is not None else default_records()
+    __slots__ = ("records", "tp", "platform", "epoch", "_sealed")
+
+    def __init__(self, records=None, *,
+                 tp: int = 1, platform: str = "tpu-v5e", epoch: int = 0):
+        store = records if records is not None else default_records()
+        if isinstance(store, dict):
+            snap = dict(store)
+        else:
+            snap = {k: store.get(k) for k in store.keys()}
+        self.records = snap              # {record key: TuningRecord}
         self.tp = max(1, int(tp))
         self.platform = platform
+        self.epoch = int(epoch)
+        self._sealed = True
+
+    def __setattr__(self, name, value):
+        if getattr(self, "_sealed", False):
+            raise AttributeError(
+                f"ArtifactSet is an immutable epoch; cannot set {name!r} "
+                f"(publish a new epoch through ArtifactRegistry instead)"
+            )
+        object.__setattr__(self, name, value)
 
     def __repr__(self):
         return (f"ArtifactSet(platform={self.platform!r}, tp={self.tp}, "
-                f"records={len(self.records)})")
+                f"epoch={self.epoch}, records={len(self.records)})")
 
     # -- resolution ---------------------------------------------------------
     def attention_record(self, cfg, seq_q: int, seq_kv: int) \
@@ -199,12 +221,179 @@ class ArtifactSet:
         return b.bm, b.bn, b.bk
 
 
+class ArtifactRegistry:
+    """Versioned artifact epochs over one record store — THE engine
+    binding surface, and the publication side of the serve→compile loop.
+
+      * ``bind(cfg, mesh=..., tp=...)`` — the one documented engine entry
+        point (replaces the deprecated ``bind_artifacts`` /
+        ``artifacts_for_config`` free functions): resolves the current
+        epoch at the caller's TP degree, pins it, and returns
+        ``(bound_cfg, tp)``.
+      * ``publish()`` — snapshot the record store into a new immutable
+        ``ArtifactSet`` epoch and atomically make it ``current()``; a
+        background retuner (``serve/retune.py``) calls this after a
+        ``CompilerSession.compile`` cycle, and engines hot-swap to the
+        new epoch between decode steps without restart.
+      * ``pin``/``unpin`` — epoch refcounts: a pinned epoch stays
+        resolvable (``get``) across later publishes, so an engine
+        mid-step keeps its bound epoch alive until its own step boundary;
+        at refcount zero a superseded epoch is dropped.
+
+    All state transitions hold one lock, so ``publish`` vs
+    ``current``/``acquire`` is atomic and no reader ever observes a
+    half-swapped epoch.
+    """
+
+    def __init__(self, records: Optional[TuningRecords] = None, *,
+                 platform: str = "tpu-v5e"):
+        self.records = records if records is not None else default_records()
+        self.platform = platform
+        self._lock = threading.Lock()
+        self._epoch = 0
+        self._snapshots: dict[int, dict] = {0: self._snap()}
+        self._pins: dict[int, int] = {0: 0}
+        self._sets: dict[tuple[int, int], ArtifactSet] = {}
+
+    def _snap(self) -> dict:
+        return {k: self.records.get(k) for k in self.records.keys()}
+
+    def __repr__(self):
+        return (f"ArtifactRegistry(platform={self.platform!r}, "
+                f"epoch={self._epoch}, live_epochs={len(self._snapshots)})")
+
+    @property
+    def epoch(self) -> int:
+        """The current (latest-published) epoch number."""
+        return self._epoch
+
+    # -- epoch lifecycle ----------------------------------------------------
+    def publish(self) -> int:
+        """Snapshot the record store as the next epoch and atomically make
+        it current.  Returns the new epoch number.  Superseded epochs
+        survive exactly as long as someone holds a pin on them."""
+        with self._lock:
+            prev = self._epoch
+            self._epoch += 1
+            self._snapshots[self._epoch] = self._snap()
+            self._pins.setdefault(self._epoch, 0)
+            self._gc(prev)
+            return self._epoch
+
+    def current(self, *, tp: int = 1) -> ArtifactSet:
+        """The latest published epoch's resolver at ``tp``."""
+        with self._lock:
+            return self._set(self._epoch, tp)
+
+    def get(self, epoch: int, *, tp: int = 1) -> ArtifactSet:
+        """A specific epoch's resolver; raises ``KeyError`` once the epoch
+        has been superseded and fully unpinned."""
+        with self._lock:
+            if epoch not in self._snapshots:
+                raise KeyError(
+                    f"artifact epoch {epoch} has been released "
+                    f"(current is {self._epoch})"
+                )
+            return self._set(epoch, tp)
+
+    def acquire(self, *, tp: int = 1) -> ArtifactSet:
+        """Atomically resolve AND pin the current epoch (the engine-swap
+        primitive: pin-new-then-unpin-old can never lose the epoch to a
+        concurrent publish)."""
+        with self._lock:
+            art = self._set(self._epoch, tp)
+            self._pins[art.epoch] = self._pins.get(art.epoch, 0) + 1
+            return art
+
+    def pin(self, epoch: int) -> int:
+        """Increment an epoch's refcount; returns the new count."""
+        with self._lock:
+            if epoch not in self._snapshots:
+                raise KeyError(f"artifact epoch {epoch} has been released")
+            self._pins[epoch] = self._pins.get(epoch, 0) + 1
+            return self._pins[epoch]
+
+    def unpin(self, epoch: int) -> int:
+        """Decrement an epoch's refcount; at zero a superseded epoch (and
+        its cached resolvers) is dropped.  Returns the new count."""
+        with self._lock:
+            n = self._pins.get(epoch, 0)
+            if n <= 0:
+                raise ValueError(f"artifact epoch {epoch} is not pinned")
+            self._pins[epoch] = n - 1
+            self._gc(epoch)
+            return self._pins.get(epoch, 0)
+
+    def pins(self, epoch: int) -> int:
+        """Current refcount for an epoch (0 for unknown/released)."""
+        with self._lock:
+            return self._pins.get(epoch, 0)
+
+    def _gc(self, epoch: int) -> None:
+        # lock held: a superseded epoch with no pins is unreachable by
+        # contract (engines re-resolve through current/acquire)
+        if epoch != self._epoch and self._pins.get(epoch, 0) <= 0:
+            self._snapshots.pop(epoch, None)
+            self._pins.pop(epoch, None)
+            for key in [k for k in self._sets if k[0] == epoch]:
+                del self._sets[key]
+
+    def _set(self, epoch: int, tp: int) -> ArtifactSet:
+        # lock held
+        tp = max(1, int(tp))
+        key = (epoch, tp)
+        art = self._sets.get(key)
+        if art is None:
+            art = self._sets[key] = ArtifactSet(
+                self._snapshots[epoch], tp=tp, platform=self.platform,
+                epoch=epoch,
+            )
+        return art
+
+    # -- engine binding -----------------------------------------------------
+    def bind(self, cfg, *, mesh=None, tp: int = 1) -> tuple:
+        """Bind the current epoch onto ``cfg``: ``(bound_cfg, block_tp)``.
+
+        The single engine-binding entry point.  The tp degree comes from
+        the mesh when one is given (matching ``dist.sharding``'s axis
+        contract), else from ``tp``.  An already-bound cfg passes through
+        untouched, so callers constructing engines with a pre-resolved
+        artifact set keep it.  The bound epoch is pinned: it stays
+        resolvable for this engine until it unpins on its next swap.
+        """
+        if mesh is not None:
+            from ..dist import sharding as shd
+
+            tp = shd.tp_degree(mesh)
+        if getattr(cfg, "artifacts", None) is None:
+            cfg = dataclasses.replace(cfg, artifacts=self.acquire(tp=tp))
+        return cfg, tp
+
+
+_DEFAULT_REGISTRY: Optional[ArtifactRegistry] = None
+
+
+def default_registry() -> ArtifactRegistry:
+    """Process-wide registry over ``default_records()`` — what the
+    deprecated free-function binding path resolves against."""
+    global _DEFAULT_REGISTRY
+    if _DEFAULT_REGISTRY is None:
+        _DEFAULT_REGISTRY = ArtifactRegistry(default_records())
+    return _DEFAULT_REGISTRY
+
+
 def artifacts_for_config(
     cfg, *, tp: int = 1, records: Optional[TuningRecords] = None,
     platform: str = "tpu-v5e",
 ) -> ArtifactSet:
-    """The engine-construction front door: resolve the artifact set an
-    engine threads through ``cfg`` (``cfg.with_artifacts(...)``)."""
+    """.. deprecated:: resolve through ``ArtifactRegistry`` instead
+    (``registry.current(tp=...)`` or ``registry.bind(cfg, ...)``) so the
+    set is a versioned epoch the engine can hot-swap."""
+    warnings.warn(
+        "artifacts_for_config is deprecated; use "
+        "ArtifactRegistry.current(tp=...) / ArtifactRegistry.bind(cfg, ...)",
+        DeprecationWarning, stacklevel=2,
+    )
     return ArtifactSet(records, tp=tp, platform=platform)
 
 
@@ -212,19 +401,17 @@ def bind_artifacts(
     cfg, *, mesh=None, tp: int = 1,
     records: Optional[TuningRecords] = None, platform: str = "tpu-v5e",
 ) -> tuple:
-    """Engine-side binding: ``(bound_cfg, block_tp)``.
-
-    The tp degree comes from the mesh when one is given (matching
-    ``dist.sharding``'s axis contract), else from ``tp``; an already-bound
-    cfg passes through untouched, so callers constructing engines with a
-    pre-resolved artifact set keep it."""
-    if mesh is not None:
-        from ..dist import sharding as shd
-
-        tp = shd.tp_degree(mesh)
-    if getattr(cfg, "artifacts", None) is None:
-        cfg = cfg.with_artifacts(
-            artifacts_for_config(cfg, tp=tp, records=records,
-                                 platform=platform)
-        )
-    return cfg, tp
+    """.. deprecated:: thin alias over ``ArtifactRegistry.bind`` (one
+    release): same ``(bound_cfg, block_tp)`` contract, but the bound set
+    is a registry epoch — new callers should hold the registry so they
+    can also ``publish()``/hot-swap."""
+    warnings.warn(
+        "bind_artifacts is deprecated; use ArtifactRegistry.bind(cfg, "
+        "mesh=..., tp=...)",
+        DeprecationWarning, stacklevel=2,
+    )
+    if records is None and platform == "tpu-v5e":
+        reg = default_registry()
+    else:
+        reg = ArtifactRegistry(records, platform=platform)
+    return reg.bind(cfg, mesh=mesh, tp=tp)

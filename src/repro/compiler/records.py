@@ -135,7 +135,7 @@ class TuningRecord:
         return cls(**{k: v for k, v in d.items() if k in known})
 
     def legacy_entry(self) -> dict:
-        """The v0 JSON-cache entry shape (`KernelTuner._cache` values)."""
+        """The v0 JSON-cache entry shape (retired raw-JSON tuner cache)."""
         entry = dict(self.params, speedup=round(self.speedup, 3),
                      samples=self.samples, method=self.method)
         if self.measured_latency_s is not None:

@@ -17,9 +17,10 @@ sample budget to stragglers, and every result is persisted as a
 provenance-carrying record plus returned as a ``CompiledArtifact`` the
 deploy side consumes.
 
-``session.search(workload, ...)`` is the single-search primitive; the
-legacy entry points (``core.search.run_search``, ``core.autotuner
-.KernelTuner``) are thin deprecation shims over these two methods.
+``session.search(workload, ...)`` is the single-search primitive
+(``core.search._one_shot_search`` wraps it for one-off comparisons); the
+retired legacy entry points (``run_search``, ``KernelTuner``) were thin
+shims over these two methods and are gone.
 """
 from __future__ import annotations
 
@@ -202,7 +203,7 @@ class CompilerSession:
         self.seeds_played = 0
 
     # ------------------------------------------------------------------
-    # the single-search primitive (run_search-compatible)
+    # the single-search primitive
     # ------------------------------------------------------------------
     def search(
         self,
@@ -221,8 +222,8 @@ class CompilerSession:
         """Run one optimization strategy on one workload for ``budget``
         samples, through the session's LLM and oracle.
 
-        Without ``donor``/``patience`` this reproduces the legacy
-        ``core.search.run_search`` exactly (the shim delegates here); a
+        Without ``donor``/``patience`` this is the one-shot search
+        primitive (``core.search._one_shot_search`` delegates here); a
         donor seeds the first expansions with the sibling's adapted
         traces, and ``patience`` enables converged-early termination.
         """

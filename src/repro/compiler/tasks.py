@@ -163,3 +163,42 @@ def tasks_for_config(cfg, seq: int, tp: int = 1) -> list[Task]:
                 label=f"{cfg.name} moe expert",
             ))
     return tasks
+
+
+def tasks_for_shapes(
+    cfg, *, attention=(), gemm_m=(), tp: int = 1,
+) -> list[Task]:
+    """Tasks for OBSERVED hot shapes (the serve→compile loop's input).
+
+    ``attention`` is an iterable of ``((seq_q, seq_kv), weight)`` pairs
+    and ``gemm_m`` of ``(m, weight)`` pairs — plain data, exactly what
+    ``serve.metrics.ShapeStats.top_k`` returns, so the serving layer
+    never imports the compiler (and vice versa).  Head counts / model
+    dims come from ``cfg`` at the given TP degree.  Priorities are
+    rank-ordered by weight: the hottest observed shape compiles first
+    and seeds its family's colder siblings.
+    """
+    hq, hkv = local_attention_dims(cfg, tp)
+    ranked = sorted(
+        [("attention", tuple(int(x) for x in s), float(w))
+         for s, w in attention]
+        + [("gemm", (int(m),), float(w)) for m, w in gemm_m],
+        key=lambda t: (-t[2], t[0], t[1]),
+    )
+    tasks: list[Task] = []
+    for rank, (kind, shape, weight) in enumerate(ranked):
+        prio = 100 - rank
+        if kind == "attention":
+            sq, skv = shape if len(shape) == 2 else (shape[0], shape[0])
+            tasks.append(attention_task(
+                hq, sq, skv, cfg.hd, kv_heads=hkv, priority=prio,
+                label=f"{cfg.name} hot attention {sq}x{skv} "
+                      f"(w={weight:.3g})",
+            ))
+        else:
+            tasks.append(gemm_task(
+                shape[0], cfg.d_ff, cfg.d_model, epilogue="swiglu",
+                priority=prio,
+                label=f"{cfg.name} hot mlp m={shape[0]} (w={weight:.3g})",
+            ))
+    return tasks

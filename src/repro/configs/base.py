@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional
 
 import jax
@@ -69,20 +70,26 @@ class ArchConfig:
     tie_embeddings: bool = False
     # provenance
     source: str = ""
-    # Deploy-time tuned-kernel resolution (repro.compiler.ArtifactSet),
-    # bound by the engine that owns the mesh via ``with_artifacts`` and
-    # read by traced attention launches (models/layers.attention_block).
-    # Excluded from eq/hash: two configs describe the same architecture
-    # regardless of which tuning artifacts are bound.
+    # Deploy-time tuned-kernel resolution (repro.compiler.ArtifactSet
+    # epoch), bound by the engine that owns the mesh via
+    # ``repro.compiler.ArtifactRegistry.bind`` and read by traced
+    # attention launches (models/layers.attention_block).  Excluded from
+    # eq/hash: two configs describe the same architecture regardless of
+    # which tuning artifacts are bound.
     artifacts: Optional[object] = dataclasses.field(
         default=None, compare=False, repr=False,
     )
 
     def with_artifacts(self, artifacts) -> "ArchConfig":
-        """Bind a compiled-artifact resolver; the bound config is what an
-        engine threads through its traces so kernel launches resolve
-        tuned blocks from an engine-owned object instead of module
-        globals (the old ``layers.set_active_tp`` plumbing)."""
+        """.. deprecated:: bind through
+        ``repro.compiler.ArtifactRegistry.bind(cfg, mesh=...)`` — the one
+        engine-binding entry point, whose epochs engines can hot-swap.
+        Kept one release as a thin alias over ``dataclasses.replace``."""
+        warnings.warn(
+            "ArchConfig.with_artifacts is deprecated; bind through "
+            "repro.compiler.ArtifactRegistry.bind(cfg, mesh=...)",
+            DeprecationWarning, stacklevel=2,
+        )
         return dataclasses.replace(self, artifacts=artifacts)
 
     # -- derived -----------------------------------------------------------

@@ -1,42 +1,38 @@
-"""Deprecated kernel-tuning entry point — shim over ``repro.compiler``.
+"""Compatibility re-exports for the retired kernel-tuning entry point.
 
 This module used to own the whole deploy-time tuning flow (LLM-guided MCTS
-per workload + a raw JSON cache).  That flow now lives behind the session
-API: ``repro.compiler.CompilerSession`` owns the LLM/oracle/record-store
+per workload + a raw JSON cache).  That flow lives behind the session API
+now: ``repro.compiler.CompilerSession`` owns the LLM/oracle/record-store
 for its lifetime, compiles related shapes through a shared search context,
 and persists schema-versioned, provenance-carrying records
-(``repro/compiler/records.py``).
+(``repro/compiler/records.py``); serving engines resolve the results
+through ``repro.compiler.ArtifactRegistry`` epochs.
 
-Everything importable from here keeps working:
+The class that lived here (``KernelTuner``) and its free-function sibling
+(``core.search.run_search``) spent one release as deprecation shims and
+are gone.  What remains importable from here are the block/workload
+helpers old tests and tools reference:
 
-* ``AttentionBlocks`` / ``GemmBlocks`` / ``local_attention_dims`` /
-  ``attention_tuning_workload`` / ``gemm_tuning_workload`` are re-exported
-  from ``repro.compiler``.
-* ``KernelTuner`` is a thin wrapper that builds a single-task
-  ``CompilerSession`` per call, configured to reproduce the historical
-  behavior exactly (no shared context, no early stop, seed 0).  Its
-  ``cache_path`` JSON file is maintained as a *mirror* of the JSONL record
-  store for old readers; a corrupt/truncated cache file is quarantined
-  with a warning instead of crashing the constructor.
-
-New code should use ``CompilerSession`` directly.
+* ``AttentionBlocks`` / ``GemmBlocks`` — block-parameter bundles
+  (``compiler/artifacts.py``);
+* ``local_attention_dims`` / ``attention_tuning_workload`` /
+  ``gemm_tuning_workload`` — tp-local shape + workload builders
+  (``compiler/tasks.py``);
+* ``_quantize_block`` / ``_band_extent`` — lowering block extraction
+  (``core/lowering.py``).
 """
 from __future__ import annotations
 
-import os
-import warnings
-from typing import Optional
-
-# Block extraction lives with the artifact layer now (compiler/artifacts
-# .py); the lowering helpers stay importable here for old tests.
+# Block extraction lives with the artifact layer (compiler/artifacts.py);
+# the lowering helpers stay importable here for old tests.
 from ..compiler.artifacts import AttentionBlocks, GemmBlocks
-from ..compiler.records import (
+from ..compiler.records import (  # noqa: F401 (compat)
     LEGACY_JSON_PATH,
     TuningRecords,
     record_key,
 )
-from ..compiler.session import BudgetPolicy, CompilerSession
-from ..compiler.tasks import (
+from ..compiler.session import BudgetPolicy, CompilerSession  # noqa: F401
+from ..compiler.tasks import (  # noqa: F401 (compat)
     attention_task,
     attention_tuning_workload,
     gemm_task,
@@ -46,7 +42,7 @@ from ..compiler.tasks import (
 from .cost_model import HardwareOracle, get_platform  # noqa: F401 (compat)
 from .lowering import LoweringError, _band_extent, _quantize_block  # noqa: F401
 from .schedule import Schedule  # noqa: F401 (compat)
-from .search import SearchResult, run_search  # noqa: F401 (compat)
+from .search import SearchResult  # noqa: F401 (compat)
 from .workloads import (  # noqa: F401 (compat)
     Workload,
     attention_workload,
@@ -55,118 +51,13 @@ from .workloads import (  # noqa: F401 (compat)
 
 DEFAULT_CACHE_PATH = LEGACY_JSON_PATH
 
-
-def _records_for(cache_path: Optional[str]) -> TuningRecords:
-    """Map a legacy ``cache_path`` onto a JSONL record store.
-
-    ``<stem>.json`` stores records in ``<stem>.jsonl`` next to it and
-    treats the JSON file as the v0 input to migrate (quarantining it with
-    a warning when corrupt).  The module-default path resolves to the
-    process-wide default store so engines and ``kernels.ops`` lookups see
-    what a default-constructed tuner persists.
-    """
-    if cache_path is None:
-        return TuningRecords(None)
-    if os.path.abspath(cache_path) == os.path.abspath(DEFAULT_CACHE_PATH):
-        from ..compiler.artifacts import default_records
-
-        return default_records()
-    if cache_path.endswith(".json"):
-        return TuningRecords(cache_path[:-5] + ".jsonl",
-                             legacy_json=cache_path)
-    return TuningRecords(cache_path)
-
-
-class KernelTuner:
-    """Deprecated: thin shim over ``repro.compiler.CompilerSession``.
-
-    One tuner = one session with the historical single-task semantics
-    (per-task ``budget``, no shared context, no budget reallocation).
-    ``measure=True`` still re-ranks winners by real timed execution before
-    persisting; the persisted entries now carry schema-versioned
-    provenance in the JSONL store, with ``cache_path`` maintained as a
-    legacy JSON mirror.
-    """
-
-    def __init__(
-        self,
-        platform: str = "tpu-v5e",
-        method: str = "llm-mcts",
-        budget: int = 64,
-        cache_path: Optional[str] = DEFAULT_CACHE_PATH,
-        llm: str = "gpt-4o-mini",
-        oracle: str = "analytical",
-        measure: bool = False,
-        rerank_top: int = 3,
-        measure_repeats: int = 3,
-    ):
-        warnings.warn(
-            "KernelTuner is deprecated; hold a repro.compiler."
-            "CompilerSession and call session.compile instead",
-            DeprecationWarning, stacklevel=2,
-        )
-        self.platform = platform
-        self.method = method
-        self.budget = budget
-        self.llm = llm
-        self.cache_path = cache_path
-        self.oracle = oracle
-        self.measure = measure
-        self.rerank_top = rerank_top
-        self.measure_repeats = measure_repeats
-        self.session = CompilerSession(
-            target=platform,
-            oracle=oracle,
-            proposer=llm,
-            method=method,
-            budget_policy=BudgetPolicy(
-                per_task=budget, early_stop=False, reallocate=False,
-            ),
-            records=_records_for(cache_path),
-            shared_context=False,
-            measure=measure,
-            rerank_top=rerank_top,
-            measure_repeats=measure_repeats,
-            seed=0,
-        )
-
-    @property
-    def _cache(self) -> dict:
-        """Legacy ``{key: entry}`` view of the record store."""
-        return self.session.records.legacy_view()
-
-    def _key(self, w: Workload) -> str:
-        return record_key(self.platform, w)
-
-    def _mirror(self) -> None:
-        if self.cache_path and self.cache_path.endswith(".json"):
-            self.session.records.export_json(self.cache_path)
-
-    def tune_attention(
-        self, heads, seq_q, seq_kv, head_dim, kv_heads=None
-    ) -> AttentionBlocks:
-        (art,) = self.session.compile([
-            attention_task(heads, seq_q, seq_kv, head_dim, kv_heads=kv_heads)
-        ])
-        if not art.cache_hit:
-            self._mirror()
-        return art.blocks
-
-    def lookup_attention(
-        self, heads, seq_q, seq_kv, head_dim, kv_heads=None
-    ) -> Optional[AttentionBlocks]:
-        """Read-only cache probe (no search on miss) — the model-build-time
-        path ``kernels.ops.tuned_attention_blocks`` uses."""
-        w = attention_tuning_workload(
-            heads, seq_q, seq_kv, head_dim, kv_heads=kv_heads
-        )
-        rec = self.session.records.get(self._key(w))
-        return AttentionBlocks.from_params(rec.params) if rec else None
-
-    def tune_gemm(self, m, n, k, epilogue="none") -> GemmBlocks:
-        (art,) = self.session.compile([
-            gemm_task(m, n, k, epilogue=epilogue)
-        ])
-        if not art.cache_hit:
-            self._mirror()
-        return art.blocks
+__all__ = [
+    "AttentionBlocks",
+    "BudgetPolicy",
+    "CompilerSession",
+    "DEFAULT_CACHE_PATH",
+    "GemmBlocks",
+    "attention_tuning_workload",
+    "gemm_tuning_workload",
+    "local_attention_dims",
+]

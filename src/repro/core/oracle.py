@@ -20,7 +20,7 @@ method — ``measure(schedule) -> seconds``.  This module is the seam:
   (``rollout_measure``), never consuming hardware time.
 
 ``make_oracle`` resolves the ``oracle="analytical"|"measured"|"hybrid"``
-knob threaded through ``run_search`` / ``KernelTuner`` / ``launch.tune``.
+knob threaded through ``CompilerSession`` / ``launch.tune``.
 """
 from __future__ import annotations
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import statistics
-import warnings
 from typing import Optional, Sequence
 
 from .cost_model import HardwareOracle, Platform
@@ -74,46 +73,6 @@ def _oracle_name(oracle) -> str:
     return type(oracle).__name__
 
 
-def run_search(
-    workload,
-    platform: str | Platform = "core-i9",
-    method: str = "llm-mcts",
-    budget: int = 200,
-    seed: int = 0,
-    llm: str = "gpt-4o-mini",
-    trace_depth: int = 2,
-    branching: int = 2,
-    oracle=None,
-    **mcts_kwargs,
-) -> SearchResult:
-    """Run one optimization strategy on one workload for `budget` samples.
-
-    .. deprecated:: thin shim over ``repro.compiler.CompilerSession`` —
-       each call builds a one-shot session (fresh LLM, fresh oracle, no
-       shared context), which reproduces the historical behavior exactly.
-       New callers should hold a ``CompilerSession`` and use
-       ``session.search`` / ``session.compile`` so oracle caches and
-       cross-task context persist across searches.
-
-    ``oracle`` selects the objective backend: ``"analytical"`` (default,
-    the machine model), ``"measured"`` (every node reward is a timed
-    kernel execution via core/lowering.py), ``"hybrid"`` (measured node
-    rewards, analytical rollouts — the paper's cost split),
-    ``"surrogate"`` (record-trained pre-screening, escalating top-k to
-    measured), or any ``core.oracle.Oracle`` instance.
-    """
-    warnings.warn(
-        "run_search is deprecated; hold a repro.compiler.CompilerSession "
-        "and call session.search/session.compile instead",
-        DeprecationWarning, stacklevel=2,
-    )
-    return _one_shot_search(
-        workload, platform=platform, method=method, budget=budget,
-        seed=seed, llm=llm, trace_depth=trace_depth, branching=branching,
-        oracle=oracle, **mcts_kwargs,
-    )
-
-
 def _one_shot_search(
     workload,
     platform: str | Platform = "core-i9",
@@ -126,7 +85,11 @@ def _one_shot_search(
     oracle=None,
     **mcts_kwargs,
 ) -> SearchResult:
-    """One-shot session search (the body ``run_search`` shims over)."""
+    """One-shot session search: a fresh single-use ``CompilerSession``
+    (fresh LLM, fresh oracle, no shared context) per call — the
+    comparison-harness primitive.  Long-lived callers should hold a
+    ``repro.compiler.CompilerSession`` so oracle caches and cross-task
+    context persist across searches."""
     from ..compiler.session import CompilerSession
 
     session = CompilerSession(

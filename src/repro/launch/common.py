@@ -1,0 +1,57 @@
+"""Shared CLI plumbing for the launchers (``tune`` / ``serve``).
+
+Both launchers expose ``main(argv)`` and the same flag names with the
+same help text for the surfaces they share — the record store
+(``--records``), the cost-model platform (``--platform``), and the
+timeline writer (``--trace-out``) — so muscle memory and scripts
+transfer between them.  The builders here are the single source of
+those flags.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional
+
+from ..obs import Tracer
+
+
+def add_records_flag(ap: argparse.ArgumentParser) -> None:
+    from ..compiler.records import DEFAULT_RECORDS_PATH
+
+    ap.add_argument("--records", default=None,
+                    help=f"tuning-record store path (versioned JSONL; "
+                         f"default {DEFAULT_RECORDS_PATH})")
+
+
+def add_platform_flag(ap: argparse.ArgumentParser,
+                      default: str = "tpu-v5e") -> None:
+    ap.add_argument("--platform", default=default,
+                    help=f"cost-model platform the records are keyed "
+                         f"under (core/cost_model.py; default {default})")
+
+
+def add_trace_flag(ap: argparse.ArgumentParser, what: str) -> None:
+    ap.add_argument("--trace-out", default="",
+                    help=f"write the {what} timeline here (.json = "
+                         f"Chrome trace-event format for "
+                         f"chrome://tracing / ui.perfetto.dev, "
+                         f".jsonl = raw events)")
+
+
+def resolve_records(args):
+    """``--records`` path -> TuningRecords (default: process store)."""
+    from ..compiler import TuningRecords, default_records
+
+    return TuningRecords(args.records) if args.records \
+        else default_records()
+
+
+def make_tracer(args) -> Optional[Tracer]:
+    return Tracer() if args.trace_out else None
+
+
+def finish_trace(tracer: Optional[Tracer], args, indent: str = "") -> None:
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        print(f"{indent}trace: {len(tracer.events())} events -> "
+              f"{args.trace_out}")

@@ -14,6 +14,14 @@ prefill buckets / chunk lanes / decode dispatches, KV page events; open
 at ``chrome://tracing`` or https://ui.perfetto.dev).  A ``.jsonl``
 suffix writes raw events instead (EXPERIMENTS.md §Observability).
 
+``--retune`` closes the serve→compile loop while the run is live: a
+``serve.retune.BackgroundRetuner`` thread reads the engine's observed
+shape distribution every ``--retune-interval`` seconds, compiles the hot
+shapes through a ``CompilerSession`` (``--retune-budget`` samples per
+task, against ``--records`` / ``--platform``), and publishes new
+artifact epochs that the engine hot-swaps at step boundaries — no
+restart, greedy outputs bit-identical across swaps.
+
 ``python -m repro.launch.serve --arch tinyllama-1.1b --smoke --requests 8``
 """
 from __future__ import annotations
@@ -25,8 +33,15 @@ import numpy as np
 
 from ..configs.base import get_config
 from ..models import model as M
-from ..obs import Tracer
-from ..serve import PagedServeEngine, Request, ServeEngine
+from ..serve import BackgroundRetuner, PagedServeEngine, Request, ServeEngine
+from .common import (
+    add_platform_flag,
+    add_records_flag,
+    add_trace_flag,
+    finish_trace,
+    make_tracer,
+    resolve_records,
+)
 
 
 def main(argv=None):
@@ -69,19 +84,31 @@ def main(argv=None):
                          "speculative, reusing the target params)")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="draft tokens proposed per speculative round")
-    ap.add_argument("--trace-out", default="",
-                    help="write the engine timeline here: .json = Chrome "
-                         "trace-event format (chrome://tracing), "
-                         ".jsonl = raw events")
+    ap.add_argument("--retune", action="store_true",
+                    help="background shape-aware retuning: recompile the "
+                         "hottest observed dispatch shapes off-thread and "
+                         "hot-swap the published artifact epochs at step "
+                         "boundaries (serve/retune.py)")
+    ap.add_argument("--retune-interval", type=float, default=2.0,
+                    help="seconds between background retune cycles")
+    ap.add_argument("--retune-budget", type=int, default=32,
+                    help="search samples per retuned task")
+    add_records_flag(ap)
+    add_platform_flag(ap)
+    add_trace_flag(ap, "engine")
     args = ap.parse_args(argv)
 
-    tracer = Tracer() if args.trace_out else None
+    tracer = make_tracer(args)
     cfg = get_config(args.arch, smoke=args.smoke)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     draft_cfg = draft_params = None
     if args.speculative and args.draft_arch:
         draft_cfg = get_config(args.draft_arch, smoke=args.smoke)
         draft_params = M.init_params(draft_cfg, jax.random.PRNGKey(1))
+    from ..compiler import ArtifactRegistry
+
+    registry = ArtifactRegistry(resolve_records(args),
+                                platform=args.platform)
     if args.engine == "paged":
         engine = PagedServeEngine(
             cfg, params, slots=args.slots, max_len=args.max_len,
@@ -91,13 +118,18 @@ def main(argv=None):
             ttft_slo_s=args.ttft_slo,
             speculative=args.speculative, draft_cfg=draft_cfg,
             draft_params=draft_params, draft_len=args.draft_len,
-            tracer=tracer,
+            tracer=tracer, registry=registry,
         )
     else:
         engine = ServeEngine(
             cfg, params, slots=args.slots, max_len=args.max_len,
-            tracer=tracer,
+            tracer=tracer, registry=registry,
         )
+    retuner = None
+    if args.retune:
+        retuner = BackgroundRetuner(engine, budget=args.retune_budget,
+                                    tracer=tracer)
+        retuner.start(args.retune_interval)
     rng = np.random.RandomState(0)
     for uid in range(args.requests):
         plen = args.prompt_len + int(rng.randint(-4, 5))
@@ -106,6 +138,8 @@ def main(argv=None):
             max_new_tokens=args.max_new,
         ))
     done = engine.run()
+    if retuner is not None:
+        retuner.stop()
     s = engine.metrics.summary()
     print(f"served {s['requests']}/{len(done)} requests, "
           f"{s['generated_tokens']} tokens in {s['wall_s']:.2f}s "
@@ -129,10 +163,13 @@ def main(argv=None):
               f"tokens/target-call {s['tokens_per_target_call']:.2f}  "
               f"verify steps {s['spec_steps']}  "
               f"draft calls {s['draft_calls']}")
-    if tracer is not None:
-        tracer.write(args.trace_out)
-        print(f"  trace: {len(tracer.events())} events -> "
-              f"{args.trace_out}")
+    if retuner is not None:
+        print(f"  retune: {retuner.cycles} cycles, "
+              f"epochs published {retuner.published_epochs}, "
+              f"engine swaps {s['artifact_swaps']} "
+              f"(now at epoch {engine._artifact_epoch}, "
+              f"{len(registry.records)} records)")
+    finish_trace(tracer, args, indent="  ")
 
 
 if __name__ == "__main__":

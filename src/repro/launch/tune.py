@@ -24,17 +24,22 @@ import dataclasses
 from ..compiler import (
     BudgetPolicy,
     CompilerSession,
-    TuningRecords,
     attention_task,
-    default_records,
     gemm_task,
     local_attention_dims,
     migrate_json_cache,
     tasks_for_config,
 )
-from ..compiler.records import DEFAULT_RECORDS_PATH, LEGACY_JSON_PATH
+from ..compiler.records import LEGACY_JSON_PATH
 from ..configs.base import get_config
-from ..obs import Tracer
+from .common import (
+    add_platform_flag,
+    add_records_flag,
+    add_trace_flag,
+    finish_trace,
+    make_tracer,
+    resolve_records,
+)
 
 
 def _parse_seqs(args) -> list[int]:
@@ -171,22 +176,16 @@ def main(argv=None):
                     help="cross-task shared search context (trace seeding "
                          "+ budget reallocation; --no-shared isolates "
                          "every task)")
-    ap.add_argument("--records", default=None,
-                    help=f"record-store path (default "
-                         f"{DEFAULT_RECORDS_PATH})")
+    add_records_flag(ap)
+    add_platform_flag(ap)
     ap.add_argument("--migrate-cache", nargs="?", const=LEGACY_JSON_PATH,
                     default=None, metavar="JSON_PATH",
                     help="one-shot migration of a v0 JSON tuning cache "
                          "into the versioned JSONL store, then exit")
-    ap.add_argument("--trace-out", default="",
-                    help="write the session timeline here: one span per "
-                         "compiled task / LLM proposal / oracle "
-                         "measurement (.json = Chrome trace-event format, "
-                         ".jsonl = raw events)")
+    add_trace_flag(ap, "session")
     args = ap.parse_args(argv)
 
-    records = TuningRecords(args.records) if args.records \
-        else default_records()
+    records = resolve_records(args)
 
     if args.migrate_cache is not None:
         n = migrate_json_cache(args.migrate_cache, records)
@@ -200,9 +199,9 @@ def main(argv=None):
     seqs = _parse_seqs(args)
     tasks = _tasks(cfg, seqs, args.tp, args.all_kernels)
 
-    tracer = Tracer() if args.trace_out else None
+    tracer = make_tracer(args)
     session = CompilerSession(
-        target="tpu-v5e",
+        target=args.platform,
         oracle=args.oracle,
         proposer=_proposer_spec(args),
         method=args.method,
@@ -236,9 +235,7 @@ def main(argv=None):
               f"{sp['proposals']} proposals screened, "
               f"{sp['escalations']} escalated to compile-and-time")
     print(f"records: {records.path} ({len(records)} entries)")
-    if tracer is not None:
-        tracer.write(args.trace_out)
-        print(f"trace: {len(tracer.events())} events -> {args.trace_out}")
+    finish_trace(tracer, args)
     return 0
 
 

@@ -18,31 +18,12 @@ import jax.numpy as jnp
 
 from ..kernels import ops
 
-# ---------------------------------------------------------------------------
-# active tensor-parallel degree — DEPRECATED shim
-# ---------------------------------------------------------------------------
-
-# Tuned-block resolution is artifact-based now: engines resolve a
-# ``repro.compiler.ArtifactSet`` at construction (bound to their mesh's tp
-# degree) and thread it through ``cfg`` (``ArchConfig.with_artifacts``),
-# so concurrent engines with different sharding no longer race on a
-# module global.  This shim remains only for legacy callers that trace a
-# bare model without an engine; ``attention_block`` consults it solely
-# when ``cfg`` carries no artifact set.
-_ACTIVE_TP = [1]
-
-
-def set_active_tp(tp: int) -> None:
-    """DEPRECATED: register a process-global tp degree for tuned-block
-    lookups.  Superseded by ``cfg.with_artifacts(artifacts_for_config(
-    cfg, tp=...))`` — an explicit, engine-owned resolver.  Only consulted
-    when the traced ``cfg`` has no artifact set bound."""
-    _ACTIVE_TP[0] = max(1, int(tp))
-
-
-def active_tp() -> int:
-    return _ACTIVE_TP[0]
-
+# Tuned-block resolution is artifact-based: engines bind an immutable
+# ``repro.compiler.ArtifactSet`` epoch at construction (tp-aware, via
+# ``ArtifactRegistry.bind``) and thread it through ``cfg``, so concurrent
+# engines with different sharding never race on a module global.  A bare
+# model traced without an engine (no ``cfg.artifacts``) falls back to the
+# default-records heuristic at tp=1.
 
 # ---------------------------------------------------------------------------
 # norms
@@ -178,11 +159,10 @@ def attention_block(
 
     ``kv_override`` lets decode substitute the (cache-extended) K/V.
     ``cfg`` (an ``ArchConfig``, optional) enables the tuned-block lookup:
-    the Pallas launch gets (block_q, block_k) from the artifact set the
+    the Pallas launch gets (block_q, block_k) from the artifact epoch the
     owning engine bound onto ``cfg`` (``repro.compiler.ArtifactSet``,
-    resolved against that engine's tp degree), or — for legacy callers
-    tracing without an engine — from the record store under the
-    deprecated ``active_tp()`` module global.
+    resolved against that engine's tp degree), or — for bare-model
+    traces without an engine — from the default record store at tp=1.
     """
     b, s, _ = x.shape
     q, k, v = attention_qkv(x, p, dims, positions, rope_theta)
@@ -197,7 +177,7 @@ def attention_block(
             bq, bk = art.attention_blocks(cfg, q.shape[2], k_all.shape[2])
         else:
             bq, bk = ops.tuned_attention_blocks(
-                cfg, q.shape[2], k_all.shape[2], tp=active_tp()
+                cfg, q.shape[2], k_all.shape[2], tp=1
             )
         blocks = dict(block_q=bq, block_k=bk)
     o = ops.attention(

@@ -14,12 +14,18 @@
                     over shared COW pages (greedy output bit-identical
                     to token-by-token decode).
   * ``metrics``   — TTFT / TPOT / throughput / occupancy / prefix-hit /
-                    speculation counters (protocol: EXPERIMENTS.md
-                    §Serve, §Speculative).
+                    speculation counters plus ``ShapeStats``, the live
+                    dispatch-shape distribution (protocol:
+                    EXPERIMENTS.md §Serve, §Speculative, §Retune).
+  * ``retune``    — ``BackgroundRetuner``: the serve→compile loop —
+                    hot observed shapes recompiled through a
+                    ``CompilerSession`` and published as hot-swappable
+                    ``ArtifactRegistry`` epochs.
 """
 from .engine import Request, ServeEngine
 from .kvcache import PagedKVCache, PrefixIndex, PrefixMatch
-from .metrics import EngineMetrics, RequestMetrics
+from .metrics import EngineMetrics, RequestMetrics, ShapeStats
+from .retune import BackgroundRetuner
 from .speculative import SpeculativeDecoder
 from .policy import (
     AdmissionPolicy,
@@ -40,6 +46,8 @@ __all__ = [
     "SpeculativeDecoder",
     "EngineMetrics",
     "RequestMetrics",
+    "ShapeStats",
+    "BackgroundRetuner",
     "AdmissionPolicy",
     "Candidate",
     "ShortestPrefillFirst",

@@ -8,8 +8,10 @@ padding approximations); finished sequences free their slot immediately and
 the next queued request is admitted.
 
 This engine is what the Reasoning Compiler accelerates end-to-end: its
-attention/MLP kernels take their block configs from the tuning cache
-(core/autotuner.py), mirroring the paper's model-serving framing.
+attention/MLP kernels take their block configs from the artifact epoch
+bound by ``repro.compiler.ArtifactRegistry`` and hot-swap to newly
+published epochs at step boundaries, mirroring the paper's
+model-serving framing.
 """
 from __future__ import annotations
 
@@ -69,18 +71,24 @@ class ServeEngine:
         mesh=None,
         tp: int = 1,
         tracer: Optional[Tracer] = None,
+        registry=None,
     ):
         """``tp`` must match the degree the params were built with
         (``init_params(cfg, key, tp)``) so the cache's padded KV-head
         axis lines up with the weights."""
         assert cfg.has_decode, f"{cfg.name} is encoder-only"
-        # Tuned-kernel resolution: bind an artifact set for this engine's
-        # tp degree onto cfg (repro.compiler).  Every trace below reads
-        # blocks from this engine-owned resolver — no module global, so
-        # differently-sharded engines in one process cannot race.
-        from ..compiler import bind_artifacts
+        # Tuned-kernel resolution: bind an artifact epoch for this
+        # engine's tp degree onto cfg (repro.compiler.ArtifactRegistry).
+        # Every trace below reads blocks from this engine-owned resolver
+        # — no module global, so differently-sharded engines in one
+        # process cannot race.  The engine keeps the registry handle and
+        # hot-swaps to newly published epochs at step boundaries.
+        from ..compiler.artifacts import ArtifactRegistry
 
-        cfg, self._block_tp = bind_artifacts(cfg, mesh=mesh, tp=tp)
+        self.registry = registry if registry is not None \
+            else ArtifactRegistry()
+        cfg, self._block_tp = self.registry.bind(cfg, mesh=mesh, tp=tp)
+        self._artifact_epoch = getattr(cfg.artifacts, "epoch", 0)
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -112,11 +120,7 @@ class ServeEngine:
                 ),
             )
         self.metrics = EngineMetrics()
-        self._prefill_one = jax.jit(
-            lambda p, toks: M.prefill(
-                cfg, p, {"tokens": toks}, max_len, backend=backend
-            )
-        )
+        self._prefill_one = self._build_prefill()
 
         def _slot_write(full_cache, one_cache, slot):
             # Jitted (donated) so the committed mesh layout of the shared
@@ -135,9 +139,47 @@ class ServeEngine:
 
         self._slot_write = jax.jit(_slot_write, donate_argnums=(0,))
 
-        self._decode = jax.jit(
-            batched_decode_fn(cfg, backend), donate_argnums=(2,)
+        self._decode = self._build_decode()
+
+    def _build_prefill(self):
+        cfg, backend, max_len = self.cfg, self.backend, self.max_len
+        return jax.jit(
+            lambda p, toks: M.prefill(
+                cfg, p, {"tokens": toks}, max_len, backend=backend
+            )
         )
+
+    def _build_decode(self):
+        return jax.jit(
+            batched_decode_fn(self.cfg, self.backend), donate_argnums=(2,)
+        )
+
+    def _maybe_swap_artifacts(self) -> bool:
+        """Adopt the registry's current artifact epoch if it moved.
+
+        Called at the top of ``step()`` only, so a concurrent
+        ``publish()`` never mixes epochs inside one admit/decode round:
+        every trace within a step resolves against exactly one epoch.
+        The stale jits are dropped so the next dispatch re-traces
+        against the new blocks (block choice changes tiling, not math —
+        greedy outputs are bit-identical across a swap)."""
+        reg = self.registry
+        if reg is None or reg.epoch == self._artifact_epoch:
+            return False
+        art = reg.acquire(tp=self._block_tp)
+        old = self._artifact_epoch
+        self.cfg = dataclasses.replace(self.cfg, artifacts=art)
+        self._prefill_one = self._build_prefill()
+        self._decode = self._build_decode()
+        self._artifact_epoch = art.epoch
+        try:
+            reg.unpin(old)
+        except (KeyError, ValueError):
+            pass  # pre-bound cfg: epoch was never pinned by this engine
+        self.metrics.artifact_swaps += 1
+        self.trace.instant("artifact-swap", cat="serve", epoch=art.epoch,
+                           from_epoch=old, records=len(art.records))
+        return True
 
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -156,7 +198,10 @@ class ServeEngine:
     def step(self) -> list[Request]:
         """One engine iteration: admit, then one decode round (same
         contract as ``PagedServeEngine.step`` — arrival-driven harnesses
-        can interleave ``submit`` with steps on either engine)."""
+        can interleave ``submit`` with steps on either engine).  Newly
+        published artifact epochs are adopted here, at the step
+        boundary, so one step never mixes epochs."""
+        self._maybe_swap_artifacts()
         self._admit()
         return self._decode_iteration()
 
@@ -174,6 +219,9 @@ class ServeEngine:
                              track=f"slot{slot}", uid=req.uid,
                              prompt_len=len(req.prompt))
             toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            plen = len(req.prompt)
+            self.metrics.shapes.observe("prefill_bucket", (plen, 1))
+            self.metrics.shapes.observe("attention", (plen, plen))
             with self.trace.span("prefill", cat="serve",
                                  track=f"slot{slot}",
                                  tokens=len(req.prompt)):
@@ -200,6 +248,8 @@ class ServeEngine:
         toks = np.zeros((self.slots,), np.int32)
         for slot, req in self.active.items():
             toks[slot] = req.output[-1]
+        self.metrics.shapes.observe(
+            "decode_batch", (len(self.active),), weight=len(self.active))
         with self.trace.span("decode", cat="serve",
                              rows=len(self.active)):
             t0 = self.metrics.clock()

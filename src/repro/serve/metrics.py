@@ -57,6 +57,71 @@ def _mean(xs: list) -> float:
     return sum(xs) / len(xs) if xs else 0.0
 
 
+class ShapeStats:
+    """Decayed histogram of the dispatch shapes an engine actually serves
+    — the live workload distribution the background retuner
+    (``serve/retune.py``) feeds back into a ``CompilerSession``.
+
+    Four shape kinds, each weighted by observed dispatch count:
+
+      * ``attention``      — (seq_q, seq_kv) pairs exactly as the traced
+        attention launch resolves them against ``cfg.artifacts``, so a
+        retuned record lands under the key the engine will look up;
+      * ``prefill_bucket`` — (bucket_tokens, rows) batched-prefill shapes;
+      * ``chunk_lane``     — (chunk_tokens, lanes) chunked-prefill lanes;
+      * ``decode_batch``   — (active_rows,) decode batch widths.
+
+    ``decay(factor)`` ages every weight (the retuner calls it once per
+    cycle), so a shifted workload's new hot shapes overtake stale ones in
+    bounded time; ``top_k`` ordering is deterministic — ties break on the
+    shape tuple — so retune task lists are stable run-to-run.
+    """
+
+    KINDS = ("attention", "prefill_bucket", "chunk_lane", "decode_batch")
+
+    def __init__(self):
+        self._weights: dict[str, dict[tuple, float]] = {
+            k: {} for k in self.KINDS
+        }
+
+    def observe(self, kind: str, shape: tuple, weight: float = 1.0) -> None:
+        """Record one dispatch of ``shape`` (any extra weight lets callers
+        fold in, e.g., token counts instead of call counts)."""
+        if kind not in self._weights:
+            raise KeyError(f"unknown shape kind {kind!r}; "
+                           f"one of {self.KINDS}")
+        shape = tuple(int(x) for x in shape)
+        bucket = self._weights[kind]
+        bucket[shape] = bucket.get(shape, 0.0) + float(weight)
+
+    def decay(self, factor: float = 0.5, floor: float = 1e-3) -> None:
+        """Age every weight by ``factor``; entries below ``floor`` are
+        dropped so a long-running engine's stats stay bounded."""
+        assert 0.0 <= factor <= 1.0
+        for bucket in self._weights.values():
+            for shape in list(bucket):
+                bucket[shape] *= factor
+                if bucket[shape] < floor:
+                    del bucket[shape]
+
+    def top_k(self, kind: str, k: int) -> list[tuple[tuple, float]]:
+        """The ``k`` heaviest shapes of ``kind`` as [(shape, weight)],
+        heaviest first; deterministic under ties (shape ascending)."""
+        bucket = self._weights[kind]
+        ranked = sorted(bucket.items(), key=lambda it: (-it[1], it[0]))
+        return ranked[: max(0, int(k))]
+
+    def weight(self, kind: str, shape: tuple) -> float:
+        return self._weights[kind].get(tuple(int(x) for x in shape), 0.0)
+
+    def total(self, kind: str) -> float:
+        return sum(self._weights[kind].values())
+
+    def counts(self) -> dict:
+        """{kind: number of distinct shapes} — cheap summary column."""
+        return {k: len(b) for k, b in self._weights.items()}
+
+
 class EngineMetrics:
     """Per-engine counters + the registry of per-request metrics.
 
@@ -96,6 +161,12 @@ class EngineMetrics:
         self.draft_prefill_calls = 0
         self.admitted = 0            # requests granted a slot (on_admit)
         self.finished = 0
+        # artifact-epoch swaps adopted at step boundaries (serve→compile
+        # loop: how many times this engine picked up retuned kernels)
+        self.artifact_swaps = 0
+        # live dispatch-shape distribution — what the background retuner
+        # reads to decide which shapes deserve search budget
+        self.shapes = ShapeStats()
         self.ttft_slo_s: Optional[float] = None
         self._occ_sum = 0.0
         self._occ_max = 0.0
@@ -211,6 +282,7 @@ class EngineMetrics:
             "draft_prefill_calls": self.draft_prefill_calls,
             "kv_occupancy_mean": self._occ_sum / max(1, self._occ_n),
             "kv_occupancy_max": self._occ_max,
+            "artifact_swaps": self.artifact_swaps,
         }
 
     # -- export surfaces (repro.obs) ----------------------------------------
@@ -230,6 +302,7 @@ class EngineMetrics:
             "spec_steps": self.spec_steps,
             "spec_accepted": self.spec_accepted,
             "draft_calls": self.draft_calls,
+            "artifact_swaps": self.artifact_swaps,
         }
 
     def histograms(self) -> dict:

@@ -1,0 +1,179 @@
+"""Background retuning: the serve→compile feedback loop.
+
+The tuning launcher compiles the shapes you *predict*; a serving engine
+dispatches the shapes you *get*.  ``BackgroundRetuner`` closes that gap:
+it reads the live shape distribution an engine accumulates in
+``EngineMetrics.shapes`` (``ShapeStats`` — prefill buckets, chunk lanes,
+decode batch widths, attention (seq_q, seq_kv) pairs, each weighted by
+observed dispatch count), converts the top-k hot shapes into prioritized
+``compiler.tasks.Task``s, and compiles them through a ``CompilerSession``
+— reusing the session's cross-task seeding, surrogate oracle tier, and
+proposer pool.  When a cycle produces any freshly searched record it
+``publish()``-es a new epoch on the engine's ``ArtifactRegistry``; the
+engine hot-swaps to it at its next step boundary (no restart, no
+mid-step epoch mixing — see ``ArtifactRegistry`` / engine
+``_maybe_swap_artifacts``).
+
+The retuner never touches engine internals beyond the three public
+surfaces it is built on: ``engine.metrics.shapes``, ``engine.registry``,
+``engine.cfg``.  ``run_once()`` is the synchronous unit (and what tests
+drive); ``start(interval_s)``/``stop()`` wrap it in a daemon thread for
+actual background operation.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from ..obs import NULL_TRACER, Tracer
+
+
+class BackgroundRetuner:
+    """Shape-aware retuning loop bound to one serving engine.
+
+    Parameters
+    ----------
+    engine:
+        A ``ServeEngine`` / ``PagedServeEngine`` (anything exposing
+        ``metrics.shapes``, ``registry`` and ``cfg``).
+    session:
+        Optional pre-built ``CompilerSession``.  Its ``records`` MUST be
+        the registry's ``TuningRecords`` instance, else published epochs
+        would not contain the newly compiled records (asserted).  When
+        omitted, a measurement-free analytical session over the
+        registry's records is built (cheap enough for CI; pass your own
+        session to retune with llm-mcts / proposer pools / measured
+        re-rank).
+    top_k:
+        Hot shapes per kind fed into each cycle.
+    budget:
+        Per-task sample budget of the default session (ignored when a
+        session is passed).
+    decay:
+        ``ShapeStats.decay`` factor applied after every cycle, so a
+        shifted workload's new hot shapes overtake stale ones.
+    """
+
+    def __init__(
+        self,
+        engine,
+        session=None,
+        *,
+        top_k: int = 4,
+        budget: int = 32,
+        decay: float = 0.5,
+        method: str = "mcts",
+        tracer: Optional[Tracer] = None,
+    ):
+        from ..compiler.session import CompilerSession
+
+        self.engine = engine
+        self.registry = engine.registry
+        if self.registry is None:
+            raise ValueError("engine has no ArtifactRegistry to publish "
+                             "retuned epochs into")
+        self.trace = tracer or getattr(engine, "trace", None) or NULL_TRACER
+        if session is None:
+            session = CompilerSession(
+                self.registry.platform,
+                oracle="analytical",
+                method=method,
+                budget_policy=budget,
+                records=self.registry.records,
+                measure=False,
+                tracer=self.trace,
+            )
+        assert session.records is self.registry.records, (
+            "retune session must write the registry's TuningRecords — "
+            "published epochs snapshot registry.records"
+        )
+        self.session = session
+        self.top_k = top_k
+        self.decay = decay
+        # telemetry
+        self.cycles = 0
+        self.published_epochs: list[int] = []
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------------
+    # one synchronous cycle
+    # ------------------------------------------------------------------
+    def hot_tasks(self) -> list:
+        """Observed top-k shapes → prioritized compile tasks (pure)."""
+        from ..compiler.tasks import tasks_for_shapes
+
+        stats = self.engine.metrics.shapes
+        attention = stats.top_k("attention", self.top_k)
+        # MLP/GEMM m dim == tokens per dispatch: prefill buckets feed
+        # s_tok, chunk lanes feed chunk_tokens.  Merge by m.
+        gemm_m: dict[int, float] = {}
+        for (shape, w) in stats.top_k("prefill_bucket", self.top_k):
+            gemm_m[shape[0]] = gemm_m.get(shape[0], 0.0) + w
+        for (shape, w) in stats.top_k("chunk_lane", self.top_k):
+            gemm_m[shape[0]] = gemm_m.get(shape[0], 0.0) + w
+        return tasks_for_shapes(
+            self.engine.cfg,
+            attention=attention,
+            gemm_m=sorted(gemm_m.items(), key=lambda it: (-it[1], it[0])),
+            tp=getattr(self.engine, "_block_tp", 1),
+        )
+
+    def run_once(self) -> dict:
+        """One retune cycle: read stats → compile hot shapes → publish.
+
+        Returns a summary dict ``{tasks, fresh, cache_hits, epoch}``;
+        ``epoch`` is ``None`` when nothing new was compiled (every hot
+        shape already had a record, so there is nothing to publish and
+        engines keep their current epoch — swaps stay meaningful).
+        """
+        with self.trace.span("retune-cycle", cat="retune",
+                             cycle=self.cycles) as sp:
+            tasks = self.hot_tasks()
+            arts = self.session.compile(tasks) if tasks else []
+            fresh = [a for a in arts if not a.cache_hit]
+            epoch = None
+            if fresh:
+                epoch = self.registry.publish()
+                self.published_epochs.append(epoch)
+                self.trace.instant(
+                    "artifact-publish", cat="retune", epoch=epoch,
+                    fresh=len(fresh),
+                )
+            self.engine.metrics.shapes.decay(self.decay)
+            self.cycles += 1
+            summary = {
+                "tasks": len(tasks),
+                "fresh": len(fresh),
+                "cache_hits": len(arts) - len(fresh),
+                "epoch": epoch,
+            }
+            sp.set(**summary)
+        return summary
+
+    # ------------------------------------------------------------------
+    # thread driver
+    # ------------------------------------------------------------------
+    def start(self, interval_s: float = 5.0) -> None:
+        """Run ``run_once`` every ``interval_s`` seconds in a daemon
+        thread until ``stop()``.  The engine only observes the loop
+        through atomic ``registry.publish`` epochs, so no engine lock is
+        taken; compile work happens entirely off the serving thread."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("retuner already running")
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(interval_s):
+                self.run_once()
+
+        self._thread = threading.Thread(
+            target=loop, name="repro-retune", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None

@@ -112,6 +112,7 @@ class PagedServeEngine:
         backend: Optional[str] = None,
         mesh=None,
         tp: int = 1,
+        registry=None,
         metrics: Optional[EngineMetrics] = None,
         tracer: Optional[Tracer] = None,
     ):
@@ -119,13 +120,19 @@ class PagedServeEngine:
         (``init_params(cfg, key, tp)``) so the pool's padded KV-head axis
         lines up with the weights — and can shard over "model"."""
         assert cfg.has_decode, f"{cfg.name} is encoder-only"
-        # Tuned-kernel resolution: bind an artifact set for this engine's
-        # tp degree onto cfg (repro.compiler) — every lazy trace below
-        # resolves blocks from this engine-owned object, so concurrent
-        # engines with different sharding cannot race on a global.
-        from ..compiler import bind_artifacts
+        # Tuned-kernel resolution: bind the registry's current artifact
+        # epoch for this engine's tp degree onto cfg (repro.compiler) —
+        # every lazy trace below resolves blocks from this engine-owned
+        # immutable epoch, so concurrent engines with different sharding
+        # cannot race on a global, and a ``registry.publish()`` (e.g.
+        # from a background retuner) is adopted at the next step boundary
+        # without restart.
+        from ..compiler.artifacts import ArtifactRegistry
 
-        cfg, self._block_tp = bind_artifacts(cfg, mesh=mesh, tp=tp)
+        self.registry = registry if registry is not None \
+            else ArtifactRegistry()
+        cfg, self._block_tp = self.registry.bind(cfg, mesh=mesh, tp=tp)
+        self._artifact_epoch = getattr(cfg.artifacts, "epoch", 0)
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -213,10 +220,46 @@ class PagedServeEngine:
         return finished
 
     def step(self) -> list[Request]:
-        """One engine iteration: admit, advance chunked prefills, decode."""
+        """One engine iteration: admit, advance chunked prefills, decode.
+
+        The artifact-epoch check runs first, so a retuner's
+        ``registry.publish()`` lands exactly AT a step boundary: every
+        dispatch inside one step resolves against a single epoch (no
+        mid-step mixing), and the swap changes tiling only — greedy
+        outputs are bit-identical across it (tier-1 asserted)."""
+        self._maybe_swap_artifacts()
         self._admit()
         self._advance_prefill()
         return self._decode_iteration()
+
+    def _maybe_swap_artifacts(self) -> bool:
+        """Adopt a newer published artifact epoch between steps: rebind
+        cfg and drop every jit cache that closed over the old epoch's
+        blocks (they re-trace lazily against the new ones).  The old
+        epoch stays pinned — resolvable in the registry — until this
+        boundary, then its refcount drops."""
+        reg = self.registry
+        if reg is None or reg.epoch == self._artifact_epoch:
+            return False
+        art = reg.acquire(tp=self._block_tp)
+        old = self._artifact_epoch
+        self.cfg = dataclasses.replace(self.cfg, artifacts=art)
+        self._prefill_jits.clear()
+        self._chunk_jits.clear()
+        self._decode_j = self._build_decode()
+        if self.spec is not None:
+            self.spec.rebind_artifacts(self.cfg)
+        self._artifact_epoch = art.epoch
+        try:
+            reg.unpin(old)
+        except (KeyError, ValueError):
+            pass  # pre-bound cfg: epoch was never pinned by this engine
+        self.metrics.artifact_swaps += 1
+        self.trace.instant(
+            "artifact-swap", cat="serve", epoch=art.epoch, from_epoch=old,
+            records=len(art.records),
+        )
+        return True
 
     # -- admission ----------------------------------------------------------
     def _free_slots(self) -> list[int]:
@@ -409,6 +452,13 @@ class PagedServeEngine:
             for i, (_, req) in enumerate(group):
                 toks[i, : len(req.prompt)] = req.prompt
                 lens[i] = len(req.prompt)
+            # Live shape distribution: the dispatched bucket plus the
+            # attention (seq_q, seq_kv) pair this bucket resolves through
+            # cfg.artifacts — what a background retuner should tune next.
+            self.metrics.shapes.observe(
+                "prefill_bucket", (s_tok, n_pad), weight=n)
+            self.metrics.shapes.observe(
+                "attention", (s_tok, s_tok), weight=n)
             with self.trace.span(
                 "prefill-bucket", cat="serve", bucket_tokens=s_tok,
                 rows=n_pad, slots=[s for s, _ in group],
@@ -479,6 +529,7 @@ class PagedServeEngine:
                 toks[i] = st.req.prompt[st.done: st.done + take]
                 starts[i] = st.done
             rows = [st.cache for _, st in group]
+            self.metrics.shapes.observe("chunk_lane", (take, n), weight=n)
             with self.trace.span(
                 "chunk-lane", cat="serve", chunk_tokens=take, lanes=n,
                 slots=[s for s, _ in group],
@@ -565,6 +616,8 @@ class PagedServeEngine:
             # index still references copies it first
             self.kv.ensure_writable(slot, pos // self.kv.page_size, pos)
         page_ids, offs = self.kv.token_targets(self.positions)
+        self.metrics.shapes.observe(
+            "decode_batch", (len(self.active),), weight=len(self.active))
         with self.trace.span("decode", cat="serve",
                              rows=len(self.active)):
             t0 = self.metrics.clock()

@@ -120,6 +120,14 @@ class SpeculativeDecoder:
         self._mask_j = jax.jit(self._mask_tail, donate_argnums=(0,))
         self._draft_admit_jits: dict[tuple, callable] = {}
 
+    def rebind_artifacts(self, cfg) -> None:
+        """Adopt the owning engine's newly swapped artifact epoch: take
+        the rebound target cfg and rebuild the verify jit so its traces
+        resolve blocks from the new epoch (the draft lane keeps its own
+        cfg — draft artifacts are not epoch-managed)."""
+        self.cfg = cfg
+        self._verify_j = self._build_verify()
+
     # -- jit builders -------------------------------------------------------
     @staticmethod
     def _mask_tail(cache, bounds):

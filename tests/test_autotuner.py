@@ -1,16 +1,32 @@
-"""Autotuner: schedule -> Pallas block extraction + tuning cache."""
+"""Autotuner compat surface: schedule -> Pallas block extraction +
+session-backed tuning records (the retired KernelTuner's behaviors, now
+expressed through ``CompilerSession``)."""
 import os
 import tempfile
 
 from repro.core import schedule as S
+from repro.compiler import BudgetPolicy, CompilerSession
 from repro.compiler.records import TuningRecords
+from repro.compiler.tasks import attention_task, gemm_task
 from repro.core.autotuner import (
     AttentionBlocks,
     GemmBlocks,
-    KernelTuner,
     _quantize_block,
     attention_tuning_workload,
 )
+
+
+def _session(tmp_path, budget=12, **kw):
+    """Single-task-semantics session over a tmp record store (what the
+    retired KernelTuner used to construct per instance)."""
+    records = kw.pop(
+        "records", TuningRecords(os.path.join(tmp_path, "records.jsonl")))
+    return CompilerSession(
+        target="tpu-v5e",
+        budget_policy=BudgetPolicy(per_task=budget, early_stop=False,
+                                   reallocate=False),
+        records=records, shared_context=False, seed=0, **kw,
+    )
 
 
 def test_quantize_block():
@@ -50,50 +66,64 @@ def test_blocks_from_schedule():
     assert 1024 % b.block_q == 0 and 1024 % b.block_k == 0
 
 
-def test_tuner_caches(tmp_path):
-    cache = os.path.join(tmp_path, "cache.json")
-    t = KernelTuner(budget=12, cache_path=cache)
-    b1 = t.tune_gemm(256, 512, 512)
-    assert os.path.exists(cache)
-    # second tuner instance hits the cache (no search)
-    t2 = KernelTuner(budget=12, cache_path=cache)
-    b2 = t2.tune_gemm(256, 512, 512)
+def test_session_records_cache_across_instances(tmp_path):
+    path = os.path.join(tmp_path, "records.jsonl")
+    s1 = _session(tmp_path, records=TuningRecords(path))
+    (a1,) = s1.compile([gemm_task(256, 512, 512)])
+    assert os.path.exists(path)
+    assert not a1.cache_hit
+    # second session over the same store hits the record (no search)
+    s2 = _session(tmp_path, records=TuningRecords(path))
+    (a2,) = s2.compile([gemm_task(256, 512, 512)])
+    assert a2.cache_hit and s2.cache_hits == 1
+    b1, b2 = a1.blocks, a2.blocks
     assert (b1.bm, b1.bn, b1.bk) == (b2.bm, b2.bn, b2.bk)
 
 
 def test_tuned_blocks_are_legal_for_pallas(tmp_path):
-    t = KernelTuner(budget=16,
-                    cache_path=os.path.join(tmp_path, "c.json"))
-    b = t.tune_attention(8, 512, 512, 64)
+    s = _session(tmp_path, budget=16)
+    a, g = s.compile([
+        attention_task(8, 512, 512, 64),
+        gemm_task(512, 1024, 2048),
+    ])
+    b = a.blocks
     assert 512 % b.block_q == 0 and 512 % b.block_k == 0
-    g = t.tune_gemm(512, 1024, 2048)
+    g = g.blocks
     assert 512 % g.bm == 0 and 1024 % g.bn == 0 and 2048 % g.bk == 0
 
 
 def test_kv_heads_in_cache_key(tmp_path):
-    """GQA shapes must not collide in the tuning cache: the same query-head
-    count with different (tp-local) KV head counts are distinct entries."""
-    t = KernelTuner(budget=12, cache_path=os.path.join(tmp_path, "c.json"))
-    t.tune_attention(8, 256, 256, 64)               # MHA: kv == heads
-    t.tune_attention(8, 256, 256, 64, kv_heads=2)   # GQA group of 4
-    t.tune_attention(8, 256, 256, 64, kv_heads=1)   # replicated kv under tp
-    keys = sorted(t._cache)
+    """GQA shapes must not collide in the tuning records: the same
+    query-head count with different (tp-local) KV head counts are
+    distinct entries."""
+    from repro.compiler.records import record_key
+
+    s = _session(tmp_path)
+    s.compile([
+        attention_task(8, 256, 256, 64),              # MHA: kv == heads
+        attention_task(8, 256, 256, 64, kv_heads=2),  # GQA group of 4
+        attention_task(8, 256, 256, 64, kv_heads=1),  # replicated kv
+    ])
+    keys = s.records.keys()
     assert len(keys) == 3
     assert sum(".kv2" in k for k in keys) == 1
     assert sum(".kv1" in k for k in keys) == 1
     # read-only probe hits without searching; a miss returns None
-    assert t.lookup_attention(8, 256, 256, 64, kv_heads=2) is not None
-    assert t.lookup_attention(8, 999, 999, 64) is None
+    hit = record_key("tpu-v5e", attention_tuning_workload(
+        8, 256, 256, 64, kv_heads=2))
+    assert s.records.get(hit) is not None
+    miss = record_key("tpu-v5e", attention_tuning_workload(8, 999, 999, 64))
+    assert s.records.get(miss) is None
 
 
 def test_tuner_measured_rerank_provenance(tmp_path):
     """measure=True re-ranks winners by real timed execution and persists
     measured_latency_s + provenance alongside the block params."""
-    t = KernelTuner(budget=8, measure=True, rerank_top=2,
-                    cache_path=os.path.join(tmp_path, "c.json"))
-    b = t.tune_gemm(64, 128, 128)
+    s = _session(tmp_path, budget=8, measure=True, rerank_top=2)
+    (art,) = s.compile([gemm_task(64, 128, 128)])
+    b = art.blocks
     assert 64 % b.bm == 0 and 128 % b.bn == 0 and 128 % b.bk == 0
-    (entry,) = t._cache.values()
+    (entry,) = s.records.legacy_view().values()
     assert entry["measured_latency_s"] > 0
     prov = entry["provenance"]
     assert prov["oracle"] == "measured"
@@ -104,19 +134,20 @@ def test_tuner_measured_rerank_provenance(tmp_path):
 
 def test_tuner_measured_search_oracle(tmp_path):
     """oracle="measured" makes every search sample a timed execution."""
-    t = KernelTuner(budget=6, oracle="measured", method="mcts",
-                    cache_path=os.path.join(tmp_path, "c.json"))
-    t.tune_gemm(32, 64, 64)
-    (entry,) = t._cache.values()
+    s = _session(tmp_path, budget=6, oracle="measured", method="mcts")
+    s.compile([gemm_task(32, 64, 64)])
+    (entry,) = s.records.legacy_view().values()
     assert entry["samples"] >= 1
 
 
 def test_attention_block_uses_tp_local_tuned_blocks(tmp_path, monkeypatch):
     """models/layers.attention_block must launch with the blocks tuned for
-    the ACTIVE tp degree's local head counts (ROADMAP step 2)."""
+    the BOUND tp degree's local head counts — the tp travels inside the
+    registry-bound cfg.artifacts, never a module global."""
     import jax
     import jax.numpy as jnp
 
+    from repro.compiler import ArtifactRegistry
     from repro.configs import get_config
     from repro.core.autotuner import local_attention_dims
     from repro.kernels import ops
@@ -125,11 +156,12 @@ def test_attention_block_uses_tp_local_tuned_blocks(tmp_path, monkeypatch):
     cfg = get_config("tinyllama-1.1b")          # 32q / 4kv
     tp = 4
     hq, hkv = local_attention_dims(cfg, tp)     # (8, 1)
-    cache = os.path.join(tmp_path, "tc.json")
-    tuner = KernelTuner(budget=12, cache_path=cache)
-    tuned = tuner.tune_attention(hq, 128, 128, cfg.hd, kv_heads=hkv)
-    monkeypatch.setattr(
-        ops, "_RECORDS", TuningRecords(None, legacy_json=cache))
+    s = _session(tmp_path)
+    (art,) = s.compile([attention_task(hq, 128, 128, cfg.hd,
+                                       kv_heads=hkv)])
+    tuned = art.blocks
+    reg = ArtifactRegistry(s.records)
+    bound, _ = reg.bind(cfg, tp=tp)
 
     seen = {}
     real_attention = ops.attention
@@ -143,11 +175,7 @@ def test_attention_block_uses_tp_local_tuned_blocks(tmp_path, monkeypatch):
     p = L.init_attention(jax.random.PRNGKey(0), dims, jnp.float32)
     x = jnp.zeros((1, 128, 128), jnp.float32)
     pos = jnp.arange(128)[None]
-    L.set_active_tp(tp)
-    try:
-        L.attention_block(x, p, dims, pos, cfg=cfg, backend="jax")
-    finally:
-        L.set_active_tp(1)
+    L.attention_block(x, p, dims, pos, cfg=bound, backend="jax")
     assert (seen["block_q"], seen["block_k"]) == \
         (tuned.block_q, tuned.block_k)
 
@@ -176,9 +204,12 @@ def test_ops_tuned_lookup_defaults(tmp_path, monkeypatch):
 
     cfg = get_config("phi4-mini-3.8b")          # 24q / 8kv... padded rules
     hq, hkv = local_attention_dims(cfg, 4)
+    s = _session(tmp_path)
+    (art,) = s.compile([attention_task(hq, 256, 256, cfg.hd,
+                                       kv_heads=hkv)])
+    tuned = art.blocks
     cache = os.path.join(tmp_path, "tc.json")
-    t = KernelTuner(budget=12, cache_path=cache)
-    tuned = t.tune_attention(hq, 256, 256, cfg.hd, kv_heads=hkv)
+    s.records.export_json(cache)                 # v0 mirror for old readers
     monkeypatch.setattr(
         ops, "_RECORDS", TuningRecords(None, legacy_json=cache))
     bq, bk = ops.tuned_attention_blocks(cfg, 256, 256, tp=4)

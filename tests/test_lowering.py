@@ -21,7 +21,7 @@ from repro.core.oracle import (
 )
 from repro.core.cost_model import HardwareOracle, get_platform
 from repro.core.schedule import initial_schedule, random_schedule
-from repro.core.search import run_search
+from repro.core.search import _one_shot_search
 from repro.core.workloads import (
     attention_workload,
     conv2d_workload,
@@ -215,7 +215,7 @@ def test_measured_llm_mcts_20_samples():
     w = matmul_workload("t_measured_search", m=64, n=128, k=128,
                         dtype_bytes=4)
     mo = MeasuredOracle("tpu-v5e", repeats=2)
-    r = run_search(w, "tpu-v5e", "llm-mcts", budget=20, seed=0, oracle=mo)
+    r = _one_shot_search(w, "tpu-v5e", "llm-mcts", budget=20, seed=0, oracle=mo)
     assert r.samples >= 20
     assert r.oracle == "measured"
     # every sample (tree node) + the baseline resolved through the oracle,
@@ -226,9 +226,9 @@ def test_measured_llm_mcts_20_samples():
     assert r.best_speedup > 0
 
 
-def test_run_search_accepts_oracle_strings():
+def test_one_shot_search_accepts_oracle_strings():
     w = matmul_workload("t_oracle_knob", m=32, n=128, k=64, dtype_bytes=4)
     for spec in ("analytical", "measured", "hybrid"):
-        r = run_search(w, "tpu-v5e", "mcts", budget=4, seed=0, oracle=spec)
+        r = _one_shot_search(w, "tpu-v5e", "mcts", budget=4, seed=0, oracle=spec)
         assert r.samples >= 4 and r.oracle == spec
         assert len(r.top_schedules) >= 1

@@ -9,7 +9,7 @@ from repro.core.cost_model import HardwareOracle, get_platform
 from repro.core.evolutionary import EvolutionarySearch
 from repro.core.llm import LLMProposer, make_llm
 from repro.core.mcts import MCTS, SearchCurve
-from repro.core.search import compare_efficiency, run_search
+from repro.core.search import _one_shot_search, compare_efficiency
 from repro.core.workloads import get_workload
 
 
@@ -98,7 +98,7 @@ def test_method_ordering_low_budget():
         def mean_at(method, **kw):
             vals = []
             for seed in range(3):
-                r = run_search(wname, "core-i9", method, budget=40,
+                r = _one_shot_search(wname, "core-i9", method, budget=40,
                                seed=seed, **kw)
                 vals.append(r.curve.at(36))
             return sum(vals) / len(vals)

@@ -1,0 +1,338 @@
+"""Serve→compile loop: ShapeStats, ArtifactRegistry epochs, hot swaps,
+and the BackgroundRetuner (tier-1: outputs bit-identical across a swap)."""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.compiler import ArtifactRegistry, ArtifactSet, tasks_for_shapes
+from repro.compiler.records import TuningRecords
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import BackgroundRetuner, Request, ShapeStats
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import PagedServeEngine
+
+
+# ---------------------------------------------------------------------------
+# ShapeStats
+# ---------------------------------------------------------------------------
+
+
+def test_shape_stats_bucket_weighting():
+    st = ShapeStats()
+    st.observe("attention", (128, 128))
+    st.observe("attention", (128, 128), weight=3.0)
+    st.observe("attention", (64, 64), weight=2.0)
+    assert st.weight("attention", (128, 128)) == 4.0
+    assert st.weight("attention", (64, 64)) == 2.0
+    assert st.total("attention") == 6.0
+    # shapes are int-coerced so numpy dims land on the same key
+    st.observe("decode_batch", (np.int64(2),))
+    assert st.weight("decode_batch", (2,)) == 1.0
+    with pytest.raises(KeyError):
+        st.observe("nope", (1,))
+
+
+def test_shape_stats_decay_drops_below_floor():
+    st = ShapeStats()
+    st.observe("prefill_bucket", (32, 2), weight=8.0)
+    st.observe("prefill_bucket", (64, 1), weight=0.01)
+    st.decay(0.5, floor=1e-2)
+    assert st.weight("prefill_bucket", (32, 2)) == 4.0
+    assert st.weight("prefill_bucket", (64, 1)) == 0.0   # dropped
+    assert st.counts()["prefill_bucket"] == 1
+    # full decay empties the histogram (bounded memory)
+    for _ in range(20):
+        st.decay(0.1)
+    assert st.total("prefill_bucket") == 0.0
+
+
+def test_shape_stats_top_k_stability():
+    st = ShapeStats()
+    st.observe("attention", (256, 256), weight=5.0)
+    st.observe("attention", (128, 128), weight=2.0)
+    st.observe("attention", (64, 64), weight=2.0)      # tie with 128
+    top = st.top_k("attention", 2)
+    assert top == [((256, 256), 5.0), ((64, 64), 2.0)]  # ties: shape asc
+    assert st.top_k("attention", 0) == []
+    assert len(st.top_k("attention", 99)) == 3
+    # deterministic across observation order
+    st2 = ShapeStats()
+    st2.observe("attention", (64, 64), weight=2.0)
+    st2.observe("attention", (128, 128), weight=2.0)
+    st2.observe("attention", (256, 256), weight=5.0)
+    assert st2.top_k("attention", 3) == st.top_k("attention", 3)
+
+
+def test_tasks_for_shapes_ranked_by_weight():
+    cfg = get_config("tinyllama-1.1b")
+    tasks = tasks_for_shapes(
+        cfg,
+        attention=[((128, 128), 2.0), ((256, 256), 7.0)],
+        gemm_m=[(128, 4.0)],
+        tp=1,
+    )
+    assert [t.kind for t in tasks] == ["attention", "gemm", "attention"]
+    assert tasks[0].priority > tasks[1].priority > tasks[2].priority
+    assert tasks[0].workload.loop_map["i"].extent == 256
+    assert tasks[1].workload.loop_map["i"].extent == 128
+
+
+# ---------------------------------------------------------------------------
+# ArtifactRegistry epochs
+# ---------------------------------------------------------------------------
+
+
+def test_registry_publish_and_current():
+    reg = ArtifactRegistry(TuningRecords(None), platform="core-i9")
+    a0 = reg.current()
+    assert reg.epoch == 0 and a0.epoch == 0
+    assert reg.publish() == 1
+    a1 = reg.current(tp=2)
+    assert a1.epoch == 1 and a1.tp == 2
+    # per-(epoch, tp) sets are cached
+    assert reg.current(tp=2) is a1
+
+
+def test_artifact_set_is_immutable():
+    art = ArtifactRegistry(TuningRecords(None)).current()
+    with pytest.raises(AttributeError):
+        art.records = {}
+    with pytest.raises(AttributeError):
+        art.epoch = 99
+
+
+def test_registry_pin_unpin_refcounts():
+    reg = ArtifactRegistry(TuningRecords(None))
+    art = reg.acquire()                      # resolve + pin epoch 0
+    assert reg.pins(0) == 1
+    reg.pin(0)
+    assert reg.pins(0) == 2
+    reg.publish()                            # epoch 1; 0 pinned -> kept
+    assert reg.get(0).epoch == art.epoch == 0
+    assert reg.unpin(0) == 1
+    assert reg.unpin(0) == 0                 # superseded + unpinned -> GC
+    with pytest.raises(KeyError):
+        reg.get(0)
+    with pytest.raises(ValueError):
+        reg.unpin(0)                         # never pinned / already gone
+    # the current epoch never GCs, pinned or not
+    assert reg.current().epoch == 1
+
+
+def test_registry_bind_respects_prebound_cfg():
+    reg = ArtifactRegistry(TuningRecords(None))
+    cfg = get_config("tinyllama-1.1b")
+    bound, tp = reg.bind(cfg, tp=2)
+    assert tp == 2 and bound.artifacts.tp == 2 and bound.artifacts.epoch == 0
+    # an already-bound cfg passes through untouched (no double-pin)
+    again, _ = reg.bind(bound, tp=2)
+    assert again.artifacts is bound.artifacts
+    assert reg.pins(0) == 1
+
+
+# ---------------------------------------------------------------------------
+# engines: hot swap at step boundaries, bit-identical outputs
+# ---------------------------------------------------------------------------
+
+
+def _prompts(n, vocab, plen=6, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(4, vocab, size=plen).astype(np.int32)
+            for _ in range(n)]
+
+
+def _run_batch(engine, prompts, uid0=0, max_new=4):
+    for i, p in enumerate(prompts):
+        engine.submit(Request(uid0 + i, p, max_new_tokens=max_new))
+    return {r.uid: r.output for r in engine.run()}
+
+
+@pytest.mark.parametrize("engine_cls", [ServeEngine, PagedServeEngine])
+def test_swap_is_bit_identical(engine_cls):
+    """Tier-1 acceptance: greedy outputs across an artifact-epoch swap
+    match a control engine that never swaps, token for token."""
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reg = ArtifactRegistry(TuningRecords(None), platform="core-i9")
+    eng = engine_cls(cfg, params, slots=2, max_len=64, backend="jax",
+                     registry=reg)
+    ctl = engine_cls(cfg, params, slots=2, max_len=64, backend="jax")
+    prompts = _prompts(2, cfg.vocab)
+    out1 = _run_batch(eng, prompts, uid0=0)
+    # retune between batches: new epoch, swap adopted at the next step
+    ret = BackgroundRetuner(eng, top_k=2, budget=6)
+    summary = ret.run_once()
+    assert summary["fresh"] > 0 and summary["epoch"] == 1
+    out2 = _run_batch(eng, prompts, uid0=10)
+    assert eng.metrics.artifact_swaps == 1
+    assert eng._artifact_epoch == 1
+    ctl_out1 = _run_batch(ctl, prompts, uid0=0)
+    ctl_out2 = _run_batch(ctl, prompts, uid0=10)
+    assert out1 == ctl_out1
+    assert {u - 10: o for u, o in out2.items()} == \
+        {u: o for u, o in ctl_out1.items()}
+    assert out2 == ctl_out2
+
+
+def test_no_mid_step_epoch_mixing_under_concurrent_publish():
+    """Property: with a thread publishing epochs as fast as it can, every
+    engine step still resolves against exactly ONE epoch (swaps happen
+    only at step boundaries), and the engine's pinned epoch stays
+    resolvable until it unpins at the boundary."""
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reg = ArtifactRegistry(TuningRecords(None), platform="core-i9")
+
+    probes = []
+
+    class Probed(PagedServeEngine):
+        def _admit(self):
+            probes.append(("admit", self._artifact_epoch,
+                           self.cfg.artifacts.epoch))
+            return super()._admit()
+
+        def _decode_iteration(self):
+            # mid-step: the engine's epoch must still be resolvable
+            # (pinned) no matter how far the registry has advanced
+            assert reg.get(self._artifact_epoch) is not None
+            probes.append(("decode", self._artifact_epoch,
+                           self.cfg.artifacts.epoch))
+            return super()._decode_iteration()
+
+    eng = Probed(cfg, params, slots=2, max_len=64, backend="jax",
+                 registry=reg)
+    ctl = PagedServeEngine(cfg, params, slots=2, max_len=64, backend="jax")
+    stop = threading.Event()
+    published = []
+
+    def publisher():
+        while not stop.is_set():
+            published.append(reg.publish())
+
+    t = threading.Thread(target=publisher, daemon=True)
+    t.start()
+    try:
+        prompts = _prompts(3, cfg.vocab, seed=7)
+        out = _run_batch(eng, prompts)
+    finally:
+        stop.set()
+        t.join(timeout=10)
+    assert _run_batch(ctl, prompts) == out        # bit-identical anyway
+    assert len(published) > 2 and eng.metrics.artifact_swaps >= 1
+    # within any step, admit and decode saw the same single epoch
+    steps, cur = [], []
+    for kind, held, bound in probes:
+        assert held == bound                       # cfg matches the pin
+        if kind == "admit":
+            if cur:
+                steps.append(cur)
+            cur = [held]
+        else:
+            cur.append(held)
+    steps.append(cur)
+    for epochs in steps:
+        assert len(set(epochs)) == 1, steps
+    # epochs only ever move forward across steps
+    firsts = [e[0] for e in steps]
+    assert firsts == sorted(firsts)
+
+
+def test_speculative_lane_rebinds_on_swap():
+    """A spec-decoding paged engine swaps its verify lane too — and stays
+    bit-identical to the no-spec engine across the swap."""
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reg = ArtifactRegistry(TuningRecords(None), platform="core-i9")
+    eng = PagedServeEngine(cfg, params, slots=2, max_len=64, backend="jax",
+                           registry=reg, speculative=True, draft_len=2)
+    plain = PagedServeEngine(cfg, params, slots=2, max_len=64,
+                             backend="jax")
+    prompts = _prompts(2, cfg.vocab, seed=3)
+    out1 = _run_batch(eng, prompts, uid0=0)
+    old_verify = eng.spec._verify_j
+    reg.publish()
+    out2 = _run_batch(eng, prompts, uid0=10)
+    assert eng.metrics.artifact_swaps == 1
+    assert eng.spec._verify_j is not old_verify   # lane was rebuilt
+    assert eng.spec.cfg.artifacts.epoch == 1
+    ctl = _run_batch(plain, prompts, uid0=0)
+    assert out1 == ctl
+    assert {u - 10: o for u, o in out2.items()} == ctl
+
+
+# ---------------------------------------------------------------------------
+# BackgroundRetuner
+# ---------------------------------------------------------------------------
+
+
+def test_retuner_compiles_hot_shapes_then_cache_hits():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reg = ArtifactRegistry(TuningRecords(None), platform="core-i9")
+    eng = PagedServeEngine(cfg, params, slots=2, max_len=64, backend="jax",
+                           registry=reg)
+    _run_batch(eng, _prompts(2, cfg.vocab))
+    ret = BackgroundRetuner(eng, top_k=2, budget=6)
+    s1 = ret.run_once()
+    assert s1["fresh"] > 0 and s1["epoch"] == 1
+    assert len(reg.records) == s1["fresh"]
+    # same shape distribution again: everything cache-hits, NO new epoch
+    s2 = ret.run_once()
+    assert s2["fresh"] == 0 and s2["epoch"] is None
+    assert s2["cache_hits"] >= 1
+    assert reg.epoch == 1
+    assert ret.cycles == 2 and ret.published_epochs == [1]
+
+
+def test_retuner_decays_stats_each_cycle():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reg = ArtifactRegistry(TuningRecords(None), platform="core-i9")
+    eng = PagedServeEngine(cfg, params, slots=2, max_len=64, backend="jax",
+                           registry=reg)
+    eng.metrics.shapes.observe("attention", (32, 32), weight=8.0)
+    ret = BackgroundRetuner(eng, top_k=1, budget=4, decay=0.5)
+    ret.run_once()
+    assert eng.metrics.shapes.weight("attention", (32, 32)) == 4.0
+
+
+def test_retuner_requires_shared_records():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reg = ArtifactRegistry(TuningRecords(None), platform="core-i9")
+    eng = PagedServeEngine(cfg, params, slots=2, max_len=64, backend="jax",
+                           registry=reg)
+    from repro.compiler import CompilerSession
+
+    foreign = CompilerSession(target="core-i9", method="mcts",
+                              records=TuningRecords(None),
+                              shared_context=False)
+    with pytest.raises(AssertionError, match="registry"):
+        BackgroundRetuner(eng, session=foreign)
+
+
+def test_retuner_thread_start_stop():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reg = ArtifactRegistry(TuningRecords(None), platform="core-i9")
+    eng = PagedServeEngine(cfg, params, slots=2, max_len=64, backend="jax",
+                           registry=reg)
+    _run_batch(eng, _prompts(1, cfg.vocab))
+    ret = BackgroundRetuner(eng, top_k=1, budget=4)
+    ret.start(interval_s=0.02)
+    with pytest.raises(RuntimeError):
+        ret.start(interval_s=0.02)               # no double-start
+    deadline = threading.Event()
+    for _ in range(200):
+        if ret.cycles >= 2:
+            break
+        deadline.wait(0.05)
+    ret.stop()
+    assert ret.cycles >= 2
+    assert ret.published_epochs and ret.published_epochs[0] == 1
+    cycles_after = ret.cycles
+    deadline.wait(0.1)
+    assert ret.cycles == cycles_after            # really stopped

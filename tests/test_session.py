@@ -92,19 +92,21 @@ def test_records_corrupt_lines_quarantined(tmp_path):
 
 
 def test_corrupt_legacy_cache_quarantined_not_crash(tmp_path):
-    """Regression: KernelTuner used to crash with json.JSONDecodeError on a
-    corrupt/truncated tuning-cache file; the record store must
-    warn-and-quarantine instead."""
-    from repro.core.autotuner import KernelTuner
-
+    """Regression: a corrupt/truncated legacy JSON tuning cache used to
+    crash with json.JSONDecodeError at construction; the record store
+    must warn-and-quarantine instead, and a session over it proceeds."""
     cache = os.path.join(tmp_path, "cache.json")
     with open(cache, "w") as f:
         f.write('{"tpu-v5e:gemm[i=64,j=128,k=128]": {"bm": 64, "bn"')
     with pytest.warns(RuntimeWarning, match="quarantined"):
-        t = KernelTuner(budget=6, method="mcts", cache_path=cache)
+        records = TuningRecords(os.path.join(tmp_path, "c.jsonl"),
+                                legacy_json=cache)
     # the corrupt file was moved aside and tuning proceeds
     assert os.path.exists(cache + ".quarantined")
-    b = t.tune_gemm(64, 128, 128)
+    s = CompilerSession(target="tpu-v5e", method="mcts", budget_policy=6,
+                        records=records, shared_context=False)
+    (art,) = s.compile([gemm_task(64, 128, 128)])
+    b = art.blocks
     assert 64 % b.bm == 0 and 128 % b.bn == 0 and 128 % b.bk == 0
 
 
@@ -345,44 +347,52 @@ def test_session_records_winning_trace():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# deprecation aliases (registry binding is the one entry point)
 # ---------------------------------------------------------------------------
 
 
-def test_run_search_shim_identical_through_session():
-    from repro.core.search import run_search
+def test_one_shot_search_matches_session():
+    from repro.core.search import _one_shot_search
 
     w = gemm_task(64, 256, 256).workload
-    legacy = run_search(w, "core-i9", "llm-mcts", budget=16, seed=3)
+    one = _one_shot_search(w, "core-i9", "llm-mcts", budget=16, seed=3)
     session = CompilerSession(target="core-i9", method="llm-mcts",
                               shared_context=False)
     via = session.search(w, budget=16, seed=3)
-    assert legacy.best_speedup == via.best_speedup
-    assert legacy.samples == via.samples
-    assert legacy.best_schedule.key() == via.best_schedule.key()
-    assert legacy.curve.points == via.curve.points
-    assert legacy.oracle == via.oracle == "analytical"
+    assert one.best_speedup == via.best_speedup
+    assert one.samples == via.samples
+    assert one.best_schedule.key() == via.best_schedule.key()
+    assert one.curve.points == via.curve.points
+    assert one.oracle == via.oracle == "analytical"
 
 
-def test_kernel_tuner_shim_identical_through_session(tmp_path):
-    from repro.core.autotuner import KernelTuner
-
-    t = KernelTuner(budget=12,
-                    cache_path=os.path.join(tmp_path, "c.json"))
-    b = t.tune_gemm(64, 256, 256)
-    session = CompilerSession(
-        target="tpu-v5e",
-        budget_policy=BudgetPolicy(per_task=12, early_stop=False,
-                                   reallocate=False),
-        shared_context=False,
+def test_binding_aliases_warn_and_delegate_to_registry():
+    from repro.compiler import (
+        ArtifactRegistry,
+        artifacts_for_config,
+        bind_artifacts,
     )
-    (art,) = session.compile([gemm_task(64, 256, 256)])
-    assert (b.bm, b.bn, b.bk) == \
-        (art.blocks.bm, art.blocks.bn, art.blocks.bk)
-    # the shim's legacy JSON mirror stays readable by v0 consumers
-    legacy = json.load(open(t.cache_path))
-    (entry,) = legacy.values()
-    assert entry["bm"] == b.bm and entry["samples"] == art.record.samples
+    from repro.configs import get_config
+
+    cfg = get_config("tinyllama-1.1b")
+    with pytest.warns(DeprecationWarning, match="ArtifactRegistry"):
+        art = artifacts_for_config(cfg, tp=2, records=TuningRecords(None))
+    assert isinstance(art, ArtifactSet) and art.tp == 2
+    with pytest.warns(DeprecationWarning, match="ArtifactRegistry"):
+        bound, tp = bind_artifacts(cfg, tp=2)
+    assert tp == 2 and bound.artifacts is not None
+    with pytest.warns(DeprecationWarning, match="ArtifactRegistry"):
+        via_cfg = cfg.with_artifacts(art)
+    assert via_cfg.artifacts is art
+    # the registry entry point itself is warning-free
+    import warnings as _warnings
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        reg = ArtifactRegistry(TuningRecords(None))
+        bound2, tp2 = reg.bind(cfg, tp=2)
+    assert tp2 == 2 and bound2.artifacts.tp == 2
+    assert bound2.artifacts.epoch == reg.epoch
 
 
 # ---------------------------------------------------------------------------
@@ -428,7 +438,11 @@ def test_attention_block_uses_cfg_artifacts(tmp_path, monkeypatch):
     s = CompilerSession(target="tpu-v5e", budget_policy=10, records=path)
     (art,) = s.compile([attention_task(hq, 128, 128, cfg.hd,
                                        kv_heads=hkv)])
-    bound = cfg.with_artifacts(ArtifactSet(TuningRecords(path), tp=tp))
+    import dataclasses
+
+    bound = dataclasses.replace(
+        cfg, artifacts=ArtifactSet(TuningRecords(path), tp=tp)
+    )
     assert bound.artifacts is not None and cfg.artifacts is None
     assert bound == cfg  # artifacts are excluded from config identity
 
@@ -464,9 +478,10 @@ def test_serve_engine_binds_artifact_set():
     assert eng.cfg.artifacts.tp == 1
 
 
-def test_no_set_active_tp_call_sites_in_src():
-    """Acceptance: set_active_tp survives only as the deprecation shim in
-    models/layers.py — no call sites anywhere in src/."""
+def test_no_set_active_tp_anywhere_in_src():
+    """Acceptance: the set_active_tp module-global shim is GONE — not a
+    definition, not a call site, nowhere in src/ (binding travels inside
+    cfg.artifacts via ArtifactRegistry.bind)."""
     root = os.path.join(os.path.dirname(__file__), "..", "src")
     offenders = []
     for dirpath, _, files in os.walk(root):
@@ -474,10 +489,8 @@ def test_no_set_active_tp_call_sites_in_src():
             if not fn.endswith(".py"):
                 continue
             path = os.path.join(dirpath, fn)
-            text = open(path).read()
-            for i, line in enumerate(text.splitlines(), 1):
-                if re.search(r"set_active_tp\s*\(", line) \
-                        and "def set_active_tp" not in line:
+            for i, line in enumerate(open(path).read().splitlines(), 1):
+                if re.search(r"\b(set_active_tp|_ACTIVE_TP)\b", line):
                     offenders.append(f"{path}:{i}: {line.strip()}")
     assert not offenders, "\n".join(offenders)
 

@@ -400,28 +400,30 @@ def test_non_surrogate_paths_have_no_screen():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# retired legacy entry points
 # ---------------------------------------------------------------------------
 
-def test_run_search_warns_deprecation():
-    from repro.core.search import run_search
+def test_run_search_name_is_gone():
+    """run_search spent its one deprecation release as a shim and is now
+    deleted; the one-shot primitive lives at core.search._one_shot_search."""
+    import repro.core.search as search_mod
 
-    with pytest.warns(DeprecationWarning, match="run_search is deprecated"):
-        r = run_search("llama3_8b_attention", budget=4, seed=0,
-                       method="mcts")
-    assert r.best_speedup >= 1.0
-
-
-def test_kernel_tuner_warns_deprecation(tmp_path):
-    from repro.core.autotuner import KernelTuner
-
-    with pytest.warns(DeprecationWarning, match="KernelTuner is deprecated"):
-        KernelTuner(cache_path=str(tmp_path / "cache.json"))
+    assert not hasattr(search_mod, "run_search")
+    assert callable(search_mod._one_shot_search)
 
 
-def test_no_internal_deprecated_callers_in_src():
-    """run_search/KernelTuner survive only as shims: no call sites left
-    anywhere in src/ (kernels/ops.py now probes the record store)."""
+def test_kernel_tuner_name_is_gone():
+    """KernelTuner spent its one deprecation release as a shim and is now
+    deleted; core.autotuner keeps only the compat block/workload helpers."""
+    import repro.core.autotuner as autotuner_mod
+
+    assert not hasattr(autotuner_mod, "KernelTuner")
+    assert callable(autotuner_mod.attention_tuning_workload)
+
+
+def test_no_deprecated_entry_points_anywhere_in_src():
+    """run_search/KernelTuner are gone entirely: no definition, no call
+    site, no mention outside prose — anywhere in src/."""
     root = os.path.join(os.path.dirname(__file__), "..", "src")
     offenders = []
     for dirpath, _, files in os.walk(root):
@@ -431,9 +433,8 @@ def test_no_internal_deprecated_callers_in_src():
             path = os.path.join(dirpath, fn)
             for i, line in enumerate(open(path).read().splitlines(), 1):
                 stripped = line.split("#")[0]
-                if re.search(r"\b(?:run_search|KernelTuner)\s*\(", stripped) \
-                        and "def run_search" not in stripped \
-                        and "class KernelTuner" not in stripped \
-                        and "warnings.warn" not in stripped:
+                if re.search(r"\b(?:run_search|KernelTuner)\b", stripped) \
+                        and '"' not in stripped and "'" not in stripped \
+                        and "``" not in line:
                     offenders.append(f"{path}:{i}: {line.strip()}")
     assert not offenders, "\n".join(offenders)

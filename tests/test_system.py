@@ -3,7 +3,7 @@ import random
 
 import pytest
 
-from repro.core.search import run_search
+from repro.core.search import _one_shot_search
 from repro.core.workloads import PAPER_WORKLOADS, get_workload
 
 
@@ -21,7 +21,7 @@ def test_paper_workloads_present():
 
 def test_search_finds_real_speedups():
     """Every method must find >1x; llm-mcts must be sample-efficient."""
-    r = run_search("llama4_scout_mlp", "core-i9", "llm-mcts", budget=36,
+    r = _one_shot_search("llama4_scout_mlp", "core-i9", "llm-mcts", budget=36,
                    seed=0)
     assert r.best_speedup > 10.0
     assert r.samples <= 36
@@ -36,7 +36,7 @@ def test_reasoning_compiler_beats_baselines_at_low_budget():
     for wname in PAPER_WORKLOADS:
         def mean36(method):
             return sum(
-                run_search(wname, "core-i9", method, budget=36,
+                _one_shot_search(wname, "core-i9", method, budget=36,
                            seed=s).curve.at(36)
                 for s in range(3)
             ) / 3
@@ -48,7 +48,7 @@ def test_reasoning_compiler_beats_baselines_at_low_budget():
 
 def test_tuning_transfers_across_platforms():
     """A schedule tuned for one platform is valid (if not optimal) on all."""
-    r = run_search("flux_conv", "graviton2", "llm-mcts", budget=24, seed=0)
+    r = _one_shot_search("flux_conv", "graviton2", "llm-mcts", budget=24, seed=0)
     from repro.core.cost_model import HardwareOracle, get_platform
 
     for plat in ("core-i9", "xeon-e3", "tpu-v5e"):
@@ -58,9 +58,9 @@ def test_tuning_transfers_across_platforms():
 
 
 def test_deterministic_given_seed():
-    a = run_search("deepseek_r1_moe", "core-i9", "llm-mcts", budget=30,
+    a = _one_shot_search("deepseek_r1_moe", "core-i9", "llm-mcts", budget=30,
                    seed=5)
-    b = run_search("deepseek_r1_moe", "core-i9", "llm-mcts", budget=30,
+    b = _one_shot_search("deepseek_r1_moe", "core-i9", "llm-mcts", budget=30,
                    seed=5)
     assert a.curve.points == b.curve.points
     assert a.best_speedup == b.best_speedup
